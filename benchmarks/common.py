@@ -1,0 +1,55 @@
+"""Shared benchmark harness: timing, result records, CSV/JSON output."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List
+
+import jax
+
+__all__ = ["timeit", "Bench", "OUT_DIR"]
+
+OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments/bench")
+
+
+def timeit(fn: Callable, *args, repeats: int = 3, warmup: int = 1,
+           **kwargs) -> Dict[str, float]:
+    """Median wall time of ``fn(*args)`` with jit warmup; blocks on results."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kwargs))
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kwargs))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return {"median_s": times[len(times) // 2], "min_s": times[0],
+            "max_s": times[-1], "repeats": repeats}
+
+
+class Bench:
+    """Collects rows, prints a table, persists JSON."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.rows: List[dict] = []
+
+    def add(self, **row):
+        self.rows.append(row)
+        print("  " + " ".join(f"{k}={_fmt(v)}" for k, v in row.items()),
+              flush=True)
+
+    def save(self) -> str:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        path = os.path.join(OUT_DIR, f"{self.name}.json")
+        with open(path, "w") as f:
+            json.dump({"name": self.name, "rows": self.rows}, f, indent=1)
+        return path
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)

@@ -1,0 +1,46 @@
+"""Fig 5b — effect of subspace count M and codebook size K on PQDTW runtime.
+
+Theory (paper §3.2): encoding is O(K * D^2 / M) — runtime rises linearly
+with K and falls with M.  We sweep both around the defaults and also report
+the symmetric-distance phase (O(M) per pair) to show the encode/search
+trade-off.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pq import PQConfig, cdist_sym, encode, fit
+from repro.data.timeseries import random_walks
+
+from .common import Bench, timeit
+
+
+def run(quick: bool = True) -> Bench:
+    b = Bench("fig5b_params")
+    D = 128 if quick else 512
+    N = 60 if quick else 200
+    X = jnp.asarray(random_walks(N, D, seed=1))
+    key = jax.random.PRNGKey(0)
+
+    subspaces = (2, 4, 8) if quick else (2, 4, 8, 16)
+    codebooks = (16, 32, 64) if quick else (64, 128, 256)
+
+    for M in subspaces:
+        for K in codebooks:
+            cfg = PQConfig(n_sub=M, codebook_size=min(K, N),
+                           use_prealign=False, kmeans_iters=3, dba_iters=1)
+            cb = fit(key, X, cfg)
+            enc = timeit(lambda: encode(X, cb, cfg), repeats=2)
+            codes = encode(X, cb, cfg)
+            sym = timeit(lambda: cdist_sym(codes, codes, cb.lut), repeats=3)
+            b.add(n_sub=M, codebook=K,
+                  encode_s=enc["median_s"], sym_cdist_s=sym["median_s"],
+                  encode_per_series_ms=1e3 * enc["median_s"] / N)
+    b.save()
+    return b
+
+
+if __name__ == "__main__":
+    run(quick=False)

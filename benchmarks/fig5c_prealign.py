@@ -1,0 +1,56 @@
+"""Fig 5c — cost of the MODWT pre-alignment step.
+
+The paper finds pre-alignment has a minor effect on runtime, driven mainly
+by the wavelet decomposition level; tail length is immaterial.  We sweep
+J (level) and t (tail fraction) and report the encode-path overhead vs the
+fixed-split baseline.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.modwt import prealign, fixed_segments
+from repro.core.pq import PQConfig, encode, fit
+from repro.data.timeseries import trace_like
+
+from .common import Bench, timeit
+
+
+def run(quick: bool = True) -> Bench:
+    b = Bench("fig5c_prealign")
+    n = 30 if quick else 100
+    X, _ = trace_like(n, length=128 if quick else 256, seed=0)
+    X = jnp.asarray(X)
+    D = X.shape[1]
+    M = 4
+
+    base = timeit(lambda: fixed_segments(X, M), repeats=3)
+    b.add(mode="fixed", level=0, tail_frac=0.0,
+          segment_s=base["median_s"], overhead=1.0)
+
+    for J in ((1, 2, 3) if quick else (1, 2, 3, 4, 5)):
+        for tail_frac in (0.1, 0.2):
+            tail = max(1, int(round(tail_frac * (D // M))))
+            t = timeit(lambda: prealign(X, M, J, tail), repeats=3)
+            b.add(mode="modwt", level=J, tail_frac=tail_frac,
+                  segment_s=t["median_s"],
+                  overhead=t["median_s"] / max(base["median_s"], 1e-9))
+
+    # end-to-end: encode with vs without pre-alignment
+    key = jax.random.PRNGKey(0)
+    for pre in (False, True):
+        cfg = PQConfig(n_sub=M, codebook_size=min(32, X.shape[0]),
+                       use_prealign=pre, kmeans_iters=3, dba_iters=1)
+        cb = fit(key, X, cfg)
+        t = timeit(lambda: encode(X, cb, cfg), repeats=2)
+        b.add(mode=f"encode_prealign={pre}", level=cfg.wavelet_level,
+              tail_frac=cfg.tail_frac, segment_s=t["median_s"],
+              overhead=0.0)
+    b.save()
+    return b
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,46 @@
+"""IVF-PQDTW (paper §4.1's million-scale pointer): recall@1 vs probe count
+and the candidate-evaluation reduction versus exhaustive PQDTW."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ivf import build_index, search_batch
+from repro.core.pq import PQConfig, cdist_asym
+from repro.data.timeseries import random_walks
+
+from .common import Bench, timeit
+
+
+def run(quick: bool = True) -> Bench:
+    b = Bench("ivf_scaling")
+    N, D, n_lists = (400, 96, 16) if quick else (4000, 256, 64)
+    Q = jnp.asarray(random_walks(16, D, seed=7))
+    X = jnp.asarray(random_walks(N, D, seed=1))
+    cfg = PQConfig(n_sub=4, codebook_size=32, use_prealign=False,
+                   kmeans_iters=3, dba_iters=1)
+    index = build_index(jax.random.PRNGKey(0), X, cfg, n_lists=n_lists,
+                        coarse_iters=4)
+
+    d_ex = np.asarray(cdist_asym(Q, index.codes, index.cb, cfg))
+    truth = np.asarray(index.ids)[d_ex.argmin(1)]
+    t_ex = timeit(lambda: cdist_asym(Q, index.codes, index.cb, cfg),
+                  repeats=2)
+
+    for n_probe in (1, 2, 4, n_lists // 2, n_lists):
+        t = timeit(lambda: search_batch(index, Q, cfg, n_probe=n_probe,
+                                        topk=1), repeats=2)
+        _, ids = search_batch(index, Q, cfg, n_probe=n_probe, topk=1)
+        recall = float((np.asarray(ids)[:, 0] == truth).mean())
+        cand_frac = min(1.0, n_probe * index.max_list / N)
+        b.add(n_probe=n_probe, recall_at_1=recall,
+              candidates_frac=round(cand_frac, 3),
+              search_s=t["median_s"], exhaustive_s=t_ex["median_s"])
+    b.save()
+    return b
+
+
+if __name__ == "__main__":
+    run(quick=False)

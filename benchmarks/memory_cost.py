@@ -1,0 +1,54 @@
+"""§3.4 memory cost — compression factor of PQ codes vs raw series, plus the
+auxiliary structures (codebook, LUT, envelopes), including the paper's own
+worked example (D=140, K=256, M=7 -> 80x, aux ~2.3MB).  Extended with the
+PQ-KV serving numbers (the paper's memory argument applied to the KV cache).
+"""
+
+from __future__ import annotations
+
+from repro.core.pq import PQConfig, memory_cost
+from repro.configs.registry import get_config
+from repro.serve.pqkv import PQKVConfig, pqkv_memory
+
+from .common import Bench
+
+
+def run(quick: bool = True) -> Bench:
+    del quick
+    b = Bench("memory_cost")
+
+    # the paper's worked example: 140-long series, M=7, K=256 -> 80x
+    cfg = PQConfig(n_sub=7, codebook_size=256, use_prealign=False)
+    m = memory_cost(cfg, D=140, n_series=10_000)
+    b.add(case="paper_example_D140_M7_K256",
+          compression=m["compression"],
+          aux_mb=m["aux_bytes"] / 1e6,
+          code_bytes_per_series=m["code_bytes"] / 10_000)
+
+    for D, M, K in ((256, 8, 256), (512, 8, 256), (1024, 16, 256),
+                    (4096, 32, 256)):
+        cfg = PQConfig(n_sub=M, codebook_size=K, use_prealign=False)
+        m = memory_cost(cfg, D=D, n_series=100_000)
+        b.add(case=f"D{D}_M{M}_K{K}", compression=m["compression"],
+              aux_mb=m["aux_bytes"] / 1e6,
+              code_bytes_per_series=m["code_bytes"] / 100_000)
+
+    # PQ-KV: the same accounting on LM KV caches (full configs, pure math)
+    for arch, B, S in (("qwen2-72b", 128, 32768),
+                       ("gemma2-27b", 128, 32768),
+                       ("internlm2-1.8b", 128, 32768)):
+        mc = get_config(arch)
+        for qv in (False, True):
+            pq = PQKVConfig(n_sub=8, codebook_size=256, recent_window=128,
+                            quantize_v=qv)
+            m = pqkv_memory(mc, pq, batch=B, seq_len=S)
+            b.add(case=f"pqkv_{arch}{'_qv' if qv else ''}",
+                  compression=m["compression"],
+                  exact_gb=m["exact_bytes"] / 1e9,
+                  pq_gb=m["pq_bytes"] / 1e9)
+    b.save()
+    return b
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,85 @@
+"""PQ-KV serving quality/memory sweep (beyond-paper application).
+
+For a reduced dense config: populate an exact cache, compress with PQ at
+several (M, K, W) points, and measure (a) the compression ratio, (b) the
+greedy-decode agreement with exact attention, (c) logit correlation — the
+serving analogue of the paper's accuracy-vs-compression trade-off.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_reduced
+from repro.models.lm import init_params
+from repro.serve.cache import init_cache
+from repro.serve.decode import serve_step
+from repro.serve.pqkv import (PQKVConfig, compress_cache, pq_serve_step,
+                              pqkv_memory)
+
+from .common import Bench
+
+
+def run(quick: bool = True) -> Bench:
+    b = Bench("pqkv_quality")
+    cfg = get_reduced("qwen2-72b")
+    B, prompt, gen = (2, 24, 6) if quick else (4, 96, 24)
+    Smax = prompt + gen
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    toks = jax.random.randint(key, (B, Smax + 1), 0, cfg.vocab_size)
+
+    cache = init_cache(cfg, B, Smax)
+    step = jax.jit(lambda p, c, t, pos: serve_step(p, cfg, c, t, pos))
+    logits = None
+    for p in range(prompt):
+        logits, cache = step(params, cache, toks[:, p:p + 1], jnp.int32(p))
+
+    # exact continuation
+    ref_cache = jax.tree.map(jnp.array, cache)
+    ref_tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    ref_out = [np.asarray(ref_tok)]
+    ref_logits = []
+    for g in range(gen - 1):
+        lg, ref_cache = step(params, ref_cache, ref_tok,
+                             jnp.int32(prompt + g))
+        ref_logits.append(np.asarray(lg, np.float32))
+        ref_tok = jnp.argmax(lg[:, -1], -1)[:, None].astype(jnp.int32)
+        ref_out.append(np.asarray(ref_tok))
+    ref_out = np.concatenate(ref_out, 1)
+
+    sweeps = ((4, 8, 8, False), (4, 16, 8, False), (8, 16, 8, False),
+              (4, 16, 4, True))
+    for M, K, W, qv in sweeps:
+        pqc = PQKVConfig(n_sub=M, codebook_size=K, recent_window=W,
+                         quantize_v=qv, kmeans_iters=6)
+        pq_cache = compress_cache(
+            {"k": jnp.array(cache["k"]), "v": jnp.array(cache["v"])},
+            cfg, pqc, pos=prompt)
+        pq_step = jax.jit(
+            lambda p, c, t, pos: pq_serve_step(p, cfg, c, t, pos, pqc=pqc))
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        outs = [np.asarray(tok)]
+        corrs = []
+        for g in range(gen - 1):
+            lg, pq_cache = pq_step(params, pq_cache, tok,
+                                   jnp.int32(prompt + g))
+            a = np.asarray(lg, np.float32).ravel()
+            r = ref_logits[g].ravel()
+            corrs.append(np.corrcoef(a, r)[0, 1])
+            tok = jnp.argmax(lg[:, -1], -1)[:, None].astype(jnp.int32)
+            outs.append(np.asarray(tok))
+        outs = np.concatenate(outs, 1)
+        mem = pqkv_memory(cfg, pqc, B, Smax)
+        b.add(n_sub=M, codebook=K, window=W, quantize_v=qv,
+              compression=round(mem["compression"], 3),
+              greedy_agreement=float((outs == ref_out).mean()),
+              logit_corr=float(np.mean(corrs)))
+    b.save()
+    return b
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,82 @@
+"""§Roofline — aggregate the dry-run records into the per-cell roofline
+table (compute / memory / collective terms, dominant bound, useful-flop
+ratio) and emit the markdown that EXPERIMENTS.md embeds.
+
+Reads experiments/dryrun/*.json produced by ``repro.launch.dryrun``.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from .common import Bench, OUT_DIR
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_OUT", "experiments/dryrun")
+
+_ARCH_ORDER = ("qwen2-72b", "gemma2-27b", "minitron-8b", "internlm2-1.8b",
+               "seamless-m4t-large-v2", "qwen3-moe-30b-a3b",
+               "deepseek-moe-16b", "zamba2-2.7b", "qwen2-vl-72b",
+               "mamba2-780m")
+_SHAPE_ORDER = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def load_records(mesh: str = "single", tag: str = "") -> List[dict]:
+    recs = []
+    for path in glob.glob(os.path.join(DRYRUN_DIR, "*.json")):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("mesh") == mesh and r.get("tag", "") == tag and r.get("ok"):
+            recs.append(r)
+    recs.sort(key=lambda r: (_ARCH_ORDER.index(r["arch"]),
+                             _SHAPE_ORDER.index(r["shape"])))
+    return recs
+
+
+def markdown_table(recs: List[dict]) -> str:
+    lines = [
+        "| arch | shape | peak GB/dev | compute s | memory s | collective s"
+        " | bound | useful/HLO | roofline frac |",
+        "|---|---|---:|---:|---:|---:|---|---:|---:|",
+    ]
+    for r in recs:
+        ro, m = r["roofline"], r["memory"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {m['peak_bytes']/1e9:.2f} "
+            f"| {ro['compute_s']:.4g} | {ro['memory_s']:.4g} "
+            f"| {ro['collective_s']:.4g} | {ro['bound']} "
+            f"| {ro['useful_ratio']:.3f} | {ro['roofline_frac']:.3f} |")
+    return "\n".join(lines)
+
+
+def run(quick: bool = True) -> Bench:
+    del quick
+    b = Bench("roofline")
+    for mesh in ("single", "multi"):
+        recs = load_records(mesh)
+        for r in recs:
+            ro = r["roofline"]
+            b.add(mesh=mesh, arch=r["arch"], shape=r["shape"],
+                  bound=ro["bound"],
+                  compute_s=round(ro["compute_s"], 5),
+                  memory_s=round(ro["memory_s"], 5),
+                  collective_s=round(ro["collective_s"], 5),
+                  peak_gb=round(r["memory"]["peak_bytes"] / 1e9, 2),
+                  useful_ratio=round(ro["useful_ratio"], 4),
+                  roofline_frac=round(ro["roofline_frac"], 4))
+    b.save()
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, "roofline_table.md"), "w") as f:
+        for mesh in ("single", "multi"):
+            recs = load_records(mesh)
+            if recs:
+                f.write(f"### {mesh}-pod mesh\n\n")
+                f.write(markdown_table(recs))
+                f.write("\n\n")
+    return b
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Benchmark entry point: one module per paper table/figure + the roofline
+aggregation.  ``python -m benchmarks.run [--full] [--only NAME]``."""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from . import (fig5a_scaling, fig5b_params, fig5c_prealign, ivf_scaling,
+               memory_cost, pqkv_bench, roofline, table1_accuracy)
+
+SUITES = {
+    "fig5a": fig5a_scaling.run,
+    "fig5b": fig5b_params.run,
+    "fig5c": fig5c_prealign.run,
+    "table1": table1_accuracy.run,
+    "memory": memory_cost.run,
+    "ivf": ivf_scaling.run,
+    "pqkv": pqkv_bench.run,
+    "roofline": roofline.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (slow on CPU)")
+    ap.add_argument("--only", choices=tuple(SUITES), default=None)
+    args = ap.parse_args()
+
+    names = (args.only,) if args.only else tuple(SUITES)
+    for name in names:
+        print(f"== {name} ==", flush=True)
+        t0 = time.time()
+        SUITES[name](quick=not args.full)
+        print(f"== {name} done in {time.time() - t0:.1f}s ==\n", flush=True)
+
+
+if __name__ == "__main__":
+    main()

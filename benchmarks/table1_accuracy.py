@@ -1,0 +1,155 @@
+"""Table 1 — PQDTW vs baseline distance measures: 1NN classification error,
+hierarchical-clustering Rand index, and runtime speedups.
+
+Datasets are class-structured synthetic surrogates for the UCR archive
+(offline container; DESIGN.md §7): CBF, Trace-like, GunPoint-like.  Measures
+mirror the paper: ED, DTW (full), cDTW5/cDTW10, SBD, SAX, PQ_ED, PQDTW
+(symmetric + the §4.2 LB-refined symmetric for clustering).  For each
+baseline we report the error/RI difference vs PQDTW and the speedup of the
+PQDTW distance phase — the same two columns as the paper's Table 1.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.baselines import (cdtw_cdist, ed_cdist, sax_mindist_cdist,
+                                  sax_transform, sbd_cdist)
+from repro.core.cluster import hierarchical_labels
+from repro.core.dtw import dtw_cdist
+from repro.core.metrics import error_rate, rand_index
+from repro.core.pq import (PQConfig, cdist_sym, cdist_sym_refined, encode,
+                           fit, segment)
+from repro.data.timeseries import make_dataset
+
+from .common import Bench
+
+
+def _measure(fn) -> Tuple[np.ndarray, float]:
+    t0 = time.perf_counter()
+    d = np.asarray(jax.block_until_ready(fn()))
+    return d, time.perf_counter() - t0
+
+
+def run(quick: bool = True) -> Bench:
+    b = Bench("table1_accuracy")
+    n_per_class = 12 if quick else 40
+    length = 96 if quick else 192
+    datasets = ("cbf", "trace", "gunpoint")
+    seeds = (0, 1) if quick else (0, 1, 2, 3, 4)
+
+    agg: Dict[str, list] = {}
+    for ds in datasets:
+        for seed in seeds:
+            Xtr, ytr = make_dataset(ds, n_per_class, length, seed=seed)
+            Xte, yte = make_dataset(ds, n_per_class, length, seed=seed + 100)
+            Xtr_j, Xte_j = jnp.asarray(Xtr), jnp.asarray(Xte)
+            D = Xtr.shape[1]
+            k_classes = len(np.unique(ytr))
+
+            pq_cfg = PQConfig(n_sub=5, codebook_size=min(48, Xtr.shape[0]),
+                              window_frac=0.1, use_prealign=True,
+                              kmeans_iters=4, dba_iters=1)
+            key = jax.random.PRNGKey(seed)
+            t0 = time.perf_counter()
+            cb = fit(key, Xtr_j, pq_cfg)
+            tr_codes = encode(Xtr_j, cb, pq_cfg)
+            jax.block_until_ready(tr_codes)
+            pq_train_s = time.perf_counter() - t0
+
+            # PQDTW symmetric distances (1NN + clustering)
+            def pq_test():
+                q = encode(Xte_j, cb, pq_cfg)
+                return cdist_sym(q, tr_codes, cb.lut)
+            d_pq, t_pq = _measure(pq_test)
+
+            te_codes = encode(Xte_j, cb, pq_cfg)
+            te_segs = segment(Xte_j, pq_cfg)
+            d_pq_ref, _ = _measure(
+                lambda: cdist_sym_refined(te_codes, te_segs, te_codes,
+                                          te_segs, cb))
+
+            w5 = max(1, int(0.05 * D))
+            w10 = max(1, int(0.10 * D))
+            sax_l = max(2, int(0.2 * length))
+
+            def sax_fn():
+                Sa = sax_transform(Xte, sax_l)
+                Sb = sax_transform(Xtr, sax_l)
+                return sax_mindist_cdist(Sa, Sb, length)
+
+            pq_ed_cfg = PQConfig(n_sub=5, codebook_size=min(48, Xtr.shape[0]),
+                                 metric="euclidean", use_prealign=False,
+                                 kmeans_iters=6)
+            cb_ed = fit(key, Xtr_j, pq_ed_cfg)
+            tr_codes_ed = encode(Xtr_j, cb_ed, pq_ed_cfg)
+
+            def pq_ed_fn():
+                q = encode(Xte_j, cb_ed, pq_ed_cfg)
+                return cdist_sym(q, tr_codes_ed, cb_ed.lut)
+
+            baselines = {
+                "ED": lambda: ed_cdist(Xte_j, Xtr_j),
+                "DTW": lambda: dtw_cdist(Xte_j, Xtr_j, None),
+                "cDTW5": lambda: cdtw_cdist(Xte_j, Xtr_j, w5),
+                "cDTW10": lambda: cdtw_cdist(Xte_j, Xtr_j, w10),
+                "SBD": lambda: sbd_cdist(Xte_j, Xtr_j),
+                "SAX": sax_fn,
+                "PQ_ED": pq_ed_fn,
+            }
+
+            err_pq = error_rate(yte, ytr[np.argmin(d_pq, axis=1)])
+            lab_pq = hierarchical_labels(np.asarray(d_pq_ref), k_classes)
+            ri_pq = rand_index(yte, lab_pq)
+
+            for name, fn in baselines.items():
+                d, t = _measure(fn)
+                err = error_rate(yte, ytr[np.argmin(d, axis=1)])
+                # clustering needs the test-test matrix
+                if name == "SAX":
+                    Sa = sax_transform(Xte, sax_l)
+                    d_tt = sax_mindist_cdist(Sa, Sa, length)
+                elif name == "PQ_ED":
+                    q = encode(Xte_j, cb_ed, pq_ed_cfg)
+                    d_tt = np.asarray(cdist_sym(q, q, cb_ed.lut))
+                elif name == "DTW":
+                    d_tt = np.asarray(dtw_cdist(Xte_j, Xte_j, None))
+                elif name == "cDTW5":
+                    d_tt = np.asarray(cdtw_cdist(Xte_j, Xte_j, w5))
+                elif name == "cDTW10":
+                    d_tt = np.asarray(cdtw_cdist(Xte_j, Xte_j, w10))
+                elif name == "SBD":
+                    d_tt = np.asarray(sbd_cdist(Xte_j, Xte_j))
+                else:
+                    d_tt = np.asarray(ed_cdist(Xte_j, Xte_j))
+                ri = rand_index(yte, hierarchical_labels(d_tt, k_classes))
+                agg.setdefault(name, []).append(
+                    (err - err_pq, ri - ri_pq, t / max(t_pq, 1e-9),
+                     err, ri))
+
+            agg.setdefault("PQDTW", []).append(
+                (0.0, 0.0, 1.0, err_pq, ri_pq))
+            agg.setdefault("_pq_train_s", []).append(
+                (pq_train_s, 0, 0, 0, 0))
+
+    for name in ("PQDTW", "ED", "DTW", "cDTW5", "cDTW10", "SBD", "SAX",
+                 "PQ_ED"):
+        vals = np.array(agg[name])
+        b.add(measure=name,
+              mean_err_diff=float(np.mean(vals[:, 0])),
+              std_err_diff=float(np.std(vals[:, 0])),
+              mean_ri_diff=float(np.mean(vals[:, 1])),
+              speedup_vs_pqdtw=float(np.mean(vals[:, 2])),
+              mean_err=float(np.mean(vals[:, 3])),
+              mean_ri=float(np.mean(vals[:, 4])))
+    b.save()
+    return b
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,38 @@
+"""PQDTW core — the paper's contribution as a composable JAX library.
+
+Public API:
+    dtw         — wavefront (banded) DTW primitives
+    lb          — Keogh envelopes + lower bounds
+    modwt       — MODWT pre-alignment (§3.5)
+    dba/kmeans  — DBA barycenters and DBA k-means codebook learning
+    pq          — PQConfig / fit / encode / symmetric & asymmetric distances
+    knn         — 1-NN with PQ approximates + exact NN-DTW
+    cluster     — agglomerative hierarchical clustering
+    baselines   — ED / cDTW / SBD / SAX comparators
+"""
+
+from .pq import (PQConfig, PQCodebook, fit, encode, encode_with_stats,
+                 cdist_sym, cdist_asym, cdist_sym_refined, segment,
+                 memory_cost)
+from .dtw import dtw, dtw_pair, dtw_batch, dtw_cdist
+from .lb import keogh_envelope, lb_keogh, lb_kim, lb_cascade
+from .modwt import prealign, fixed_segments, modwt_scale
+from .dba import dba, dba_update, alignment_path
+from .kmeans import dba_kmeans, euclidean_kmeans
+from .knn import (knn_classify_sym, knn_classify_asym, nn_dtw_exact,
+                  nn_dtw_pruned)
+from .cluster import linkage, cut_k, hierarchical_labels
+from .metrics import rand_index, adjusted_rand_index, error_rate
+
+__all__ = [
+    "PQConfig", "PQCodebook", "fit", "encode", "encode_with_stats",
+    "cdist_sym", "cdist_asym", "cdist_sym_refined", "segment", "memory_cost",
+    "dtw", "dtw_pair", "dtw_batch", "dtw_cdist",
+    "keogh_envelope", "lb_keogh", "lb_kim", "lb_cascade",
+    "prealign", "fixed_segments", "modwt_scale",
+    "dba", "dba_update", "alignment_path",
+    "dba_kmeans", "euclidean_kmeans",
+    "knn_classify_sym", "knn_classify_asym", "nn_dtw_exact", "nn_dtw_pruned",
+    "linkage", "cut_k", "hierarchical_labels",
+    "rand_index", "adjusted_rand_index", "error_rate",
+]

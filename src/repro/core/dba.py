@@ -1,0 +1,101 @@
+"""DTW Barycenter Averaging (Petitjean et al.) in shape-static JAX.
+
+DBA alternates: (1) align every member series to the current barycenter with
+DTW, (2) replace each barycenter point by the mean of all member points
+aligned to it.  The alignment path is recovered by backtracking the DP table
+produced by :func:`repro.core.dtw.dtw_full_table` (diagonal layout).
+
+Backtracking is inherently sequential, but the path has at most ``2L - 1``
+cells, so a fixed-length ``lax.scan`` (carrying ``(i, j, done)``) makes it
+shape-static and vmappable over a batch of series.  This is a training-time
+cost only — it never sits on the query path.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .dtw import dtw_full_table
+
+__all__ = ["alignment_path", "dba_update", "dba"]
+
+_INF = jnp.float32(jnp.inf)
+
+
+def alignment_path(c: jnp.ndarray, x: jnp.ndarray,
+                   window: Optional[int] = None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Optimal-path cells aligning barycenter ``c`` (index i) to series ``x``
+    (index j).  Returns ``(i_cells, j_cells, active)`` each ``(2L-1,)``;
+    inactive tail entries repeat (0, 0) with ``active=False``."""
+    L = c.shape[0]
+    table = dtw_full_table(c, x, window)  # table[i+j, i] = dtw[i, j]
+
+    def value(i, j):
+        ok = (i >= 0) & (j >= 0)
+        d = jnp.clip(i + j, 0, 2 * L - 2)
+        ii = jnp.clip(i, 0, L - 1)
+        return jnp.where(ok, table[d, ii], _INF)
+
+    def step(carry, _):
+        i, j, done = carry
+        emit = (i, j, jnp.logical_not(done))
+        v_diag = value(i - 1, j - 1)
+        v_left = value(i, j - 1)
+        v_up = value(i - 1, j)
+        best = jnp.argmin(jnp.stack([v_diag, v_left, v_up]))
+        ni = jnp.where(best != 1, i - 1, i)
+        nj = jnp.where(best != 2, j - 1, j)
+        at_origin = (i == 0) & (j == 0)
+        ndone = done | at_origin
+        ni = jnp.where(ndone, 0, ni)
+        nj = jnp.where(ndone, 0, nj)
+        return (ni, nj, ndone), emit
+
+    init = (jnp.int32(L - 1), jnp.int32(L - 1), jnp.bool_(False))
+    _, (i_cells, j_cells, active) = jax.lax.scan(step, init, None, length=2 * L - 1)
+    return i_cells, j_cells, active
+
+
+def _contributions(c: jnp.ndarray, x: jnp.ndarray, weight: jnp.ndarray,
+                   window: Optional[int]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-series DBA accumulators: ``assoc[i] = sum of x[j] aligned to i``,
+    ``count[i]`` likewise, both scaled by ``weight``."""
+    L = c.shape[0]
+    i_cells, j_cells, active = alignment_path(c, x, window)
+    w = active.astype(jnp.float32) * weight
+    assoc = jnp.zeros((L,), jnp.float32).at[i_cells].add(x[j_cells] * w)
+    count = jnp.zeros((L,), jnp.float32).at[i_cells].add(w)
+    return assoc, count
+
+
+@functools.partial(jax.jit, static_argnames=("window",))
+def dba_update(c: jnp.ndarray, X: jnp.ndarray,
+               weights: Optional[jnp.ndarray] = None,
+               window: Optional[int] = None) -> jnp.ndarray:
+    """One DBA iteration: re-estimate barycenter ``c (L,)`` from ``X (N, L)``.
+
+    ``weights (N,)`` lets k-means pass soft/masked memberships; points with a
+    zero total count keep their previous value.
+    """
+    X = jnp.asarray(X, jnp.float32)
+    if weights is None:
+        weights = jnp.ones((X.shape[0],), jnp.float32)
+    assoc, count = jax.vmap(lambda x, w: _contributions(c, x, w, window))(X, weights)
+    assoc = assoc.sum(0)
+    count = count.sum(0)
+    return jnp.where(count > 0, assoc / jnp.maximum(count, 1e-9), c)
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "window"))
+def dba(c0: jnp.ndarray, X: jnp.ndarray, iters: int = 5,
+        window: Optional[int] = None) -> jnp.ndarray:
+    """Run ``iters`` DBA iterations starting from ``c0``."""
+    def body(c, _):
+        return dba_update(c, X, None, window), None
+    c, _ = jax.lax.scan(body, jnp.asarray(c0, jnp.float32), None, length=iters)
+    return c

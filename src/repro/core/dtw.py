@@ -1,0 +1,144 @@
+"""Dynamic Time Warping in JAX — anti-diagonal wavefront formulation.
+
+The classic DP recurrence
+
+    dtw[i, j] = (a_i - b_j)^2 + min(dtw[i-1, j-1], dtw[i, j-1], dtw[i-1, j])
+
+has a row-wise prefix dependency, which serializes on vector hardware.  We
+instead sweep the DP table anti-diagonal by anti-diagonal: every cell on
+diagonal ``d = i + j`` depends only on diagonals ``d-1`` and ``d-2``, so each
+diagonal is one vector operation (VPU lanes = cells) and a length-``2L-1``
+``lax.scan`` carries two diagonal registers.  A Sakoe-Chiba band ``|i-j| <= w``
+is a static mask, keeping every shape fixed.
+
+All distances here are *squared* DTW costs (the paper aggregates squared
+subspace distances); take ``jnp.sqrt`` at the end if a metric value is needed.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dtw",
+    "dtw_pair",
+    "dtw_batch",
+    "dtw_cdist",
+    "dtw_full_table",
+    "euclidean_sq",
+]
+
+_INF = jnp.float32(jnp.inf)
+
+
+def _diag_sweep(a: jnp.ndarray, b: jnp.ndarray, window: Optional[int],
+                return_table: bool):
+    """Shared wavefront sweep.  ``a``/``b`` are rank-1, equal length L.
+
+    Returns the final squared DTW cost, and (optionally) the full stack of
+    diagonals ``(2L-1, L)`` where ``table[d, i] == dtw[i, d-i]`` — used by the
+    DBA backtracking pass.
+    """
+    L = a.shape[0]
+    w = L if window is None else int(window)
+    idx = jnp.arange(L)
+
+    # b gathered along a diagonal: cell (i, d-i) needs b[d - i].
+    # Pad b so that out-of-range gathers read +inf-cost positions.
+    b_pad = jnp.concatenate([b, jnp.zeros((L,), b.dtype)])
+
+    def step(carry, d):
+        prev1, prev2 = carry  # diagonals d-1 and d-2, indexed by i
+        j = d - idx
+        valid = (j >= 0) & (j < L) & (jnp.abs(idx - j) <= w)
+        cost = (a - b_pad[jnp.clip(j, 0, 2 * L - 1)]) ** 2
+
+        # Predecessors (indexed by i on their own diagonals):
+        #   dtw[i-1, j-1] -> prev2 shifted down by one in i
+        #   dtw[i,   j-1] -> prev1 at i
+        #   dtw[i-1, j  ] -> prev1 shifted down by one in i
+        shift1 = jnp.concatenate([jnp.full((1,), _INF), prev1[:-1]])
+        shift2 = jnp.concatenate([jnp.full((1,), _INF), prev2[:-1]])
+        best_prev = jnp.minimum(jnp.minimum(shift2, prev1), shift1)
+        # Base case: cell (0, 0) has no predecessor.
+        best_prev = jnp.where((idx == 0) & (d == 0), 0.0, best_prev)
+        diag = jnp.where(valid, cost + best_prev, _INF)
+        out = diag if return_table else None
+        return (diag, prev1), out
+
+    init = (jnp.full((L,), _INF), jnp.full((L,), _INF))
+    (last, _), table = jax.lax.scan(step, init, jnp.arange(2 * L - 1))
+    final = last[L - 1]
+    return final, table
+
+
+def dtw_pair(a: jnp.ndarray, b: jnp.ndarray,
+             window: Optional[int] = None) -> jnp.ndarray:
+    """Squared DTW cost between two equal-length 1-D series."""
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    final, _ = _diag_sweep(a, b, window, return_table=False)
+    return final
+
+
+# Public alias used across the library.
+dtw = dtw_pair
+
+
+def dtw_full_table(a: jnp.ndarray, b: jnp.ndarray,
+                   window: Optional[int] = None) -> jnp.ndarray:
+    """Full DP table in diagonal layout: ``table[i + j, i] == dtw[i, j]``.
+
+    Used by DBA to backtrack the optimal alignment path.
+    """
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    _, table = _diag_sweep(a, b, window, return_table=True)
+    return table
+
+
+@functools.partial(jax.jit, static_argnames=("window",))
+def dtw_batch(A: jnp.ndarray, B: jnp.ndarray,
+              window: Optional[int] = None) -> jnp.ndarray:
+    """Pairwise squared DTW over zipped batches: ``A (N, L)``, ``B (N, L)``."""
+    return jax.vmap(lambda a, b: dtw_pair(a, b, window))(A, B)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block"))
+def dtw_cdist(A: jnp.ndarray, B: jnp.ndarray,
+              window: Optional[int] = None, block: int = 4096) -> jnp.ndarray:
+    """All-pairs squared DTW: ``A (N, L)``, ``B (M, L)`` -> ``(N, M)``.
+
+    Flattens the cross-product and sweeps it in fixed-size blocks so peak
+    memory stays bounded for large N*M.
+    """
+    N, L = A.shape
+    M = B.shape[0]
+    total = N * M
+    nblk = -(-total // block)
+    pad = nblk * block - total
+    ai = jnp.repeat(jnp.arange(N), M)
+    bi = jnp.tile(jnp.arange(M), N)
+    ai = jnp.concatenate([ai, jnp.zeros((pad,), ai.dtype)])
+    bi = jnp.concatenate([bi, jnp.zeros((pad,), bi.dtype)])
+
+    def blk(carry, k):
+        s = k * block
+        aa = A[jax.lax.dynamic_slice_in_dim(ai, s, block)]
+        bb = B[jax.lax.dynamic_slice_in_dim(bi, s, block)]
+        d = jax.vmap(lambda x, y: dtw_pair(x, y, window))(aa, bb)
+        return carry, d
+
+    _, out = jax.lax.scan(blk, 0, jnp.arange(nblk))
+    return out.reshape(-1)[:total].reshape(N, M)
+
+
+def euclidean_sq(A: jnp.ndarray, B: jnp.ndarray) -> jnp.ndarray:
+    """All-pairs squared Euclidean distance (lock-step baseline)."""
+    a2 = jnp.sum(A * A, -1)[:, None]
+    b2 = jnp.sum(B * B, -1)[None, :]
+    return jnp.maximum(a2 + b2 - 2.0 * A @ B.T, 0.0)

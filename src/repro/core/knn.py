@@ -1,0 +1,89 @@
+"""1-NN search/classification with PQ approximates (§4.1) + exact NN-DTW.
+
+The exact NN-DTW path implements the UCR-suite style LB_Keogh early
+abandoning (query envelopes, candidate pruning) so benchmarks can report
+both the paper's baseline and its pruning statistics.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .dtw import dtw_batch, dtw_cdist
+from .lb import keogh_envelope, lb_keogh
+from .pq import PQCodebook, PQConfig, cdist_asym, cdist_sym, encode
+
+__all__ = ["knn_classify_sym", "knn_classify_asym", "nn_dtw_exact",
+           "nn_dtw_pruned"]
+
+
+def knn_classify_sym(train_codes: jnp.ndarray, train_labels: jnp.ndarray,
+                     Q: jnp.ndarray, cb: PQCodebook, cfg: PQConfig
+                     ) -> jnp.ndarray:
+    """Symmetric 1-NN: encode the queries, then M LUT gathers per pair."""
+    q_codes = encode(Q, cb, cfg)
+    d = cdist_sym(q_codes, train_codes, cb.lut)
+    return train_labels[jnp.argmin(d, axis=1)]
+
+
+def knn_classify_asym(train_codes: jnp.ndarray, train_labels: jnp.ndarray,
+                      Q: jnp.ndarray, cb: PQCodebook, cfg: PQConfig
+                      ) -> jnp.ndarray:
+    """Asymmetric 1-NN: one fresh M x K DTW table per query, then gathers."""
+    d = cdist_asym(Q, train_codes, cb, cfg)
+    return train_labels[jnp.argmin(d, axis=1)]
+
+
+def nn_dtw_exact(X: jnp.ndarray, labels: jnp.ndarray, Q: jnp.ndarray,
+                 window: Optional[int] = None) -> jnp.ndarray:
+    """Exact (banded) NN-DTW, fully vectorized — the accuracy reference."""
+    d = dtw_cdist(Q, X, window)
+    return labels[jnp.argmin(d, axis=1)]
+
+
+def nn_dtw_pruned(X: np.ndarray, labels: np.ndarray, Q: np.ndarray,
+                  window: Optional[int] = None
+                  ) -> Tuple[np.ndarray, float]:
+    """LB_Keogh filter-and-refine NN-DTW.
+
+    Vectorized two-phase equivalent of UCR early abandoning: compute the
+    cheap bound for all (query, candidate) pairs, run real DTW only where the
+    bound cannot exclude the candidate (per query, bounds above the best
+    *verified* distance so far, processed in ascending-LB order).  Returns
+    (predictions, fraction_of_DTW_computations_pruned).
+    """
+    X = np.asarray(X, np.float32)
+    Q = np.asarray(Q, np.float32)
+    w = window if window is not None else X.shape[1]
+    up, lo = keogh_envelope(jnp.asarray(Q), int(w))
+    lbs = np.asarray(jax.vmap(lambda u, l: lb_keogh(jnp.asarray(X), u, l))(
+        up, lo))                                           # (Nq, N)
+    order = np.argsort(lbs, axis=1)
+    preds = np.zeros(Q.shape[0], labels.dtype)
+    n_dtw = 0
+    for qi in range(Q.shape[0]):
+        best, best_i = np.inf, 0
+        # batch the refinement in chunks, early-stopping between chunks
+        idx = order[qi]
+        chunk = max(4, min(64, X.shape[0] // 8))
+        for s in range(0, len(idx), chunk):
+            cand = idx[s:s + chunk]
+            cand = cand[lbs[qi, cand] < best]
+            if len(cand) == 0:
+                if lbs[qi, idx[min(s, len(idx) - 1)]] >= best:
+                    break
+                continue
+            d = np.asarray(dtw_batch(
+                jnp.broadcast_to(jnp.asarray(Q[qi]), (len(cand), Q.shape[1])),
+                jnp.asarray(X[cand]), window))
+            n_dtw += len(cand)
+            j = int(np.argmin(d))
+            if d[j] < best:
+                best, best_i = float(d[j]), int(cand[j])
+        preds[qi] = labels[best_i]
+    pruned = 1.0 - n_dtw / float(Q.shape[0] * X.shape[0])
+    return preds, pruned

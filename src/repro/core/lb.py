@@ -1,0 +1,72 @@
+"""DTW lower bounds: Keogh envelopes, LB_Keogh (reversed), LB_Kim, cascade.
+
+All bounds are for *squared* DTW cost, matching :mod:`repro.core.dtw`.
+
+The paper reverses the query/data role of LB_Keogh: envelopes are built once
+around the *codebook centroids* at training time, so encoding a fresh series
+costs only O(D/M) per bound evaluation.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["keogh_envelope", "lb_keogh", "lb_kim", "lb_cascade"]
+
+
+@functools.partial(jax.jit, static_argnames=("window",))
+def keogh_envelope(x: jnp.ndarray, window: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Upper/lower Keogh envelope: rolling max/min over ``|shift| <= window``.
+
+    ``x`` may be ``(L,)`` or batched ``(..., L)``.  Returns ``(U, L)`` with the
+    same shape as ``x``.  Implemented as a stack of shifted copies (window is
+    small after PQ partitioning), which vectorizes cleanly.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    L = x.shape[-1]
+    shifts = jnp.arange(-window, window + 1)
+
+    def shifted(s):
+        rolled = jnp.roll(x, s, axis=-1)
+        i = jnp.arange(L)
+        valid = (i - s >= 0) & (i - s < L)
+        hi = jnp.where(valid, rolled, -jnp.inf)
+        lo = jnp.where(valid, rolled, jnp.inf)
+        return hi, lo
+
+    his, los = jax.vmap(shifted)(shifts)
+    return jnp.max(his, axis=0), jnp.min(los, axis=0)
+
+
+def lb_keogh(q: jnp.ndarray, upper: jnp.ndarray, lower: jnp.ndarray) -> jnp.ndarray:
+    """LB_Keogh(q, c) given c's envelope — a lower bound on squared DTW(q, c).
+
+    Broadcasts: ``q (..., L)`` against envelopes ``(..., L)``.
+    """
+    above = jnp.where(q > upper, (q - upper) ** 2, 0.0)
+    below = jnp.where(q < lower, (lower - q) ** 2, 0.0)
+    return jnp.sum(above + below, axis=-1)
+
+
+def lb_kim(q: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Simplified LB_Kim: first and last points are always aligned by DTW,
+    so their squared differences lower-bound the squared DTW cost."""
+    return (q[..., 0] - c[..., 0]) ** 2 + (q[..., -1] - c[..., -1]) ** 2
+
+
+def lb_cascade(q: jnp.ndarray, centroids: jnp.ndarray,
+               upper: jnp.ndarray, lower: jnp.ndarray) -> jnp.ndarray:
+    """Cascading bound used for the filter-then-refine encoder.
+
+    ``q (L,)`` vs ``centroids (K, L)`` with envelopes ``(K, L)`` each.
+    Returns the *tightest available* cheap bound per centroid:
+    ``max(LB_Kim, reversed LB_Keogh)`` — both are valid lower bounds, so the
+    max is too.
+    """
+    kim = lb_kim(q[None, :], centroids)
+    keogh = lb_keogh(q[None, :], upper, lower)
+    return jnp.maximum(kim, keogh)

@@ -1,0 +1,136 @@
+"""MODWT (Haar) pre-alignment — §3.5 of the paper.
+
+Pipeline:
+  1. Haar MODWT scale coefficients at level J (circular, undecimated): the
+     level-j scaling output is a dyadic moving average — computed by the
+     pyramid recursion ``v_j[i] = (v_{j-1}[i] + v_{j-1}[i - 2^{j-1}]) / 2``.
+  2. Segment points = sign changes of ``x - v_J``.
+  3. Each fixed split ``l_m = m * (D/M)`` is snapped to the *right-most*
+     MODWT segment point inside the tail window ``[l_m - t, l_m]`` (if any).
+  4. Each variable-length segment is linearly re-interpolated to the static
+     length ``D/M + t`` so downstream envelopes/LUTs stay shape-static.
+
+Everything is shape-static and vmappable: data-dependent boundaries become
+gather indices, never shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["modwt_scale", "segment_points", "snap_splits",
+           "extract_segments", "prealign", "fixed_segments"]
+
+
+@functools.partial(jax.jit, static_argnames=("level",))
+def modwt_scale(x: jnp.ndarray, level: int) -> jnp.ndarray:
+    """Level-``level`` Haar MODWT scaling coefficients (circular boundary).
+
+    ``x (..., L)`` -> same shape.  Proportional to a local mean with dyadic
+    support ``2**level``.
+    """
+    v = jnp.asarray(x, jnp.float32)
+    for j in range(1, level + 1):
+        v = 0.5 * (v + jnp.roll(v, 2 ** (j - 1), axis=-1))
+    return v
+
+
+def segment_points(x: jnp.ndarray, level: int) -> jnp.ndarray:
+    """Boolean mask of MODWT segment points: positions ``i`` where
+    ``sign(x - v_J)`` changes between ``i-1`` and ``i``."""
+    v = modwt_scale(x, level)
+    d = x - v
+    s = jnp.sign(d)
+    # Exact zeros (series == local mean) carry the previous nonzero sign, so
+    # a plateau touch produces exactly one change point, not zero or two.
+    s = jax.lax.associative_scan(
+        lambda a, b: jnp.where(b == 0, a, b), s, axis=-1)
+    prev = jnp.concatenate([s[..., :1], s[..., :-1]], axis=-1)
+    change = (s * prev) < 0
+    change = change.at[..., 0].set(False)
+    return change
+
+
+def snap_splits(points: jnp.ndarray, n_sub: int, tail: int) -> jnp.ndarray:
+    """Snap the ``n_sub - 1`` interior fixed splits to MODWT points.
+
+    ``points (..., L)`` boolean.  Returns boundaries ``(..., n_sub + 1)``
+    int32 including 0 and L.  Each interior split ``l`` moves to the
+    right-most true position in ``[l - tail, l]``; stays at ``l`` otherwise.
+    """
+    points = jnp.asarray(points)
+    L = points.shape[-1]
+    seg = L // n_sub
+    fixed = jnp.arange(1, n_sub) * seg  # (n_sub-1,)
+
+    offs = jnp.arange(tail + 1)  # candidate offsets, 0 = at l (right-most)
+
+    def snap_one(l):
+        cand = l - offs
+        ok = points[..., :][..., jnp.clip(cand, 0, L - 1)] & (cand >= 1)
+        # first True along offs = right-most point in the window
+        any_ok = jnp.any(ok, axis=-1)
+        first = jnp.argmax(ok, axis=-1)
+        return jnp.where(any_ok, l - first, l)
+
+    interior = jax.vmap(snap_one, in_axes=0, out_axes=-1)(fixed)
+    batch_shape = points.shape[:-1]
+    zero = jnp.zeros(batch_shape + (1,), jnp.int32)
+    end = jnp.full(batch_shape + (1,), L, jnp.int32)
+    return jnp.concatenate([zero, interior.astype(jnp.int32), end], axis=-1)
+
+
+def _interp_segment(x: jnp.ndarray, start: jnp.ndarray, stop: jnp.ndarray,
+                    out_len: int) -> jnp.ndarray:
+    """Linearly resample ``x[start:stop]`` to ``out_len`` points (gathers)."""
+    L = x.shape[-1]
+    n = stop - start  # actual length (traced)
+    pos = start + jnp.linspace(0.0, 1.0, out_len) * (n - 1)
+    lo = jnp.clip(jnp.floor(pos).astype(jnp.int32), 0, L - 1)
+    hi = jnp.clip(lo + 1, 0, L - 1)
+    frac = pos - lo
+    return x[lo] * (1.0 - frac) + x[hi] * frac
+
+
+def extract_segments(x: jnp.ndarray, bounds: jnp.ndarray,
+                     out_len: int) -> jnp.ndarray:
+    """``x (L,)``, ``bounds (M+1,)`` -> ``(M, out_len)`` resampled segments."""
+    x = jnp.asarray(x, jnp.float32)
+    bounds = jnp.asarray(bounds)
+    starts = bounds[:-1]
+    stops = bounds[1:]
+    return jax.vmap(lambda s, e: _interp_segment(x, s, e, out_len))(starts, stops)
+
+
+@functools.partial(jax.jit, static_argnames=("n_sub", "level", "tail"))
+def prealign(X: jnp.ndarray, n_sub: int, level: int, tail: int) -> jnp.ndarray:
+    """Full pre-alignment: ``X (N, D)`` -> ``(N, n_sub, D//n_sub + tail)``.
+
+    MODWT-guided segmentation with tail snapping, then re-interpolation of
+    every segment to the static length ``D//n_sub + tail``.
+    """
+    X = jnp.asarray(X, jnp.float32)
+    out_len = X.shape[-1] // n_sub + tail
+
+    def one(x):
+        pts = segment_points(x, level)
+        bounds = snap_splits(pts, n_sub, tail)
+        return extract_segments(x, bounds, out_len)
+
+    return jax.vmap(one)(X)
+
+
+@functools.partial(jax.jit, static_argnames=("n_sub",))
+def fixed_segments(X: jnp.ndarray, n_sub: int) -> jnp.ndarray:
+    """Baseline segmentation without pre-alignment: equal-length chop.
+
+    ``X (N, D)`` -> ``(N, n_sub, D//n_sub)`` (D must be divisible by n_sub;
+    callers pad/truncate beforehand).
+    """
+    N, D = X.shape
+    seg = D // n_sub
+    return X[:, : n_sub * seg].reshape(N, n_sub, seg).astype(jnp.float32)

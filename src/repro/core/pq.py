@@ -1,0 +1,273 @@
+"""PQDTW — the paper's product quantizer for time series under DTW.
+
+Training (Alg. 1): segment -> per-subspace DBA k-means -> pre-compute the
+M x K x K symmetric DTW LUT and the Keogh envelope of every centroid.
+
+Encoding (Alg. 2): per subspace, DTW-1NN against the K centroids.  The
+paper's cascading-lower-bound early abandoning is replaced by its TPU-native
+equivalent: a vectorized LB filter (max(LB_Kim, reversed LB_Keogh) for all K
+at once) followed by exact banded DTW on the top-T most promising centroids
+(static T -> static shapes).  ``exact=True`` disables the filter.
+
+Distances (§3.3): symmetric = M LUT gathers + sum; asymmetric = one fresh
+M x K DTW table per query, then gathers.  §4.2's clustering refinement
+replaces the 0 distance of identical codes by the Keogh lower bound.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .dtw import dtw_pair, dtw_cdist, euclidean_sq
+from .lb import keogh_envelope, lb_keogh, lb_kim
+from .kmeans import dba_kmeans, euclidean_kmeans
+from .modwt import prealign, fixed_segments
+
+__all__ = ["PQConfig", "PQCodebook", "segment", "fit", "encode",
+           "encode_with_stats", "query_lut", "cdist_sym", "cdist_asym",
+           "cdist_sym_refined", "memory_cost"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PQConfig:
+    """Hyper-parameters of the product quantizer (paper §3 + §5)."""
+    n_sub: int = 8              # M: number of subspaces
+    codebook_size: int = 256    # K
+    window_frac: float = 0.1    # Sakoe-Chiba band, fraction of subseq length
+    metric: str = "dtw"         # "dtw" (PQDTW) or "euclidean" (PQ_ED baseline)
+    use_prealign: bool = True   # MODWT pre-alignment (§3.5)
+    wavelet_level: int = 3      # J
+    tail_frac: float = 0.15     # t, fraction of D/M
+    kmeans_iters: int = 8
+    dba_iters: int = 2
+    refine_frac: float = 0.125  # T/K for filter-then-refine encoding
+    exact_encode: bool = False  # disable the LB filter
+
+    def subseq_len(self, D: int) -> int:
+        base = D // self.n_sub
+        return base + self.tail(D) if (self.use_prealign and self.metric == "dtw") else base
+
+    def tail(self, D: int) -> int:
+        return max(1, int(round(self.tail_frac * (D // self.n_sub))))
+
+    def window(self, D: int) -> Optional[int]:
+        if self.metric != "dtw":
+            return None
+        return max(1, int(round(self.window_frac * self.subseq_len(D))))
+
+    def refine_t(self) -> int:
+        return max(1, int(round(self.refine_frac * self.codebook_size)))
+
+
+class PQCodebook(NamedTuple):
+    """Trained quantizer state (a pytree — jit/shard friendly)."""
+    centroids: jnp.ndarray   # (M, K, S) float32
+    lut: jnp.ndarray         # (M, K, K) squared elastic distance
+    env_upper: jnp.ndarray   # (M, K, S)
+    env_lower: jnp.ndarray   # (M, K, S)
+
+    @property
+    def n_sub(self) -> int:
+        return self.centroids.shape[0]
+
+    @property
+    def codebook_size(self) -> int:
+        return self.centroids.shape[1]
+
+    @property
+    def subseq_len(self) -> int:
+        return self.centroids.shape[2]
+
+
+# ---------------------------------------------------------------------------
+# Segmentation
+# ---------------------------------------------------------------------------
+
+def segment(X: jnp.ndarray, cfg: PQConfig) -> jnp.ndarray:
+    """``X (N, D)`` -> ``(N, M, S)`` subsequences (pre-aligned or fixed)."""
+    D = X.shape[-1]
+    if cfg.use_prealign and cfg.metric == "dtw":
+        return prealign(X, cfg.n_sub, cfg.wavelet_level, cfg.tail(D))
+    return fixed_segments(X, cfg.n_sub)
+
+
+# ---------------------------------------------------------------------------
+# Training (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+def fit(key: jax.Array, X: jnp.ndarray, cfg: PQConfig) -> PQCodebook:
+    """Learn the codebook, LUT and envelopes from training series ``X (N, D)``."""
+    X = jnp.asarray(X, jnp.float32)
+    D = X.shape[-1]
+    segs = segment(X, cfg)                       # (N, M, S)
+    window = cfg.window(D)
+    keys = jax.random.split(key, cfg.n_sub)
+
+    cents, luts, uppers, lowers = [], [], [], []
+    for m in range(cfg.n_sub):
+        sub = segs[:, m, :]
+        if cfg.metric == "dtw":
+            res = dba_kmeans(keys[m], sub, cfg.codebook_size,
+                             iters=cfg.kmeans_iters, dba_iters=cfg.dba_iters,
+                             window=window)
+            lut = dtw_cdist(res.centroids, res.centroids, window)
+        else:
+            res = euclidean_kmeans(keys[m], sub, cfg.codebook_size,
+                                   iters=cfg.kmeans_iters)
+            lut = euclidean_sq(res.centroids, res.centroids)
+        up, lo = keogh_envelope(res.centroids, window or 1)
+        cents.append(res.centroids)
+        luts.append(lut)
+        uppers.append(up)
+        lowers.append(lo)
+
+    return PQCodebook(jnp.stack(cents), jnp.stack(luts),
+                      jnp.stack(uppers), jnp.stack(lowers))
+
+
+# ---------------------------------------------------------------------------
+# Encoding (Algorithm 2) — vectorized filter-then-refine
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("window", "refine_t", "exact", "euclidean"))
+def _encode_segs(segs: jnp.ndarray, cb: PQCodebook, window: Optional[int],
+                 refine_t: int, exact: bool, euclidean: bool
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """``segs (N, M, S)`` -> codes ``(N, M)`` int32 + soundness flags."""
+
+    def one(q, cents, up, lo):
+        # q (S,), cents (K, S)
+        if euclidean:
+            d = jnp.sum((cents - q[None, :]) ** 2, -1)
+            return jnp.argmin(d).astype(jnp.int32), jnp.bool_(True)
+        lbs = jnp.maximum(lb_kim(q[None, :], cents), lb_keogh(q[None, :], up, lo))
+        if exact:
+            d = jax.vmap(lambda c: dtw_pair(q, c, window))(cents)
+            return jnp.argmin(d).astype(jnp.int32), jnp.bool_(True)
+        neg, cand = jax.lax.top_k(-lbs, refine_t)            # T most promising
+        d = jax.vmap(lambda c: dtw_pair(q, c, window))(cents[cand])
+        best = jnp.argmin(d)
+        best_d = d[best]
+        # Soundness certificate: the true NN is inside the candidate set iff
+        # best refined distance <= every excluded centroid's lower bound.
+        excluded_min = jnp.min(jnp.where(
+            jnp.zeros_like(lbs, jnp.bool_).at[cand].set(True), jnp.inf, lbs))
+        return cand[best].astype(jnp.int32), best_d <= excluded_min
+
+    per_sub = jax.vmap(one, in_axes=(0, 0, 0, 0))            # over M
+    codes, sound = jax.vmap(per_sub, in_axes=(0, None, None, None))(
+        segs, cb.centroids, cb.env_upper, cb.env_lower)      # over N
+    return codes, sound
+
+
+def encode(X: jnp.ndarray, cb: PQCodebook, cfg: PQConfig) -> jnp.ndarray:
+    """Encode raw series ``X (N, D)`` to PQ codes ``(N, M)``."""
+    codes, _ = encode_with_stats(X, cb, cfg)
+    return codes
+
+
+def encode_with_stats(X: jnp.ndarray, cb: PQCodebook, cfg: PQConfig
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Encode + per-code soundness flags (True = certified exact-NN code)."""
+    X = jnp.asarray(X, jnp.float32)
+    segs = segment(X, cfg)
+    D = X.shape[-1]
+    return _encode_segs(segs, cb, cfg.window(D), cfg.refine_t(),
+                        cfg.exact_encode, cfg.metric != "dtw")
+
+
+# ---------------------------------------------------------------------------
+# Distances (§3.3)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def cdist_sym(codes_a: jnp.ndarray, codes_b: jnp.ndarray,
+              lut: jnp.ndarray) -> jnp.ndarray:
+    """Symmetric PQ distance matrix: ``(Na, M) x (Nb, M) -> (Na, Nb)``.
+
+    ``M`` gathers + adds per pair; sqrt of the summed squared subspace costs.
+    """
+    def per_sub(am, bm, lut_m):
+        return lut_m[am[:, None], bm[None, :]]
+    d2 = jnp.sum(jax.vmap(per_sub, in_axes=(1, 1, 0))(codes_a, codes_b, lut), 0)
+    return jnp.sqrt(jnp.maximum(d2, 0.0))
+
+
+@functools.partial(jax.jit, static_argnames=("window", "euclidean"))
+def query_lut(q_segs: jnp.ndarray, cb: PQCodebook, window: Optional[int],
+              euclidean: bool = False) -> jnp.ndarray:
+    """Asymmetric query table: ``q_segs (M, S)`` -> ``(M, K)`` squared dists."""
+    if euclidean:
+        return jax.vmap(lambda q, c: jnp.sum((c - q[None, :]) ** 2, -1))(
+            q_segs, cb.centroids)
+    return jax.vmap(lambda q, c: jax.vmap(
+        lambda ck: dtw_pair(q, ck, window))(c))(q_segs, cb.centroids)
+
+
+@jax.jit
+def _adc_gather(qlut: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
+    """``qlut (M, K)``, ``codes (N, M)`` -> distances ``(N,)``."""
+    m_idx = jnp.arange(qlut.shape[0])
+    d2 = jnp.sum(qlut[m_idx[None, :], codes], axis=-1)
+    return jnp.sqrt(jnp.maximum(d2, 0.0))
+
+
+def cdist_asym(Q: jnp.ndarray, codes: jnp.ndarray, cb: PQCodebook,
+               cfg: PQConfig) -> jnp.ndarray:
+    """Asymmetric distances: raw queries ``Q (Nq, D)`` vs codes ``(N, M)``."""
+    Q = jnp.asarray(Q, jnp.float32)
+    D = Q.shape[-1]
+    q_segs = segment(Q, cfg)                     # (Nq, M, S)
+    euc = cfg.metric != "dtw"
+    luts = jax.vmap(lambda s: query_lut(s, cb, cfg.window(D), euc))(q_segs)
+    return jax.vmap(lambda ql: _adc_gather(ql, codes))(luts)
+
+
+@jax.jit
+def cdist_sym_refined(codes_a: jnp.ndarray, segs_a: jnp.ndarray,
+                      codes_b: jnp.ndarray, segs_b: jnp.ndarray,
+                      cb: PQCodebook) -> jnp.ndarray:
+    """§4.2 clustering distance: symmetric PQ, but where two series share a
+    code in subspace m (LUT says 0), substitute the Keogh lower bound
+    ``max(lb(a^m, env(code)), lb(b^m, env(code)))`` — guaranteed between 0
+    and the true subspace DTW."""
+    def per_sub(am, sa, bm, sb, lut_m, up_m, lo_m):
+        base = lut_m[am[:, None], bm[None, :]]                  # (Na, Nb)
+        lb_a = lb_keogh(sa[:, None, :], up_m[bm][None, :, :],   # a vs b's code
+                        lo_m[bm][None, :, :])
+        lb_b = lb_keogh(sb[None, :, :], up_m[am][:, None, :],   # b vs a's code
+                        lo_m[am][:, None, :])
+        fallback = jnp.maximum(lb_a, lb_b)
+        same = am[:, None] == bm[None, :]
+        return jnp.where(same, fallback, base)
+
+    d2 = jnp.sum(jax.vmap(per_sub, in_axes=(1, 1, 1, 1, 0, 0, 0))(
+        codes_a, segs_a, codes_b, segs_b,
+        cb.lut, cb.env_upper, cb.env_lower), 0)
+    return jnp.sqrt(jnp.maximum(d2, 0.0))
+
+
+# ---------------------------------------------------------------------------
+# Memory accounting (§3.4)
+# ---------------------------------------------------------------------------
+
+def memory_cost(cfg: PQConfig, D: int, n_series: int) -> dict:
+    """Bytes for raw data vs PQ representation + auxiliary structures."""
+    S = cfg.subseq_len(D)
+    M, K = cfg.n_sub, cfg.codebook_size
+    code_bits = max(1, int(np.ceil(np.log2(K))))
+    raw = 4 * D * n_series
+    codes = int(np.ceil(code_bits / 8)) * M * n_series
+    codebook = 4 * M * K * S
+    lut = 4 * M * K * K
+    envelopes = 2 * 4 * M * K * S
+    return dict(raw_bytes=raw, code_bytes=codes, codebook_bytes=codebook,
+                lut_bytes=lut, envelope_bytes=envelopes,
+                aux_bytes=codebook + lut + envelopes,
+                compression=raw / max(codes, 1))

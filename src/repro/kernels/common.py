@@ -1,0 +1,29 @@
+"""Shared kernel utilities."""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["default_interpret", "pad_to", "cdiv"]
+
+
+def default_interpret() -> bool:
+    """Pallas kernels target TPU; everywhere else run the kernel body in
+    interpret mode (Python/XLA emulation) for correctness validation."""
+    return jax.default_backend() != "tpu"
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def pad_to(x, multiple: int, axis: int = 0, value=0):
+    """Pad ``x`` along ``axis`` up to the next multiple of ``multiple``."""
+    import jax.numpy as jnp
+    n = x.shape[axis]
+    pad = cdiv(n, multiple) * multiple - n
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)

@@ -1,0 +1,44 @@
+"""Jitted public wrappers for the banded-DTW Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..common import cdiv, default_interpret, pad_to
+from .kernel import make_dtw_band_call
+
+__all__ = ["dtw_band", "dtw_band_cdist"]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "block", "interpret"))
+def dtw_band(A: jnp.ndarray, B: jnp.ndarray, window: Optional[int] = None,
+             block: int = 8, interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Squared banded DTW over zipped pairs: ``A (N, L)``, ``B (N, L)`` -> ``(N,)``."""
+    if interpret is None:
+        interpret = default_interpret()
+    A = jnp.asarray(A, jnp.float32)
+    B = jnp.asarray(B, jnp.float32)
+    n, L = A.shape
+    Ap = pad_to(A, block, axis=0)
+    Bp = pad_to(B, block, axis=0)
+    call = make_dtw_band_call(Ap.shape[0], L, window, block, interpret)
+    out = call(Ap, Bp)
+    return out[:n, 0]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "block", "interpret"))
+def dtw_band_cdist(A: jnp.ndarray, B: jnp.ndarray,
+                   window: Optional[int] = None, block: int = 8,
+                   interpret: Optional[bool] = None) -> jnp.ndarray:
+    """All-pairs squared banded DTW: ``A (N, L)``, ``B (M, L)`` -> ``(N, M)``."""
+    N, L = A.shape
+    M = B.shape[0]
+    AA = jnp.repeat(A, M, axis=0)
+    BB = jnp.tile(B, (N, 1))
+    return dtw_band(AA, BB, window, block, interpret).reshape(N, M)

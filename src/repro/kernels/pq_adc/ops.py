@@ -1,0 +1,50 @@
+"""Jitted public wrappers for the PQ-ADC Pallas kernels."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..common import default_interpret, pad_to
+from .kernel import make_adc_lookup_call, make_adc_sym_call
+
+__all__ = ["adc_sym_cdist", "adc_lookup"]
+
+
+@functools.partial(jax.jit, static_argnames=("block_a", "block_b", "interpret"))
+def adc_sym_cdist(codes_a: jnp.ndarray, codes_b: jnp.ndarray,
+                  lut: jnp.ndarray, block_a: int = 128, block_b: int = 128,
+                  interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Symmetric PQ distance matrix via one-hot MXU contractions.
+
+    ``codes_a (Na, M)``, ``codes_b (Nb, M)`` int32; ``lut (M, K, K)``.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    nA, M = codes_a.shape
+    nB = codes_b.shape[0]
+    K = lut.shape[-1]
+    block_a = min(block_a, max(8, nA))
+    block_b = min(block_b, max(8, nB))
+    a = pad_to(codes_a.astype(jnp.int32), block_a, axis=0, value=0)
+    b = pad_to(codes_b.astype(jnp.int32), block_b, axis=0, value=0)
+    call = make_adc_sym_call(a.shape[0], b.shape[0], M, K,
+                             block_a, block_b, interpret)
+    return call(a, b, lut.astype(jnp.float32))[:nA, :nB]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def adc_lookup(codes: jnp.ndarray, qlut: jnp.ndarray, block: int = 256,
+               interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Asymmetric scan: ``codes (N, M)``, ``qlut (M, K)`` -> ``(N,)``."""
+    if interpret is None:
+        interpret = default_interpret()
+    n, M = codes.shape
+    K = qlut.shape[-1]
+    block = min(block, max(8, n))
+    c = pad_to(codes.astype(jnp.int32), block, axis=0, value=0)
+    call = make_adc_lookup_call(c.shape[0], M, K, block, interpret)
+    return call(c, qlut.astype(jnp.float32))[:n, 0]

@@ -1,0 +1,113 @@
+"""PQ-compressed KV decode attention (flash-ADC) Pallas kernel.
+
+The paper's asymmetric distance computation, specialised to dot-product
+attention: cached *keys* are PQ-encoded per kv-head (subspaces along
+head_dim); at decode time the query builds one small ADC table
+``qlut[h, m, k] = q_h^m . codebook[g, m, k]`` and every cached position's
+score is ``sum_m qlut[h, m, code]`` — M one-hot MXU contractions instead of
+a (S, d) @ (d,) matvec against de-quantized keys.  Values stay exact.
+
+Flash-decoding accumulation: the grid walks KV blocks sequentially; running
+max / denominator / weighted-value accumulators persist in VMEM scratch and
+the output is written on the last block.  HBM traffic per position drops
+from ``2 * d * bytes(kv)`` to ``M + d * bytes(v)`` — the paper's memory
+compression argument, applied to the KV cache.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["pq_attn_kernel", "make_pq_attn_call"]
+
+
+def _one_hot(col: jnp.ndarray, K: int) -> jnp.ndarray:
+    iota = jax.lax.broadcasted_iota(jnp.int32, (col.shape[0], K), 1)
+    return (iota == col[:, None]).astype(jnp.float32)
+
+
+def pq_attn_kernel(qlut_ref, codes_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *,
+                   groups: int, reps: int, n_sub: int, K: int,
+                   scale: float, block_s: int, n_blocks: int,
+                   valid_len: int):
+    """One KV block: ``qlut (H, M*K)``, ``codes (bS, G*M)``, ``v (bS, G*Dv)``.
+
+    Scratch: ``m (H, 1)``, ``l (H, 1)``, ``acc (H, Dv)`` persist across the
+    sequential grid; output written at the final block.
+    """
+    s = pl.program_id(0)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref[...], -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref[...])
+        acc_ref[...] = jnp.zeros_like(acc_ref[...])
+
+    codes = codes_ref[...]                       # (bS, G*M)
+    vblk = v_ref[...]                            # (bS, G*Dv)
+    pos = s * block_s + jax.lax.broadcasted_iota(jnp.int32, (1, block_s), 1)
+    in_range = (pos < valid_len)                 # (1, bS)
+    Dv = vblk.shape[1] // groups
+
+    for g in range(groups):
+        hs = slice(g * reps, (g + 1) * reps)
+        # one-hot block for this group: (bS, M*K)
+        oh = jnp.concatenate(
+            [_one_hot(codes[:, g * n_sub + m], K) for m in range(n_sub)],
+            axis=1)
+        qq = qlut_ref[hs, :]                     # (R, M*K)
+        scores = jax.lax.dot_general(
+            qq, oh, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale       # (R, bS)
+        scores = jnp.where(in_range, scores, -1e30)
+
+        m_old = m_ref[hs, :]                     # (R, 1)
+        m_new = jnp.maximum(m_old, jnp.max(scores, axis=1, keepdims=True))
+        corr = jnp.exp(m_old - m_new)            # (R, 1)
+        p = jnp.exp(scores - m_new)              # (R, bS)
+        p = jnp.where(in_range, p, 0.0)
+        l_ref[hs, :] = l_ref[hs, :] * corr + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p, vblk[:, g * Dv:(g + 1) * Dv], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)  # (R, Dv)
+        acc_ref[hs, :] = acc_ref[hs, :] * corr + pv
+        m_ref[hs, :] = m_new
+
+    @pl.when(s == n_blocks - 1)
+    def _finalize():
+        o_ref[...] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+def make_pq_attn_call(H: int, S: int, groups: int, n_sub: int, K: int,
+                      Dv: int, scale: float, block_s: int, valid_len: int,
+                      interpret: bool):
+    """S must be padded to a multiple of block_s."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    reps = H // groups
+    n_blocks = S // block_s
+    kernel = functools.partial(
+        pq_attn_kernel, groups=groups, reps=reps, n_sub=n_sub, K=K,
+        scale=scale, block_s=block_s, n_blocks=n_blocks, valid_len=valid_len)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((H, n_sub * K), lambda s: (0, 0)),          # qlut
+            pl.BlockSpec((block_s, groups * n_sub), lambda s: (s, 0)),  # codes
+            pl.BlockSpec((block_s, groups * Dv), lambda s: (s, 0)),     # v
+        ],
+        out_specs=pl.BlockSpec((H, Dv), lambda s: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, Dv), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((H, 1), jnp.float32),   # running max
+            pltpu.VMEM((H, 1), jnp.float32),   # running denominator
+            pltpu.VMEM((H, Dv), jnp.float32),  # weighted-value accumulator
+        ],
+        interpret=interpret,
+    )

@@ -1,0 +1,83 @@
+"""Jitted public wrapper: PQ-KV decode attention (one new token vs a
+PQ-compressed KV cache)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..common import cdiv, default_interpret
+from .kernel import make_pq_attn_call
+
+__all__ = ["pq_attn_decode", "build_qlut", "encode_keys"]
+
+
+def build_qlut(q: jnp.ndarray, k_books: jnp.ndarray) -> jnp.ndarray:
+    """ADC tables: ``q (H, D)``, ``k_books (G, M, K, D/M)`` -> ``(H, M, K)``.
+
+    ``qlut[h, m, k] = q[h, m-th slice] . k_books[group(h), m, k]``.
+    """
+    H, D = q.shape
+    G, M, K, Ds = k_books.shape
+    R = H // G
+    qr = q.reshape(G, R, M, Ds)
+    return jnp.einsum("grmd,gmkd->grmk", qr, k_books).reshape(H, M, K)
+
+
+def encode_keys(k: jnp.ndarray, k_books: jnp.ndarray) -> jnp.ndarray:
+    """Quantize keys: ``k (S, G, D)``, books ``(G, M, K, D/M)`` -> ``(S, G, M)``.
+
+    Euclidean nearest codeword per subspace (the standard PQ encoder; keys
+    are feature vectors, not time series, so ED is the right metric here).
+    """
+    S, G, D = k.shape
+    _, M, K, Ds = k_books.shape
+    ks = k.reshape(S, G, M, Ds)
+    # d2[s,g,m,k] = |ks - book|^2
+    d2 = (jnp.sum(ks ** 2, -1)[..., None]
+          - 2.0 * jnp.einsum("sgmd,gmkd->sgmk", ks, k_books)
+          + jnp.sum(k_books ** 2, -1)[None])
+    return jnp.argmin(d2, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("valid_len", "block_s", "interpret"))
+def pq_attn_decode(q: jnp.ndarray, k_codes: jnp.ndarray,
+                   k_books: jnp.ndarray, v: jnp.ndarray,
+                   valid_len: Optional[int] = None, block_s: int = 128,
+                   interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Approximate decode attention against a PQ-compressed key cache.
+
+    Args:
+      q:        (H, D) query for the new token.
+      k_codes:  (S, G, M) int32 PQ codes of cached keys.
+      k_books:  (G, M, K, D/M) per-group codebooks.
+      v:        (S, G, Dv) exact cached values.
+      valid_len: number of real cache entries (rest masked); default S.
+
+    Returns (H, Dv) attention output.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    H, D = q.shape
+    S, G, M = k_codes.shape
+    K = k_books.shape[2]
+    Dv = v.shape[-1]
+    if valid_len is None:
+        valid_len = S
+    scale = 1.0 / (D ** 0.5)
+
+    qlut = build_qlut(q.astype(jnp.float32), k_books.astype(jnp.float32))
+    block_s = min(block_s, S)
+    Sp = cdiv(S, block_s) * block_s
+    pad = Sp - S
+    codes = jnp.pad(k_codes.astype(jnp.int32), ((0, pad), (0, 0), (0, 0)))
+    vv = jnp.pad(v.astype(jnp.float32), ((0, pad), (0, 0), (0, 0)))
+
+    call = make_pq_attn_call(H, Sp, G, M, K, Dv, scale, block_s,
+                             int(valid_len), interpret)
+    return call(qlut.reshape(H, M * K),
+                codes.reshape(Sp, G * M),
+                vv.reshape(Sp, G * Dv))

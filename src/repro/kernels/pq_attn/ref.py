@@ -1,0 +1,43 @@
+"""Pure-jnp oracle: de-quantize the key cache and run exact attention.
+
+The kernel must match this bit-for-bit up to fp accumulation order — ADC
+scores are algebraically identical to scores against reconstructed keys.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["pq_attn_decode_ref", "reconstruct_keys"]
+
+
+def reconstruct_keys(k_codes: jnp.ndarray, k_books: jnp.ndarray) -> jnp.ndarray:
+    """``codes (S, G, M)``, ``books (G, M, K, Ds)`` -> keys ``(S, G, M*Ds)``."""
+    S, G, M = k_codes.shape
+    Ds = k_books.shape[-1]
+    g_idx = jnp.arange(G)[None, :, None]
+    m_idx = jnp.arange(M)[None, None, :]
+    gathered = k_books[g_idx, m_idx, k_codes]        # (S, G, M, Ds)
+    return gathered.reshape(S, G, M * Ds)
+
+
+def pq_attn_decode_ref(q: jnp.ndarray, k_codes: jnp.ndarray,
+                       k_books: jnp.ndarray, v: jnp.ndarray,
+                       valid_len: Optional[int] = None) -> jnp.ndarray:
+    H, D = q.shape
+    S, G, M = k_codes.shape
+    R = H // G
+    if valid_len is None:
+        valid_len = S
+    khat = reconstruct_keys(k_codes.astype(jnp.int32),
+                            k_books.astype(jnp.float32))  # (S, G, D)
+    qg = q.astype(jnp.float32).reshape(G, R, D)
+    scores = jnp.einsum("grd,sgd->grs", qg, khat) / (D ** 0.5)
+    mask = jnp.arange(S)[None, None, :] < valid_len
+    scores = jnp.where(mask, scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)               # (G, R, S)
+    out = jnp.einsum("grs,sgd->grd", p, v.astype(jnp.float32))
+    return out.reshape(H, -1)

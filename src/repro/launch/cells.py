@@ -1,0 +1,183 @@
+"""Cell builder: one (arch x shape x mesh) -> jit-able step + shardings.
+
+A *cell* is the unit of the multi-pod dry-run: the step function
+(train / prefill / serve), its abstract inputs (ShapeDtypeStructs — zero
+allocation), and explicit in/out shardings derived from the partition rules.
+``lower_cell`` is the single entry point used by dryrun.py, the roofline
+benchmark and the perf hillclimb.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.registry import ShapeSpec, get_config, SHAPES
+from ..models.config import ModelConfig
+from ..sharding.partition import (activation_sharding, batch_specs,
+                                  cache_specs, dp_axes, named_shardings,
+                                  param_specs)
+from ..train.optim import AdamWConfig
+from ..train.step import make_train_step, make_forward
+from .specs import abstract_cache, abstract_train_state, abstract_params
+from .specs import input_specs
+
+__all__ = ["CellPlan", "build_cell", "lower_cell", "dp_size"]
+
+
+@dataclasses.dataclass
+class CellPlan:
+    """Everything needed to lower one cell."""
+    arch: str
+    shape: ShapeSpec
+    fn: Callable                    # positional-args step function
+    abstract_args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    static_argnums: Tuple[int, ...] = ()
+    donate_argnums: Tuple[int, ...] = ()
+
+
+def dp_size(mesh: Mesh) -> int:
+    s = 1
+    for ax in dp_axes(mesh):
+        s *= mesh.shape[ax]
+    return s
+
+
+def _state_shardings(state_abs, mesh: Mesh):
+    """TrainState(step, params, opt(mu, nu, count)) -> NamedShardings."""
+    p_specs = param_specs(state_abs.params, mesh)
+    ns = functools.partial(jax.tree.map,
+                           lambda s: NamedSharding(mesh, s))
+    rep = NamedSharding(mesh, P())
+    return type(state_abs)(
+        step=rep,
+        params=ns(p_specs),
+        opt=type(state_abs.opt)(mu=ns(p_specs), nu=ns(p_specs), count=rep))
+
+
+def _metric_shardings(mesh: Mesh):
+    return None    # let the partitioner pick (scalars -> replicated)
+
+
+def build_cell(arch: str, shape: ShapeSpec, mesh: Mesh, *,
+               q_chunk: int = 512, remat: bool = True,
+               microbatch_rows: int = 1,
+               extra: Optional[Dict[str, Any]] = None) -> CellPlan:
+    """Construct the step fn + abstract args + shardings for one cell.
+
+    ``microbatch_rows`` — per-device batch rows per microbatch for train
+    cells (grad-accum count = global_batch / (dp * rows)).
+    ``extra`` — hillclimb overrides (e.g. {"remat": False}).
+    """
+    extra = dict(extra or {})
+    q_chunk = extra.pop("q_chunk", q_chunk)
+    remat = extra.pop("remat", remat)
+    microbatch_rows = extra.pop("microbatch_rows", microbatch_rows)
+    loss_chunk = extra.pop("loss_chunk", 0)
+    pqkv = extra.pop("pqkv", None)          # PQKVConfig for decode cells
+
+    cfg = get_config(arch)
+    batch_abs = input_specs(cfg, shape)
+    batch_sh = named_shardings(batch_specs(batch_abs, mesh), mesh)
+
+    if shape.kind == "train":
+        state_abs = abstract_train_state(cfg)
+        state_sh = _state_shardings(state_abs, mesh)
+        dp = dp_size(mesh)
+        micro = max(1, shape.global_batch // (dp * microbatch_rows))
+        # microbatch sharding constraint: same batch rules on the split batch
+        mb_abs = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                (s.shape[0] // micro,) + s.shape[1:], s.dtype), batch_abs)
+        mb_constraint = batch_specs(mb_abs, mesh) if micro > 1 else None
+        step = make_train_step(cfg, AdamWConfig(), q_chunk=q_chunk,
+                               microbatches=micro, remat=remat,
+                               mb_constraint=mb_constraint,
+                               loss_chunk=loss_chunk)
+        return CellPlan(
+            arch=arch, shape=shape, fn=step,
+            abstract_args=(state_abs, batch_abs),
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, None),
+            donate_argnums=(0,))
+
+    params_abs = abstract_params(cfg)
+    if shape.kind == "decode":
+        # serving layout: bf16 weights, TP-only (resident on every DP
+        # replica — decode must not re-gather 72B params per token step)
+        params_abs = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+            if s.dtype == jnp.float32 and len(s.shape) >= 2 else s,
+            params_abs)
+        params_sh = named_shardings(
+            param_specs(params_abs, mesh, fsdp=False), mesh)
+    else:
+        params_sh = named_shardings(param_specs(params_abs, mesh), mesh)
+
+    if shape.kind == "prefill":
+        fwd = make_forward(cfg, q_chunk=q_chunk, remat=remat)
+
+        def prefill_step(params, batch):
+            """Last-position logits only — the (B, S, V) tensor never
+            materialises; the LM-head matmul runs on (B, 1, d)."""
+            h = fwd(params, batch=batch, return_hidden=True)
+            from ..models.lm import logits_from_hidden
+            return logits_from_hidden(params, cfg, h[:, -1:, :])
+
+        return CellPlan(
+            arch=arch, shape=shape, fn=prefill_step,
+            abstract_args=(params_abs, batch_abs),
+            in_shardings=(params_sh, batch_sh),
+            out_shardings=None)
+
+    # decode: serve_step(params, cache, token, pos); with a PQKVConfig in
+    # ``extra["pqkv"]`` the cell lowers the PQ-compressed decode instead
+    rep = NamedSharding(mesh, P())
+    if pqkv is not None:
+        from ..serve.pqkv import pq_serve_step
+        from .specs import abstract_pq_cache
+        cache_abs = abstract_pq_cache(cfg, shape, pqkv)
+        cache_sh = named_shardings(cache_specs(cache_abs, mesh), mesh)
+
+        def decode_step(params, cache, token, pos):
+            return pq_serve_step(params, cfg, cache, token, pos, pqc=pqkv)
+    else:
+        cache_abs = abstract_cache(cfg, shape)
+        cache_sh = named_shardings(cache_specs(cache_abs, mesh), mesh)
+        from ..serve.decode import serve_step
+
+        def decode_step(params, cache, token, pos):
+            return serve_step(params, cfg, cache, token, pos)
+
+    tok_sh = named_shardings(batch_specs(
+        {"token": batch_abs["token"]}, mesh), mesh)["token"]
+    return CellPlan(
+        arch=arch, shape=shape, fn=decode_step,
+        abstract_args=(params_abs, cache_abs,
+                       batch_abs["token"], batch_abs["pos"]),
+        in_shardings=(params_sh, cache_sh, tok_sh, rep),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(1,))
+
+
+def lower_cell(plan: CellPlan, mesh: Mesh):
+    """jit + lower (no compile) under the mesh + activation-spec contexts.
+
+    The activation-sharding context makes ``constrain_batch`` calls inside
+    the model pin batch dims to the DP axes during tracing — without it the
+    partitioner replicates batches through the layer scans (verified by the
+    dry-run cost model; see EXPERIMENTS.md §Perf iteration 1)."""
+    jitted = jax.jit(plan.fn,
+                     in_shardings=plan.in_shardings,
+                     out_shardings=plan.out_shardings,
+                     donate_argnums=plan.donate_argnums)
+    with mesh, activation_sharding(dp_axes(mesh),
+                                   model_size=mesh.shape["model"]):
+        return jitted.lower(*plan.abstract_args)

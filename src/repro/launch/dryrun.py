@@ -1,0 +1,190 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    # XLA:CPU's while-loop LICM hoists converts of remat-saved activation
+    # stacks out of backward loops, materialising a full-precision copy
+    # (10.7 GB/device on qwen2-72b train_4k).  TPU's memory-aware scheduler
+    # does not make multi-GB hoists; disabling the pass models the target.
+    # Found + validated in EXPERIMENTS.md §Perf B4.
+    "--xla_disable_hlo_passes=while-loop-invariant-code-motion")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: ``jax.jit(step, in_shardings, out_shardings).lower(*abstract)
+.compile()`` must succeed on the single-pod 16x16 mesh and the 2x16x16
+multi-pod mesh for every assigned architecture x input shape.  The compiled
+artifact's ``memory_analysis()`` proves per-device fit; ``cost_analysis()``
+plus an HLO collective parse feed EXPERIMENTS.md §Roofline.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Results are cached as JSON under --out (default experiments/dryrun); cells
+with an existing result are skipped unless --force.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.registry import ARCH_IDS, SHAPES, all_cells, get_config
+from repro.launch.cells import build_cell, lower_cell
+from repro.launch.hlo_analysis import model_flops_per_step, roofline
+from repro.launch.hlo_cost import analyze_module
+from repro.launch.mesh import make_production_mesh
+
+MESHES = {"single": False, "multi": True}
+
+
+def cell_id(arch: str, shape: str, mesh_name: str) -> str:
+    return f"{arch}__{shape}__{mesh_name}"
+
+
+def _cost_dict(compiled) -> dict:
+    c = compiled.cost_analysis()
+    if isinstance(c, list):      # older jax: list with one dict
+        c = c[0] if c else {}
+    return dict(c)
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: str,
+             force: bool = False, extra: dict = None,
+             tag: str = "") -> dict:
+    """Lower + compile one cell; returns (and persists) the result record."""
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    cid = cell_id(arch, shape_name, mesh_name) + (f"__{tag}" if tag else "")
+    path = os.path.join(out_dir, cid + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    os.makedirs(out_dir, exist_ok=True)
+    mesh = make_production_mesh(multi_pod=MESHES[mesh_name])
+    chips = mesh.size
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "chips": chips, "tag": tag, "ok": False}
+    t0 = time.time()
+    try:
+        plan = build_cell(arch, shape, mesh, extra=extra)
+        lowered = lower_cell(plan, mesh)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = _cost_dict(compiled)
+        # structural cost model: multiplies scan bodies by trip counts
+        # (cost_analysis() counts each while body exactly once)
+        hc = analyze_module(compiled.as_text())
+        tokens = shape.global_batch * (shape.seq_len
+                                       if shape.kind == "train" else
+                                       (shape.seq_len if shape.kind == "prefill"
+                                        else 1))
+        mf = model_flops_per_step(cfg.param_count(),
+                                  cfg.active_param_count(), tokens,
+                                  shape.kind)
+        rep = roofline({"flops": hc.flops, "bytes accessed": hc.hbm_bytes},
+                       hc.coll_bytes, chips, model_flops=mf)
+        rec.update(
+            ok=True, t_lower_s=round(t_lower, 1),
+            t_compile_s=round(t_compile, 1),
+            memory=dict(
+                argument_bytes=int(mem.argument_size_in_bytes),
+                output_bytes=int(mem.output_size_in_bytes),
+                temp_bytes=int(mem.temp_size_in_bytes),
+                peak_bytes=int(mem.argument_size_in_bytes
+                               + mem.temp_size_in_bytes),
+                code_bytes=int(mem.generated_code_size_in_bytes)),
+            cost_analysis_raw={k: cost[k] for k in ("flops", "bytes accessed")
+                               if k in cost},
+            cost=hc.to_dict(),
+            collectives={k: int(v) for k, v in hc.coll.items() if v},
+            roofline=rep.to_dict(),
+            params=int(cfg.param_count()),
+            active_params=int(cfg.active_param_count()),
+        )
+    except Exception as e:                                  # noqa: BLE001
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["wall_s"] = round(time.time() - t0, 1)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def _fmt(rec: dict) -> str:
+    if not rec["ok"]:
+        return (f"FAIL  {rec['arch']:24s} {rec['shape']:12s} {rec['mesh']:6s} "
+                f"{rec.get('error', '?')[:90]}")
+    r = rec["roofline"]
+    m = rec["memory"]
+    return (f"ok    {rec['arch']:24s} {rec['shape']:12s} {rec['mesh']:6s} "
+            f"peak={m['peak_bytes'] / 1e9:7.2f}GB "
+            f"C={r['compute_s'] * 1e3:9.2f}ms "
+            f"M={r['memory_s'] * 1e3:9.2f}ms "
+            f"K={r['collective_s'] * 1e3:9.2f}ms "
+            f"bound={r['bound']:10s} "
+            f"frac={r['roofline_frac']:.3f} "
+            f"[{rec['wall_s']:.0f}s]")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="every applicable (arch x shape) cell")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="", help="variant tag (hillclimb)")
+    ap.add_argument("--extra", default="",
+                    help="JSON overrides, e.g. "
+                         "'{\"microbatch_rows\": 2, \"loss_chunk\": 512}'; "
+                         "\"pqkv\": {...} builds a PQ-compressed decode cell")
+    ap.add_argument("--verbose-memory", action="store_true",
+                    help="print the raw memory/cost analysis per cell")
+    args = ap.parse_args()
+
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    cells = []
+    if args.all:
+        for arch, shape, ok, why in all_cells():
+            if not ok:
+                print(f"skip  {arch:24s} {shape.name:12s} ({why})")
+                continue
+            cells.append((arch, shape.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    extra = json.loads(args.extra) if args.extra else None
+    if extra and "pqkv" in extra:
+        from repro.serve.pqkv import PQKVConfig
+        extra["pqkv"] = PQKVConfig(**extra["pqkv"])
+
+    n_fail = 0
+    for mesh_name in meshes:
+        for arch, shape_name in cells:
+            rec = run_cell(arch, shape_name, mesh_name, args.out,
+                           force=args.force, extra=extra, tag=args.tag)
+            print(_fmt(rec), flush=True)
+            if args.verbose_memory and rec["ok"]:
+                print(json.dumps({k: rec[k] for k in
+                                  ("memory", "cost", "collectives")},
+                                 indent=1))
+            n_fail += 0 if rec["ok"] else 1
+    print(f"\ndone: {len(cells) * len(meshes) - n_fail} ok, {n_fail} failed")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

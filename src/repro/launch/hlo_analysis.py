@@ -1,0 +1,137 @@
+"""Compiled-HLO analysis: collective bytes, roofline terms.
+
+The dry-run cannot measure wall time (CPU container, TPU target), so the
+perf report derives three roofline terms per (arch x shape x mesh) cell from
+the compiled artifact:
+
+    compute_s    = HLO_FLOPs_per_device / peak_FLOPs            (197 TF bf16)
+    memory_s     = HLO_bytes_per_device / HBM_bw                (819 GB/s)
+    collective_s = collective_bytes_per_device / link_bw        (~50 GB/s)
+
+``cost_analysis()`` provides per-device FLOPs and bytes (the compiled module
+is the per-device SPMD program).  Collective bytes are NOT in cost_analysis:
+``collective_bytes`` parses the optimized HLO text and sums the operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute — again per-device, since SPMD operand shapes are shard
+shapes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Iterable, Optional
+
+__all__ = ["HW", "TPU_V5E", "collective_bytes", "roofline",
+           "model_flops_per_step", "RooflineReport"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    """Per-chip hardware constants (assignment: TPU v5e)."""
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12      # bf16 FLOP/s
+    hbm_bw: float = 819e9           # bytes/s
+    link_bw: float = 50e9           # bytes/s per ICI link
+    hbm_bytes: float = 16e9
+
+
+TPU_V5E = HW()
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+# e.g. "bf16[8,4096,1848]{2,1,0}" or "f32[]" ; tuple shapes handled by caller
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                   "all-to-all", "collective-permute")
+# "%x = bf16[...] all-gather(...)" — capture op name and full line
+_COLL_LINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?[^=]*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of every dtype[dims] occurrence in ``text``."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str, per_op: bool = False):
+    """Sum output-shape bytes of every collective op in optimized HLO.
+
+    Uses the *result* shape (the data that moves onto this device); `-done`
+    ops are skipped so async start/done pairs count once.  Returns total
+    bytes, or a per-op-kind dict if ``per_op``.
+    """
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVE_OPS}
+    for m in _COLL_LINE_RE.finditer(hlo_text):
+        shape_part, op = m.group(1), m.group(2)
+        if m.group(0).rstrip("(").endswith("-done("):
+            continue
+        out[op] += _shape_bytes(shape_part)
+    if per_op:
+        return out
+    return sum(out.values())
+
+
+def model_flops_per_step(param_count: int, active_param_count: int,
+                         tokens: int, kind: str) -> float:
+    """Useful model FLOPs: 6·N·D train, 2·N·D forward-only (N = active)."""
+    n = active_param_count
+    if kind == "train":
+        return 6.0 * n * tokens
+    return 2.0 * n * tokens
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    flops: float                 # per-device HLO flops
+    hbm_bytes: float             # per-device HLO bytes accessed
+    coll_bytes: float            # per-device collective bytes
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bound: str                   # dominant term
+    model_flops: float           # global useful flops (6ND / 2ND)
+    useful_ratio: float          # model_flops / (flops * chips)
+    roofline_frac: float         # min(terms)/max(terms) utilisation proxy
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def roofline(cost: dict, coll_bytes: float, chips: int, *,
+             model_flops: float, hw: HW = TPU_V5E) -> RooflineReport:
+    """Three-term roofline from ``compiled.cost_analysis()`` + HLO parse."""
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    compute_s = flops / hw.peak_flops
+    memory_s = hbm / hw.hbm_bw
+    coll_s = coll_bytes / hw.link_bw
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    bound = max(terms, key=terms.get)
+    total = flops * chips
+    useful = model_flops / total if total else 0.0
+    # fraction of the step spent on the useful-compute term if perfectly
+    # overlapped: useful compute time / dominant term time
+    useful_compute_s = (model_flops / chips) / hw.peak_flops
+    dominant = max(terms.values()) or 1.0
+    return RooflineReport(
+        flops=flops, hbm_bytes=hbm, coll_bytes=coll_bytes,
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        bound=bound, model_flops=model_flops, useful_ratio=useful,
+        roofline_frac=useful_compute_s / dominant)

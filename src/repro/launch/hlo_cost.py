@@ -1,0 +1,403 @@
+"""Structural cost model over optimized HLO text.
+
+``compiled.cost_analysis()`` visits every computation ONCE — a scan over 80
+layers or 16 grad-accum microbatches is counted as a single body execution,
+under-reporting FLOPs/bytes by orders of magnitude.  This module parses the
+optimized HLO, builds the computation call graph, and multiplies while-loop
+bodies by their ``known_trip_count`` annotation (XLA records it for counted
+loops, which is what ``lax.scan`` lowers to).
+
+Per-op costs:
+  * flops  — dot: 2 x result_elems x contraction_size (from the
+    ``lhs_contracting_dims`` attribute and the operand symbol table);
+    convolution: 2 x out_elems x kernel_elems / out_features.
+  * HBM traffic — for every top-level (post-fusion) op: operand bytes +
+    output bytes.  Fusion internals move through registers/VMEM and add no
+    traffic; tuple plumbing (parameter/tuple/gte/bitcast) is free.
+  * collectives — per-kind byte counts with ring-cost conventions:
+    all-reduce 2x output, all-gather output, reduce-scatter input,
+    all-to-all / collective-permute output.  ``-start`` counted,
+    ``-done`` skipped.
+
+All shapes in the SPMD module are per-device shard shapes, so every total
+is per-device per-step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["HloCost", "analyze_module", "parse_computations"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "s2": 1, "u2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%(?P<name>[\w.\-]+)\s*=\s*"
+    r"(?P<shape>\(.*?\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s+"
+    r"(?P<op>[a-zA-Z][\w\-]*)\(")
+
+# header: "[ENTRY] %name (params...) -> type {"; params may contain nested
+# parens (tuple-typed args), so only the name prefix is matched.
+_COMP_HEADER_RE = re.compile(
+    r"^(?P<entry>ENTRY\s+)?%?(?P<name>[\w.\-]+)\s*\(")
+
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+_FREE_OPS = frozenset((
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "copy-done", "opt-barrier",
+    "domain", "token",
+))
+
+_ELEMENT_COUNT_OPS = frozenset((
+    "add", "subtract", "multiply", "divide", "exponential", "tanh", "rsqrt",
+    "sqrt", "maximum", "minimum", "compare", "select", "negate", "abs",
+    "power", "log", "logistic", "floor", "ceil", "round-nearest-even",
+    "convert", "reduce", "and", "or", "xor", "not",
+))
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_elems(shape_text: str) -> int:
+    total = 0
+    for _, dims in _SHAPE_RE.findall(shape_text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+def _first_dims(shape_text: str) -> List[int]:
+    m = _SHAPE_RE.search(shape_text)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    operands: List[str]
+    attrs: str
+    line: str
+
+
+def parse_computations(hlo: str) -> Tuple[Dict[str, List[Instr]], str]:
+    """Split module text into computations; returns (comps, entry_name)."""
+    comps: Dict[str, List[Instr]] = {}
+    entry = ""
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            if stripped.endswith("{") and "->" in stripped:
+                m = _COMP_HEADER_RE.match(stripped)
+                if m:
+                    cur = m.group("name")
+                    comps[cur] = []
+                    if m.group("entry"):
+                        entry = cur
+            continue
+        if stripped == "}" or stripped.startswith("} "):
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        head_end = m.end()
+        # operands: scan to the matching close paren
+        depth = 1
+        i = head_end
+        while i < len(line) and depth:
+            if line[i] == "(":
+                depth += 1
+            elif line[i] == ")":
+                depth -= 1
+            i += 1
+        operand_text = line[head_end:i - 1]
+        attrs = line[i:]
+        comps[cur].append(Instr(
+            name=m.group("name"), shape=m.group("shape"), op=m.group("op"),
+            operands=_OPERAND_RE.findall(operand_text), attrs=attrs,
+            line=line))
+    return comps, entry
+
+
+@dataclasses.dataclass
+class HloCost:
+    """``hbm_min`` counts traffic only at must-materialize ops (dot/conv
+    operands+results, collectives, copies, dynamic-update-slices, gathers)
+    — the TPU perfect-fusion bound, since XLA:TPU fuses elementwise chains
+    into producers/consumers.  ``hbm_max`` additionally charges every
+    CPU-fusion boundary and elementwise op — an upper bound tied to this
+    container's XLA:CPU fusion decisions.  Roofline uses ``hbm_min``."""
+    flops: float = 0.0
+    hbm_min: float = 0.0
+    hbm_max: float = 0.0
+    vpu_elems: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in (
+            "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+            "collective-permute")})
+
+    @property
+    def hbm_bytes(self) -> float:            # roofline default
+        return self.hbm_min
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+    def __iadd__(self, other: "HloCost"):
+        self.flops += other.flops
+        self.hbm_min += other.hbm_min
+        self.hbm_max += other.hbm_max
+        self.vpu_elems += other.vpu_elems
+        for k in self.coll:
+            self.coll[k] += other.coll[k]
+        return self
+
+    def scaled(self, f: float) -> "HloCost":
+        return HloCost(self.flops * f, self.hbm_min * f, self.hbm_max * f,
+                       self.vpu_elems * f,
+                       {k: v * f for k, v in self.coll.items()})
+
+    def to_dict(self) -> dict:
+        return {"flops": self.flops, "hbm_bytes": self.hbm_min,
+                "hbm_max": self.hbm_max, "vpu_elems": self.vpu_elems,
+                "coll": dict(self.coll), "coll_bytes": self.coll_bytes}
+
+
+def _dot_flops(ins: Instr, symtab: Dict[str, str]) -> float:
+    out_elems = _shape_elems(ins.shape)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.attrs)
+    if not m or not ins.operands:
+        return 2.0 * out_elems
+    lhs_shape = symtab.get(ins.operands[0], "")
+    dims = _first_dims(lhs_shape)
+    contraction = 1
+    if m.group(1):
+        for d in m.group(1).split(","):
+            idx = int(d)
+            if idx < len(dims):
+                contraction *= dims[idx]
+    return 2.0 * out_elems * contraction
+
+
+def _conv_flops(ins: Instr, symtab: Dict[str, str]) -> float:
+    out_elems = _shape_elems(ins.shape)
+    if len(ins.operands) < 2:
+        return 2.0 * out_elems
+    kernel_elems = _shape_elems(symtab.get(ins.operands[1], ""))
+    out_dims = _first_dims(ins.shape)
+    # dim_labels like b0f_0io->b0f : feature dim = position of 'f' in output
+    m = re.search(r"dim_labels=([\w?]+)_([\w?]+)->([\w?]+)", ins.attrs)
+    out_features = 1
+    if m and "f" in m.group(3):
+        pos = m.group(3).index("f")
+        if pos < len(out_dims):
+            out_features = max(1, out_dims[pos])
+    return 2.0 * out_elems * max(1, kernel_elems // out_features)
+
+
+def _collective_kind(op: str) -> Optional[str]:
+    base = op[:-6] if op.endswith("-start") else op
+    if base in ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute"):
+        return base
+    return None
+
+
+def _bf16_width(ins: Instr, consumers: Dict[str, List["Instr"]]) -> bool:
+    """True when an f32 collective is a CPU float-normalization artifact:
+    the value is bf16 on either side (convert feeding it, or every consumer
+    converts it straight to bf16).  XLA:TPU runs these collectives natively
+    in bf16, so the roofline charges 2 bytes/elem, not 4."""
+    if "promoted" in ins.attrs:                  # promoted bf16 reducer
+        return True
+    if not ins.shape.startswith("f32") and "f32[" not in ins.shape[:6]:
+        return False
+    outs = consumers.get(ins.name, ())
+    if outs and all(
+            o.shape.startswith("bf16") and
+            (o.op == "convert" or "convert" in o.name)
+            for o in outs):
+        return True
+    return False
+
+
+def _instr_cost(ins: Instr, symtab: Dict[str, str],
+                comp_cost, comps, internal: bool = False,
+                consumers: Dict[str, List["Instr"]] = {}) -> HloCost:
+    """``internal=True`` = inside a fused computation: only true stores
+    (DUS / scatter) and compute count; data movement was already charged at
+    the fusion boundary (hbm_max) or is VMEM-resident (hbm_min)."""
+    c = HloCost()
+    op = ins.op
+
+    if op in _FREE_OPS or op.endswith("-done"):
+        return c
+
+    if op == "while":
+        tc_m = _TRIP_RE.search(ins.attrs)
+        tc = int(tc_m.group(1)) if tc_m else 1
+        body = _BODY_RE.search(ins.attrs)
+        cond = _COND_RE.search(ins.attrs)
+        inner = HloCost()
+        if body and body.group(1) in comps:
+            inner += comp_cost(body.group(1))
+        if cond and cond.group(1) in comps:
+            inner += comp_cost(cond.group(1))
+        return inner.scaled(tc)
+
+    if op == "conditional":
+        br = _BRANCHES_RE.search(ins.attrs)
+        best = HloCost()
+        if br:
+            for name in _OPERAND_RE.findall(br.group(1)):
+                if name in comps:
+                    sub = comp_cost(name)
+                    if sub.flops + sub.hbm_bytes > best.flops + best.hbm_bytes:
+                        best = sub
+        return best
+
+    if op == "call":
+        m = _CALLS_RE.search(ins.attrs) or re.search(
+            r"to_apply=%?([\w.\-]+)", ins.attrs)
+        if m and m.group(1) in comps:
+            return comp_cost(m.group(1))
+        return c
+
+    out_bytes = _shape_bytes(ins.shape)
+    in_bytes = sum(_shape_bytes(symtab.get(o, "")) for o in ins.operands)
+    io = in_bytes + out_bytes
+
+    kind = _collective_kind(op)
+    if kind is not None:
+        if kind == "all-reduce":
+            moved = 2.0 * out_bytes
+        elif kind == "reduce-scatter":
+            moved = float(in_bytes)
+        else:                       # all-gather / all-to-all / permute
+            moved = float(out_bytes)
+        if _bf16_width(ins, consumers):
+            moved *= 0.5            # TPU-native bf16 collective width
+        c.coll[kind] += moved
+        c.hbm_min += io
+        c.hbm_max += io
+        return c
+
+    if op == "fusion":
+        c.hbm_max += io             # CPU fusion boundary; TPU would merge
+        m = _CALLS_RE.search(ins.attrs)
+        if m and m.group(1) in comps:
+            inner = comp_cost(m.group(1), True)
+            c.flops += inner.flops           # dots fused in count as compute
+            c.vpu_elems += inner.vpu_elems
+            c.hbm_min += inner.hbm_min       # true stores inside the fusion
+        return c
+
+    if op == "dot":
+        c.flops += _dot_flops(ins, symtab)
+        c.hbm_min += io
+        c.hbm_max += io
+        return c
+
+    if op == "convolution":
+        c.flops += _conv_flops(ins, symtab)
+        c.hbm_min += io
+        c.hbm_max += io
+        return c
+
+    if op == "dynamic-update-slice":
+        upd = (_shape_bytes(symtab.get(ins.operands[1], ""))
+               if len(ins.operands) > 1 else out_bytes)
+        c.hbm_min += 2.0 * upd
+        c.hbm_max += 2.0 * upd
+        return c
+
+    if op in ("gather", "scatter", "sort", "select-and-scatter"):
+        c.hbm_min += io
+        c.hbm_max += io
+        return c
+
+    if op in ("copy", "copy-start", "transpose", "rng",
+              "rng-bit-generator", "cholesky", "triangular-solve",
+              "custom-call", "dynamic-slice", "slice", "concatenate",
+              "pad", "reverse"):
+        if not internal:            # fused copies/slices are VMEM-resident
+            c.hbm_min += io
+        c.hbm_max += io
+        return c
+
+    if op in ("reshape", "broadcast", "iota", "reduce-window"):
+        c.hbm_max += io             # usually fused / layout-free on TPU
+        return c
+
+    if op in _ELEMENT_COUNT_OPS:
+        c.vpu_elems += _shape_elems(ins.shape)
+        c.hbm_max += io             # fusable on TPU
+        return c
+
+    # unknown op: charge traffic on both bounds, no flops
+    c.hbm_min += io
+    c.hbm_max += io
+    return c
+
+
+def analyze_module(hlo: str) -> HloCost:
+    """Whole-module per-device cost with loop trip counts applied."""
+    comps, entry = parse_computations(hlo)
+    if not entry:
+        # fall back: the largest computation
+        entry = max(comps, key=lambda k: len(comps[k])) if comps else ""
+    memo: Dict[Tuple[str, bool], HloCost] = {}
+
+    def comp_cost(name: str, internal: bool = False) -> HloCost:
+        key = (name, internal)
+        if key in memo:
+            return memo[key]
+        memo[key] = HloCost()        # guard against recursion
+        total = HloCost()
+        symtab = {i.name: i.shape for i in comps[name]}
+        consumers: Dict[str, List[Instr]] = {}
+        for i in comps[name]:
+            for o in i.operands:
+                consumers.setdefault(o, []).append(i)
+        for ins in comps[name]:
+            total += _instr_cost(ins, symtab, comp_cost, comps, internal,
+                                 consumers)
+        memo[key] = total
+        return total
+
+    return comp_cost(entry) if entry else HloCost()

@@ -1,0 +1,145 @@
+"""Serving launcher: batched prefill + decode, with optional PQ-KV cache.
+
+Demonstrates the paper's technique end-to-end in the LM stack: after the
+prompt is prefetched into an exact KV cache, ``--pqkv`` compresses it with
+product quantization (codebooks fit on the observed keys), reports the
+memory ratio (paper §3.4 applied to the cache) and generates with
+ADC-approximated attention + an exact recent window.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
+        --reduced --batch 4 --prompt-len 48 --gen 16 --pqkv
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCH_IDS, get_config, get_reduced
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models.encdec import init_params_encdec
+from repro.models.lm import init_params
+from repro.serve.cache import init_cache
+from repro.serve.decode import prefill_cache_encdec, serve_step
+from repro.serve.pqkv import (PQKVConfig, compress_cache, pq_serve_step,
+                              pqkv_memory)
+from repro.sharding.partition import (activation_sharding, dp_axes,
+                                      named_shardings, param_specs)
+
+
+def greedy(logits: jnp.ndarray) -> jnp.ndarray:
+    return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--pqkv", action="store_true",
+                    help="compress the cache with PQ after prefill")
+    ap.add_argument("--pq-sub", type=int, default=4)
+    ap.add_argument("--pq-k", type=int, default=16)
+    ap.add_argument("--pq-window", type=int, default=16)
+    ap.add_argument("--pq-quantize-v", action="store_true")
+    ap.add_argument("--production-mesh", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_host_mesh())
+    max_len = args.max_len or (args.prompt_len + args.gen)
+    print(f"[serve] arch={cfg.name} family={cfg.family} "
+          f"B={args.batch} prompt={args.prompt_len} gen={args.gen}")
+
+    key = jax.random.PRNGKey(args.seed)
+    init = init_params_encdec if cfg.family == "encdec" else init_params
+    with mesh, activation_sharding(dp_axes(mesh)):
+        params = init(key, cfg)
+        cache = init_cache(cfg, args.batch, max_len)
+        prompt = jax.random.randint(key, (args.batch, args.prompt_len),
+                                    0, cfg.vocab_size, jnp.int32)
+        if cfg.family == "encdec":
+            frames = jax.random.normal(
+                key, (args.batch, cfg.n_frontend_tokens, cfg.d_model))
+            cache = prefill_cache_encdec(params, cfg, cache, frames)
+
+        step = jax.jit(lambda p, c, t, pos: serve_step(p, cfg, c, t, pos),
+                       donate_argnums=(1,))
+
+        # ---- prefill: one batched cache-filling pass where supported ----
+        t0 = time.time()
+        if cfg.family in ("dense", "moe", "vlm"):
+            from repro.serve.prefill import prefill as batched_prefill
+            logits, cache = jax.jit(
+                lambda p, c, b: batched_prefill(p, cfg, c, b),
+                donate_argnums=(1,))(params, cache, {"tokens": prompt})
+        else:   # ssm/hybrid/encdec decoders prefill token-sequentially
+            logits = None
+            for p in range(args.prompt_len):
+                logits, cache = step(params, cache, prompt[:, p:p + 1],
+                                     jnp.int32(p))
+        jax.block_until_ready(logits)
+        t_prefill = time.time() - t0
+        print(f"[serve] prefill {args.prompt_len} tokens in "
+              f"{t_prefill:.2f}s")
+
+        # ---- optional PQ compression of the populated cache ----
+        pqc = None
+        if args.pqkv:
+            assert cfg.family in ("dense", "moe", "vlm"), \
+                f"PQ-KV inapplicable to family {cfg.family} (DESIGN.md §5)"
+            pqc = PQKVConfig(n_sub=args.pq_sub, codebook_size=args.pq_k,
+                             recent_window=args.pq_window,
+                             quantize_v=args.pq_quantize_v)
+            mem = pqkv_memory(cfg, pqc, args.batch, max_len)
+            # copy: the exact cache is donated by the decode loop below and
+            # PQKVCache.v would otherwise alias the donated buffer
+            pq_cache = compress_cache(
+                {"k": jnp.array(cache["k"]), "v": jnp.array(cache["v"])},
+                cfg, pqc, pos=args.prompt_len, key=key)
+            print(f"[serve] PQ-KV: exact {mem['exact_bytes']/1e6:.2f}MB -> "
+                  f"{mem['pq_bytes']/1e6:.2f}MB "
+                  f"({mem['compression']:.2f}x compression)")
+            pq_step = jax.jit(
+                lambda p, c, t, pos: pq_serve_step(p, cfg, c, t, pos, pqc=pqc),
+                donate_argnums=(1,))
+
+        # ---- decode ----
+        tok = greedy(logits)
+        out_exact, out_pq = [tok], [tok]
+        t0 = time.time()
+        pq_tok = tok
+        for g in range(args.gen - 1):
+            pos = jnp.int32(args.prompt_len + g)
+            logits, cache = step(params, cache, tok, pos)
+            tok = greedy(logits)
+            out_exact.append(tok)
+            if args.pqkv:
+                pq_logits, pq_cache = pq_step(params, pq_cache, pq_tok, pos)
+                pq_tok = greedy(pq_logits)
+                out_pq.append(pq_tok)
+        jax.block_until_ready(tok)
+        t_dec = time.time() - t0
+        toks = np.concatenate([np.asarray(t) for t in out_exact], axis=1)
+        rate = args.batch * (args.gen - 1) / max(t_dec, 1e-9)
+        print(f"[serve] decoded {args.gen - 1} steps x {args.batch} seqs in "
+              f"{t_dec:.2f}s ({rate:.1f} tok/s)")
+        print(f"[serve] sample output ids: {toks[0][:12].tolist()}")
+        if args.pqkv:
+            pq_toks = np.concatenate([np.asarray(t) for t in out_pq], axis=1)
+            agree = float((pq_toks == toks).mean())
+            print(f"[serve] PQ-KV greedy agreement with exact decode: "
+                  f"{agree:.1%}")
+
+
+if __name__ == "__main__":
+    main()

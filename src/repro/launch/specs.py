@@ -1,0 +1,76 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+Same pattern as shannon/kernels: weak-type-correct, shardable, zero device
+allocation.  ``input_specs`` returns the abstract batch for train/prefill;
+decode cells additionally get an abstract cache from ``cache_specs_abstract``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from ..configs.registry import ShapeSpec
+from ..serve.cache import init_cache
+
+__all__ = ["input_specs", "abstract_cache", "abstract_train_state",
+           "abstract_params"]
+
+_S = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Abstract model inputs for one cell."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch = {"tokens": _S((B, S), jnp.int32),
+                 "labels": _S((B, S), jnp.int32)}
+    elif shape.kind == "prefill":
+        batch = {"tokens": _S((B, S), jnp.int32)}
+    elif shape.kind == "decode":
+        return {"token": _S((B, 1), jnp.int32),
+                "pos": _S((), jnp.int32)}
+    else:
+        raise ValueError(shape.kind)
+    if cfg.family == "vlm":
+        batch["patches"] = _S((B, cfg.n_frontend_tokens, cfg.d_model),
+                              jnp.float32)
+    if cfg.family == "encdec":
+        batch["frames"] = _S((B, cfg.n_frontend_tokens, cfg.d_model),
+                             jnp.float32)
+    return batch
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeSpec):
+    """Abstract KV/state cache for decode cells (no allocation)."""
+    return jax.eval_shape(
+        functools.partial(init_cache, cfg, shape.global_batch, shape.seq_len))
+
+
+def abstract_pq_cache(cfg: ModelConfig, shape: ShapeSpec, pqc):
+    """Abstract PQ-compressed cache (books included, no allocation)."""
+    from ..serve.pqkv import init_pq_cache
+    L, G = cfg.n_layers, cfg.n_kv_heads
+    hd, M, K = cfg.head_dim_, pqc.n_sub, pqc.codebook_size
+    books = _S((L, G, M, K, hd // M), jnp.float32)
+    vbooks = books if pqc.quantize_v else None
+    return jax.eval_shape(
+        functools.partial(init_pq_cache, cfg, pqc, shape.global_batch,
+                          shape.seq_len), books, vbooks)
+
+
+def abstract_params(cfg: ModelConfig):
+    from ..train.step import model_init
+    init = model_init(cfg)
+    return jax.eval_shape(functools.partial(init, cfg=cfg),
+                          jax.random.PRNGKey(0))
+
+
+def abstract_train_state(cfg: ModelConfig):
+    from ..train.step import init_train_state
+    return jax.eval_shape(functools.partial(init_train_state, cfg=cfg),
+                          jax.random.PRNGKey(0))

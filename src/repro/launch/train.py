@@ -1,0 +1,209 @@
+"""Production training launcher.
+
+Fault-tolerance contract (designed for 1000+ node fleets, exercised here on
+the host mesh):
+
+  * checkpoint/restart — atomic step directories (write tmp + rename), keep-K
+    GC, async writer thread off the step path; on start the latest valid
+    checkpoint is restored and the data stream is fast-forwarded (data order
+    is a pure function of the step index, so restarts are bit-deterministic).
+  * preemption safety — SIGTERM/SIGINT trigger a synchronous checkpoint
+    before exit (TPU preemption notice pattern).
+  * straggler watchdog — a monitor thread flags steps exceeding
+    ``--watchdog`` seconds (on a fleet this feeds the controller that
+    re-schedules the slow host; here it logs and optionally aborts).
+  * elastic restart — checkpoints store unsharded per-leaf arrays;
+    ``restore`` re-lays them out for whatever mesh the relaunch uses, so the
+    job can resume on a different device count (e.g. after losing a pod).
+
+Usage (CPU example scale):
+    PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
+        --reduced --steps 30 --batch 8 --seq 128 --ckpt-dir /tmp/ck --ckpt-every 10
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import signal
+import sys
+import threading
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.registry import ARCH_IDS, get_config, get_reduced
+from repro.checkpoint.ckpt import AsyncCheckpointer, latest_step, restore
+from repro.data.tokens import TokenStream
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.sharding.partition import (activation_sharding, batch_specs,
+                                      dp_axes, named_shardings, param_specs)
+from repro.train.optim import AdamWConfig
+from repro.train.step import init_train_state, make_train_step
+
+
+class Watchdog:
+    """Flags steps that exceed a wall-clock budget (straggler mitigation)."""
+
+    def __init__(self, timeout_s: float, abort: bool = False):
+        self.timeout = timeout_s
+        self.abort = abort
+        self._last_beat = time.monotonic()
+        self._step = -1
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self.stragglers = 0
+
+    def beat(self, step: int):
+        self._last_beat = time.monotonic()
+        self._step = step
+
+    def _run(self):
+        while not self._stop.wait(min(self.timeout / 4, 5.0)):
+            lag = time.monotonic() - self._last_beat
+            if lag > self.timeout:
+                self.stragglers += 1
+                print(f"[watchdog] step {self._step + 1} exceeded "
+                      f"{self.timeout:.0f}s (lag {lag:.0f}s) — straggler",
+                      file=sys.stderr, flush=True)
+                if self.abort:
+                    os.kill(os.getpid(), signal.SIGTERM)
+                self._last_beat = time.monotonic()
+
+    def start(self):
+        self._thread.start()
+        return self
+
+    def stop(self):
+        self._stop.set()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU/example scale)")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--keep-last", type=int, default=3)
+    ap.add_argument("--watchdog", type=float, default=0.0,
+                    help="straggler threshold in seconds (0 = off)")
+    ap.add_argument("--watchdog-abort", action="store_true")
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="16x16 mesh (needs 256 devices)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--metrics-out", default="")
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    mesh = (make_production_mesh(multi_pod=args.multi_pod)
+            if args.production_mesh else make_host_mesh())
+    print(f"[train] arch={cfg.name} params={cfg.param_count():,} "
+          f"mesh={dict(mesh.shape)} devices={mesh.size}")
+
+    opt_cfg = AdamWConfig(lr=args.lr, total_steps=max(args.steps, 2),
+                          warmup_steps=max(2, args.steps // 10))
+    train_step = make_train_step(cfg, opt_cfg, q_chunk=min(512, args.seq),
+                                 microbatches=args.microbatches)
+
+    key = jax.random.PRNGKey(args.seed)
+    with mesh, activation_sharding(dp_axes(mesh)):
+        state = init_train_state(key, cfg)
+        rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+        p_sh = named_shardings(param_specs(state.params, mesh), mesh)
+        state_sh = type(state)(
+            step=rep, params=p_sh,
+            opt=type(state.opt)(mu=p_sh, nu=p_sh, count=rep))
+        state = jax.device_put(state, state_sh)
+
+        start_step = 0
+        ckpt = None
+        if args.ckpt_dir:
+            ckpt = AsyncCheckpointer(args.ckpt_dir, keep_last=args.keep_last)
+            last = latest_step(args.ckpt_dir)
+            if last is not None:
+                # elastic restore: stored unsharded, re-laid-out for this mesh
+                state = restore(args.ckpt_dir, last, state, shardings=state_sh)
+                start_step = last
+                print(f"[train] restored step {last} from {args.ckpt_dir}")
+
+        stream = TokenStream(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                             batch=args.batch, seed=args.seed)
+        jstep = jax.jit(train_step, donate_argnums=(0,))
+
+        dog = Watchdog(args.watchdog, args.watchdog_abort).start() \
+            if args.watchdog else None
+
+        stop_requested = {"flag": False}
+
+        def _graceful(signum, frame):                     # noqa: ARG001
+            stop_requested["flag"] = True
+            print(f"[train] signal {signum}: checkpoint + exit after this "
+                  "step", flush=True)
+
+        old_handlers = [(s, signal.signal(s, _graceful))
+                        for s in (signal.SIGTERM, signal.SIGINT)]
+
+        metrics_f = open(args.metrics_out, "a") if args.metrics_out else None
+        t_start = time.time()
+        step = start_step
+        try:
+            for step in range(start_step, args.steps):
+                if dog:
+                    dog.beat(step)
+                batch = {k: jax.numpy.asarray(v)
+                         for k, v in stream.batch_at(step).items()}
+                if cfg.family == "encdec":
+                    batch["frames"] = jax.numpy.asarray(
+                        np.random.default_rng(step).standard_normal(
+                            (args.batch, cfg.n_frontend_tokens, cfg.d_model),
+                            dtype=np.float32))
+                if cfg.family == "vlm":
+                    batch["patches"] = jax.numpy.asarray(
+                        np.random.default_rng(step).standard_normal(
+                            (args.batch, cfg.n_frontend_tokens, cfg.d_model),
+                            dtype=np.float32))
+                t0 = time.time()
+                state, metrics = jstep(state, batch)
+                loss = float(metrics["loss"])
+                dt = time.time() - t0
+                rec = {"step": step + 1, "loss": round(loss, 4),
+                       "ce": round(float(metrics["ce"]), 4),
+                       "sec": round(dt, 3)}
+                print(f"[train] {json.dumps(rec)}", flush=True)
+                if metrics_f:
+                    metrics_f.write(json.dumps(rec) + "\n")
+                    metrics_f.flush()
+                if not np.isfinite(loss):
+                    raise FloatingPointError(f"loss diverged at step {step+1}")
+                done = step + 1
+                if ckpt and (done % args.ckpt_every == 0
+                             or done == args.steps or stop_requested["flag"]):
+                    ckpt.submit(done, state)
+                if stop_requested["flag"]:
+                    break
+        finally:
+            if dog:
+                dog.stop()
+            if ckpt:
+                ckpt.wait()
+                ckpt.close()
+            if metrics_f:
+                metrics_f.close()
+            for s, h in old_handlers:
+                signal.signal(s, h)
+        wall = time.time() - t_start
+        print(f"[train] finished at step {step + 1} in {wall:.1f}s"
+              + (" (preempted)" if stop_requested["flag"] else ""))
+
+
+if __name__ == "__main__":
+    main()

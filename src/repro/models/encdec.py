@@ -1,0 +1,155 @@
+"""Encoder-decoder backbone (seamless-m4t style).
+
+The speech frontend is a stub: the encoder consumes precomputed frame
+embeddings ``(B, S_frames, d_model)`` (assignment spec).  Encoder blocks are
+bidirectional; decoder blocks add cross-attention to the encoder output.
+Cross-attention queries use position 0 rope tables (identity rotation), and
+cross K/V are built without rope, the usual enc-dec convention.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (AttnParams, MlpParams, _dot, apply_rope, attention,
+                     init_attn, init_mlp, mlp, rms_norm, rotary)
+from .lm import logits_from_hidden
+from ..sharding.partition import constrain_batch
+
+__all__ = ["EncBlock", "DecBlock", "EncDecParams", "init_params_encdec",
+           "forward_encdec", "encode_frames", "cross_kv"]
+
+
+class EncBlock(NamedTuple):
+    ln1: jnp.ndarray
+    attn: AttnParams
+    ln2: jnp.ndarray
+    mlp: MlpParams
+
+
+class DecBlock(NamedTuple):
+    ln1: jnp.ndarray
+    self_attn: AttnParams
+    ln_x: jnp.ndarray
+    cross_attn: AttnParams
+    ln2: jnp.ndarray
+    mlp: MlpParams
+
+
+class EncDecParams(NamedTuple):
+    embed: jnp.ndarray          # (Vp, d) decoder token embeddings
+    frame_proj: jnp.ndarray     # (d, d) frontend-stub projection
+    enc_blocks: Any             # stacked EncBlock
+    enc_norm: jnp.ndarray
+    dec_blocks: Any             # stacked DecBlock
+    final_norm: jnp.ndarray
+    lm_head: Optional[jnp.ndarray]
+    # lm.logits_from_hidden compatibility
+    patch_proj: Optional[jnp.ndarray] = None
+
+
+def _zeros_d(cfg):
+    return jnp.zeros((cfg.d_model,), jnp.float32)
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params_encdec(key: jax.Array, cfg: ModelConfig) -> EncDecParams:
+    keys = jax.random.split(key, cfg.n_enc_layers + cfg.n_layers + 3)
+    Vp, d = cfg.padded_vocab, cfg.d_model
+
+    def enc(i):
+        k1, k2 = jax.random.split(keys[i])
+        return EncBlock(ln1=_zeros_d(cfg), attn=init_attn(k1, cfg),
+                        ln2=_zeros_d(cfg), mlp=init_mlp(k2, d, cfg.d_ff))
+
+    def dec(i):
+        k1, k2, k3 = jax.random.split(keys[cfg.n_enc_layers + i], 3)
+        return DecBlock(ln1=_zeros_d(cfg), self_attn=init_attn(k1, cfg),
+                        ln_x=_zeros_d(cfg), cross_attn=init_attn(k2, cfg),
+                        ln2=_zeros_d(cfg), mlp=init_mlp(k3, d, cfg.d_ff))
+
+    return EncDecParams(
+        embed=jax.random.normal(keys[-1], (Vp, d), jnp.float32) * 0.02,
+        frame_proj=jax.random.normal(keys[-2], (d, d), jnp.float32) * 0.02,
+        enc_blocks=_stack([enc(i) for i in range(cfg.n_enc_layers)]),
+        enc_norm=_zeros_d(cfg),
+        dec_blocks=_stack([dec(i) for i in range(cfg.n_layers)]),
+        final_norm=_zeros_d(cfg),
+        lm_head=jax.random.normal(keys[-3], (Vp, d), jnp.float32) * 0.02)
+
+
+def encode_frames(params: EncDecParams, cfg: ModelConfig,
+                  frames: jnp.ndarray, *, q_chunk: int = 512,
+                  remat: bool = True) -> jnp.ndarray:
+    """Bidirectional encoder over frontend-stub frames ``(B, Sf, d)``."""
+    x = jnp.einsum("bfd,de->bfe", frames.astype(jnp.bfloat16),
+                   params.frame_proj.astype(jnp.bfloat16),
+                   preferred_element_type=jnp.float32).astype(jnp.bfloat16)
+    B, Sf, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(Sf, dtype=jnp.int32)[None], (B, Sf))
+    cos_sin = rotary(positions, cfg.head_dim_, cfg.rope_theta)
+
+    def body(h, blk):
+        h = constrain_batch(h)
+        a = attention(blk.attn, cfg, rms_norm(h, blk.ln1, cfg.norm_eps),
+                      positions, causal=False, q_chunk=q_chunk,
+                      cos_sin=cos_sin)
+        h = h + a
+        return constrain_batch(
+            h + mlp(blk.mlp, rms_norm(h, blk.ln2, cfg.norm_eps), cfg.act)), None
+
+    body = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body, x, params.enc_blocks)
+    return rms_norm(x, params.enc_norm, cfg.norm_eps)
+
+
+def cross_kv(blk_cross: AttnParams, cfg: ModelConfig, enc_out: jnp.ndarray):
+    """Per-layer cross-attention K/V from encoder output (no rope)."""
+    B, Sf, _ = enc_out.shape
+    G, hd = cfg.n_kv_heads, cfg.head_dim_
+    k = _dot(enc_out, blk_cross.wk, blk_cross.bk).reshape(B, Sf, G, hd)
+    v = _dot(enc_out, blk_cross.wv, blk_cross.bv).reshape(B, Sf, G, hd)
+    return k, v
+
+
+def forward_encdec(params: EncDecParams, cfg: ModelConfig, batch, *,
+                   q_chunk: int = 512, remat: bool = True,
+                   return_hidden: bool = False) -> jnp.ndarray:
+    """``batch = {frames (B, Sf, d), tokens (B, S)}`` -> logits (B, S, Vp)."""
+    enc_out = encode_frames(params, cfg, batch["frames"], q_chunk=q_chunk,
+                            remat=remat)
+    B, Sf, _ = enc_out.shape
+    tokens = batch["tokens"]
+    S = tokens.shape[1]
+    x = params.embed[tokens].astype(jnp.bfloat16)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    cos_sin = rotary(positions, cfg.head_dim_, cfg.rope_theta)
+    zero_pos = jnp.zeros_like(positions)
+    zero_cos_sin = rotary(zero_pos, cfg.head_dim_, cfg.rope_theta)
+    kv_mask = jnp.ones((B, Sf), bool)
+
+    def body(h, blk):
+        h = constrain_batch(h)
+        a = attention(blk.self_attn, cfg, rms_norm(h, blk.ln1, cfg.norm_eps),
+                      positions, causal=True, q_chunk=q_chunk, cos_sin=cos_sin)
+        h = h + a
+        k, v = cross_kv(blk.cross_attn, cfg, enc_out)
+        c = attention(blk.cross_attn, cfg, rms_norm(h, blk.ln_x, cfg.norm_eps),
+                      zero_pos, causal=False, q_chunk=q_chunk,
+                      cos_sin=zero_cos_sin, kv_override=(k, v, kv_mask))
+        h = h + c
+        return constrain_batch(
+            h + mlp(blk.mlp, rms_norm(h, blk.ln2, cfg.norm_eps), cfg.act)), None
+
+    body = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body, x, params.dec_blocks)
+    if return_hidden:
+        return x
+    return logits_from_hidden(params, cfg, x)

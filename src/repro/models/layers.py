@@ -1,0 +1,406 @@
+"""Transformer building blocks — pure-JAX, pytree params, shape-static.
+
+Conventions:
+  * params are float32 pytrees; matmuls run in bfloat16 with float32
+    accumulation (``preferred_element_type``); norms/softmax in float32.
+  * attention activations use the GQA layout (B, S, G, R, hd) so the
+    head-group structure is visible to the SPMD partitioner.
+  * prefill attention is query-chunked (`lax.scan` over chunks) with the
+    full score block materialised per chunk — bounded VMEM/HBM per step and
+    a natural remat boundary for 32k-token prefill.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+__all__ = ["rms_norm", "rotary", "apply_rope", "mrope_positions",
+           "attention", "attention_decode", "mlp", "moe", "init_attn",
+           "init_mlp", "init_moe", "softcap"]
+
+_NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations / rope
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """RMS norm: f32 variance reduction, bf16 normalization multiply.
+
+    Keeping the full-width elementwise ops in the input dtype means no
+    (B, S, d) f32 activation ever exists — XLA was hoisting the f32 cast
+    into the remat save buffer, doubling per-layer saved-residual memory
+    (10.7 GB/device on qwen2-72b train_4k; EXPERIMENTS.md §Perf B3)."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)       # (B, S, 1), tiny
+    return x * inv * (1.0 + scale.astype(x.dtype))
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    """Gemma-2 style logit soft-capping: cap * tanh(x / cap)."""
+    if cap <= 0.0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def _act(x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(kind)
+
+
+def rotary(positions: jnp.ndarray, head_dim: int, theta: float
+           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables: ``positions (..., S)`` -> ``(..., S, hd/2)`` each."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """``x (B, S, ..., hd)`` rotated by position tables ``(B, S, hd/2)``."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    # broadcast cos/sin over the head axes between S and hd
+    extra = x.ndim - cos.ndim
+    for _ in range(extra):
+        cos = cos[..., None, :]
+        sin = sin[..., None, :]
+    xf1 = x1.astype(jnp.float32)
+    xf2 = x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin,
+                           xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope_positions(text_positions: jnp.ndarray, n_frontend: int,
+                    sections: Tuple[int, ...]) -> jnp.ndarray:
+    """Qwen2-VL M-RoPE position ids ``(3, B, S)`` for (t, h, w).
+
+    The first ``n_frontend`` positions are vision patches laid out on an
+    (h, w) grid with constant t; text positions advance all three equally.
+    """
+    B, S = text_positions.shape
+    side = max(1, int(n_frontend ** 0.5))
+    pos = text_positions
+    idx = jnp.arange(S)
+    is_patch = idx < n_frontend
+    h_grid = jnp.where(is_patch, idx // side, pos[0] if B else idx)
+    t = jnp.where(is_patch[None, :], 0, pos)
+    h = jnp.where(is_patch[None, :], (idx // side)[None, :], pos)
+    w = jnp.where(is_patch[None, :], (idx % side)[None, :], pos)
+    del h_grid
+    return jnp.stack([t, h, w])
+
+
+def _mrope_tables(mpos: jnp.ndarray, head_dim: int, theta: float,
+                  sections: Tuple[int, ...]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sectioned rope tables from ``mpos (3, B, S)`` -> ``(B, S, hd/2)``."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = mpos.astype(jnp.float32)[..., None] * freqs     # (3, B, S, half)
+    sec = jnp.cumsum(jnp.asarray((0,) + tuple(sections)))
+    which = jnp.searchsorted(sec[1:], jnp.arange(half), side="right")
+    which = jnp.clip(which, 0, 2)
+    picked = jnp.take_along_axis(
+        ang, which[None, None, None, :].astype(jnp.int32), axis=0)[0]
+    return jnp.cos(picked), jnp.sin(picked)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+class AttnParams(NamedTuple):
+    wq: jnp.ndarray            # (d, H*hd)
+    wk: jnp.ndarray            # (d, G*hd)
+    wv: jnp.ndarray            # (d, G*hd)
+    wo: jnp.ndarray            # (H*hd, d)
+    bq: Optional[jnp.ndarray]  # (H*hd,) or None
+    bk: Optional[jnp.ndarray]
+    bv: Optional[jnp.ndarray]
+
+
+def init_attn(key: jax.Array, cfg: ModelConfig, d_in: Optional[int] = None
+              ) -> AttnParams:
+    d = d_in or cfg.d_model
+    hd, H, G = cfg.head_dim_, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    sc = 0.02
+    bias = (lambda n: jnp.zeros((n,), jnp.float32)) if cfg.qkv_bias else (lambda n: None)
+    return AttnParams(
+        wq=jax.random.normal(ks[0], (d, H * hd), jnp.float32) * sc,
+        wk=jax.random.normal(ks[1], (d, G * hd), jnp.float32) * sc,
+        wv=jax.random.normal(ks[2], (d, G * hd), jnp.float32) * sc,
+        wo=jax.random.normal(ks[3], (H * hd, d), jnp.float32) * sc,
+        bq=bias(H * hd), bk=bias(G * hd), bv=bias(G * hd))
+
+
+def _dot(x, w, bias=None, preferred=jnp.bfloat16):
+    """bf16 matmul.  ``preferred`` bf16 keeps partial sums bf16 so the TP
+    all-reduce of row-parallel outputs (wo / w_down / MoE combine) moves
+    half the bytes — each shard's matmul still accumulates in f32 on the
+    MXU; only the cross-shard combine is bf16 (Megatron convention).
+    Pass ``preferred=jnp.float32`` where full precision matters (router)."""
+    y = jax.lax.dot_general(x.astype(jnp.bfloat16), w.astype(jnp.bfloat16),
+                            (((x.ndim - 1,), (0,)), ((), ())),
+                            preferred_element_type=preferred)
+    if bias is not None:
+        y = y + bias
+    return y.astype(jnp.bfloat16)
+
+
+def _qkv(p: AttnParams, cfg: ModelConfig, x: jnp.ndarray,
+         cos, sin) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    B, S, _ = x.shape
+    hd, H, G = cfg.head_dim_, cfg.n_heads, cfg.n_kv_heads
+    R = H // G
+    q = _dot(x, p.wq, p.bq).reshape(B, S, G, R, hd)
+    k = _dot(x, p.wk, p.bk).reshape(B, S, G, hd)
+    v = _dot(x, p.wv, p.bv).reshape(B, S, G, hd)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _attend_block(q_blk, k, v, *, scale, cap, mask):
+    """``q_blk (B, Qc, G, R, hd)``, ``k/v (B, S, G, hd)``, ``mask (Qc, S)``
+    or ``(B, Qc, S)`` -> ``(B, Qc, G, R, hd)``."""
+    scores = jnp.einsum("bqgrh,bkgh->bgrqk", q_blk.astype(jnp.bfloat16),
+                        k.astype(jnp.bfloat16),
+                        preferred_element_type=jnp.float32) * scale
+    scores = softcap(scores, cap)
+    if mask.ndim == 2:
+        mask_b = mask[None, None, None]
+    else:
+        mask_b = mask[:, None, None]
+    scores = jnp.where(mask_b, scores, _NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(jnp.bfloat16)
+    # bf16 partial sums: the decode-time seq-sharded contraction all-reduces
+    # in bf16 (within-shard accumulation is still f32 on the MXU)
+    return jnp.einsum("bgrqk,bkgh->bqgrh", p, v.astype(jnp.bfloat16),
+                      preferred_element_type=jnp.bfloat16)
+
+
+def attention(p: AttnParams, cfg: ModelConfig, x: jnp.ndarray,
+              positions: jnp.ndarray, *, causal: bool = True,
+              window: int = 0, q_chunk: int = 512,
+              cos_sin: Optional[Tuple] = None,
+              kv_override: Optional[Tuple] = None) -> jnp.ndarray:
+    """Full-sequence attention (training / prefill), query-chunked.
+
+    ``window > 0`` restricts to a sliding window (gemma2 local layers).
+    ``kv_override=(k, v, kv_mask)`` implements cross-attention: K/V come
+    from the encoder instead of ``x`` (rope skipped on overridden K).
+    """
+    B, S, _ = x.shape
+    hd = cfg.head_dim_
+    scale = hd ** -0.5
+    if cos_sin is None:
+        cos, sin = rotary(positions, hd, cfg.rope_theta)
+    else:
+        cos, sin = cos_sin
+
+    if kv_override is None:
+        q, k, v = _qkv(p, cfg, x, cos, sin)
+        Sk = S
+        kv_mask = None
+    else:
+        G = cfg.n_kv_heads
+        R = cfg.n_heads // G
+        q = _dot(x, p.wq, p.bq).reshape(B, S, G, R, hd)
+        q = apply_rope(q, cos, sin)
+        k, v, kv_mask = kv_override
+        Sk = k.shape[1]
+
+    nc = S // q_chunk if (S % q_chunk == 0 and S > q_chunk) else 1
+    qc = S // nc
+    kpos = jnp.arange(Sk)
+
+    def chunk(start):
+        q_blk = jax.lax.dynamic_slice_in_dim(q, start * qc, qc, axis=1)
+        qpos = start * qc + jnp.arange(qc)
+        if causal:
+            mask = kpos[None, :] <= qpos[:, None]
+            if window > 0:
+                mask &= kpos[None, :] > (qpos[:, None] - window)
+        else:
+            mask = jnp.ones((qc, Sk), bool)
+        if kv_mask is not None:
+            mask = mask[None] & kv_mask[:, None, :]
+        return _attend_block(q_blk, k, v, scale=scale,
+                             cap=cfg.attn_softcap, mask=mask)
+
+    if nc == 1:
+        out = chunk(jnp.int32(0))
+    else:
+        _, outs = jax.lax.scan(lambda c, i: (c, chunk(i)), 0, jnp.arange(nc))
+        moved = jnp.moveaxis(outs, 0, 1)          # (B, nc, qc, G, R, hd)
+        out = moved.reshape(B, nc * qc, *moved.shape[3:])
+    out = out.reshape(B, S, cfg.n_heads * hd)
+    return _dot(out, p.wo)
+
+
+def attention_decode(p: AttnParams, cfg: ModelConfig, x: jnp.ndarray,
+                     k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     pos: jnp.ndarray, *, window: int = 0,
+                     update_cache: bool = True,
+                     cos_sin: Optional[Tuple] = None
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode: ``x (B, 1, d)``; caches ``(B, Smax, G, hd)``.
+
+    Returns (out (B, 1, d), new_k_cache, new_v_cache).  ``update_cache=False``
+    reads without writing (cross-attention decode).
+    """
+    B, _, _ = x.shape
+    hd, H, G = cfg.head_dim_, cfg.n_heads, cfg.n_kv_heads
+    R = H // G
+    Smax = k_cache.shape[1]
+    scale = hd ** -0.5
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    if cos_sin is None:
+        cos, sin = rotary(positions, hd, cfg.rope_theta)
+    else:
+        cos, sin = cos_sin
+
+    q = _dot(x, p.wq, p.bq).reshape(B, 1, G, R, hd)
+    q = apply_rope(q, cos, sin)
+    if update_cache:
+        k_new = _dot(x, p.wk, p.bk).reshape(B, 1, G, hd)
+        v_new = _dot(x, p.wv, p.bv).reshape(B, 1, G, hd)
+        k_new = apply_rope(k_new, cos, sin)
+        # one-hot select instead of dynamic-update-slice: a DUS at a runtime
+        # position on the model-sharded seq axis makes SPMD all-gather the
+        # cache every layer (EXPERIMENTS.md §Perf C1); the select is
+        # shard-local and aliases the donated cache buffer.
+        write = (jnp.arange(Smax) == pos)[None, :, None, None]
+        k_cache = jnp.where(write, k_new.astype(k_cache.dtype), k_cache)
+        v_cache = jnp.where(write, v_new.astype(v_cache.dtype), v_cache)
+
+    kpos = jnp.arange(Smax)
+    mask = kpos <= pos
+    if window > 0:
+        mask &= kpos > (pos - window)
+    out = _attend_block(q, k_cache, v_cache, scale=scale,
+                        cap=cfg.attn_softcap, mask=mask[None, :])
+    out = out.reshape(B, 1, H * hd)
+    return _dot(out, p.wo), k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+class MlpParams(NamedTuple):
+    w_gate: jnp.ndarray   # (d, f)
+    w_up: jnp.ndarray     # (d, f)
+    w_down: jnp.ndarray   # (f, d)
+
+
+def init_mlp(key: jax.Array, d: int, f: int) -> MlpParams:
+    ks = jax.random.split(key, 3)
+    sc = 0.02
+    return MlpParams(
+        w_gate=jax.random.normal(ks[0], (d, f), jnp.float32) * sc,
+        w_up=jax.random.normal(ks[1], (d, f), jnp.float32) * sc,
+        w_down=jax.random.normal(ks[2], (f, d), jnp.float32) * sc)
+
+
+def mlp(p: MlpParams, x: jnp.ndarray, act: str = "silu") -> jnp.ndarray:
+    g = _act(_dot(x, p.w_gate).astype(jnp.float32), act).astype(jnp.bfloat16)
+    u = _dot(x, p.w_up)
+    return _dot(g * u, p.w_down)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (top-k routing, capacity drop, optional shared experts)
+# ---------------------------------------------------------------------------
+
+class MoeParams(NamedTuple):
+    router: jnp.ndarray              # (d, E)
+    we_gate: jnp.ndarray             # (E, d, f)
+    we_up: jnp.ndarray               # (E, d, f)
+    we_down: jnp.ndarray             # (E, f, d)
+    shared: Optional[MlpParams]      # fused shared experts or None
+
+
+def init_moe(key: jax.Array, cfg: ModelConfig) -> MoeParams:
+    d, f, E = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    sc = 0.02
+    shared = None
+    if cfg.n_shared_experts:
+        shared = init_mlp(ks[4], d, f * cfg.n_shared_experts)
+    return MoeParams(
+        router=jax.random.normal(ks[0], (d, E), jnp.float32) * sc,
+        we_gate=jax.random.normal(ks[1], (E, d, f), jnp.float32) * sc,
+        we_up=jax.random.normal(ks[2], (E, d, f), jnp.float32) * sc,
+        we_down=jax.random.normal(ks[3], (E, f, d), jnp.float32) * sc,
+        shared=shared)
+
+
+def moe(p: MoeParams, cfg: ModelConfig, x: jnp.ndarray,
+        capacity_factor: float = 1.25) -> jnp.ndarray:
+    """Top-k routed experts with static per-expert capacity.
+
+    Dispatch = per-expert top-C token selection (gather), compute = grouped
+    einsum over the expert axis (EP-shardable), combine = scatter-add.
+    FLOPs scale with *active* experts only — honest MoE roofline.
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.n_active_experts
+    T = B * S
+    xf = x.reshape(T, d)
+
+    logits = _dot(xf, p.router, preferred=jnp.float32
+                  ).astype(jnp.float32)                    # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)                 # (T, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # sparse routing matrix (T, E): weight where routed, else 0
+    W = jnp.zeros((T, E), jnp.float32)
+    W = W.at[jnp.arange(T)[:, None], top_i].set(top_w)
+
+    C = max(8, int(-(-k * T * capacity_factor // E) // 8 * 8))
+    C = min(C, T)
+    w_ec, tok_ec = jax.lax.top_k(W.T, C)                   # (E, C) each
+
+    # expert-parallel layout: experts (E) on the model axis, capacity (C)
+    # on the DP axes — without the C constraint every DP shard runs the
+    # SAME expert matmuls and their grads all-reduce over data
+    # (EXPERIMENTS.md §Perf A3: 0.9 TB/device of (E,C,f) grad collectives).
+    from ..sharding.partition import constrain_dims
+    w_ec = constrain_dims(w_ec, {0: "model", 1: "dp"})
+    tok_ec = constrain_dims(tok_ec, {0: "model", 1: "dp"})
+
+    xg = xf[tok_ec.reshape(-1)].reshape(E, C, d)           # gather
+    xg = constrain_dims(xg.astype(jnp.bfloat16),
+                        {0: "model", 1: "dp"})
+    g = jnp.einsum("ecd,edf->ecf", xg, p.we_gate.astype(jnp.bfloat16),
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", xg, p.we_up.astype(jnp.bfloat16),
+                   preferred_element_type=jnp.float32)
+    h = (_act(g, cfg.act) * u).astype(jnp.bfloat16)
+    y = jnp.einsum("ecf,efd->ecd", h, p.we_down.astype(jnp.bfloat16),
+                   preferred_element_type=jnp.bfloat16)    # (E, C, d)
+
+    y = y * w_ec[..., None].astype(jnp.bfloat16)
+    # bf16 combine: the cross-expert-shard all-reduce of the (T, d) scatter
+    # output moves half the bytes; <= top-k partials summed per token.
+    out = jnp.zeros((T, d), jnp.bfloat16)
+    out = out.at[tok_ec.reshape(-1)].add(y.reshape(-1, d))
+
+    if p.shared is not None:
+        out = out + mlp(p.shared, xf.astype(jnp.bfloat16), cfg.act)
+    return out.reshape(B, S, d)

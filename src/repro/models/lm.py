@@ -1,0 +1,268 @@
+"""Decoder-only LM assembly for every assigned family.
+
+All repeated layers are ``lax.scan``-stacked (params carry a leading layer
+axis) so the lowered HLO contains ONE block body per block type regardless
+of depth — critical for 80-layer archs and for dry-run compile times.
+
+Families:
+  dense    — [pre-norm attn + SwiGLU] x L; gemma2 adds sandwich norms,
+             softcaps and local/global alternation (scanned in pairs).
+  moe      — attention + top-k routed experts (+ optional shared experts).
+  ssm      — Mamba2 SSD blocks, attention-free.
+  hybrid   — Mamba2 backbone; ONE weight-tied attention block applied before
+             every ``attn_every`` SSM blocks (zamba2-style).
+  vlm      — dense backbone + patch-embedding stub + M-RoPE positions.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (AttnParams, MlpParams, MoeParams, apply_rope, attention,
+                     init_attn, init_mlp, init_moe, mlp, moe, mrope_positions,
+                     _mrope_tables, rms_norm, rotary, softcap)
+from .ssm import SsmParams, init_ssm, ssd_forward
+from ..sharding.partition import constrain_batch
+
+__all__ = ["LmParams", "DenseBlock", "MoeBlock", "SsmBlock", "init_params",
+           "forward", "logits_from_hidden"]
+
+
+class DenseBlock(NamedTuple):
+    ln1: jnp.ndarray
+    attn: AttnParams
+    post_attn_ln: Optional[jnp.ndarray]   # gemma2 sandwich norm
+    ln2: jnp.ndarray
+    mlp: MlpParams
+    post_mlp_ln: Optional[jnp.ndarray]
+
+
+class MoeBlock(NamedTuple):
+    ln1: jnp.ndarray
+    attn: AttnParams
+    ln2: jnp.ndarray
+    moe: MoeParams
+
+
+class SsmBlock(NamedTuple):
+    ln: jnp.ndarray
+    ssm: SsmParams
+
+
+class LmParams(NamedTuple):
+    embed: jnp.ndarray                     # (Vp, d)
+    blocks: Any                            # scan-stacked block params
+    shared_attn: Optional[DenseBlock]      # hybrid only (weight-tied)
+    final_norm: jnp.ndarray                # (d,)
+    lm_head: Optional[jnp.ndarray]         # (Vp, d); None when tied
+    patch_proj: Optional[jnp.ndarray]      # (d, d) vlm stub projection
+
+
+def _zeros_d(cfg):
+    return jnp.zeros((cfg.d_model,), jnp.float32)
+
+
+def _init_dense_block(key, cfg: ModelConfig, sandwich: bool) -> DenseBlock:
+    k1, k2 = jax.random.split(key)
+    return DenseBlock(
+        ln1=_zeros_d(cfg), attn=init_attn(k1, cfg),
+        post_attn_ln=_zeros_d(cfg) if sandwich else None,
+        ln2=_zeros_d(cfg),
+        mlp=init_mlp(k2, cfg.d_model, cfg.d_ff),
+        post_mlp_ln=_zeros_d(cfg) if sandwich else None)
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> LmParams:
+    """Real initialization (reduced configs / examples).  Dry-runs use
+    ``jax.eval_shape(init_params, ...)`` so nothing is allocated."""
+    keys = jax.random.split(key, cfg.n_layers + 4)
+    Vp, d = cfg.padded_vocab, cfg.d_model
+    embed = jax.random.normal(keys[-1], (Vp, d), jnp.float32) * 0.02
+    lm_head = None if cfg.tie_embeddings else (
+        jax.random.normal(keys[-2], (Vp, d), jnp.float32) * 0.02)
+    patch_proj = None
+    if cfg.family == "vlm":
+        patch_proj = jax.random.normal(keys[-3], (d, d), jnp.float32) * 0.02
+    shared_attn = None
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        sandwich = cfg.local_global          # gemma2
+        blocks = _stack([_init_dense_block(keys[i], cfg, sandwich)
+                         for i in range(cfg.n_layers)])
+        if cfg.local_global:                 # regroup into (L/2, 2) pairs
+            blocks = jax.tree.map(
+                lambda x: x.reshape(cfg.n_layers // 2, 2, *x.shape[1:]),
+                blocks)
+    elif fam == "moe":
+        def mk(i):
+            k1, k2 = jax.random.split(keys[i])
+            return MoeBlock(ln1=_zeros_d(cfg), attn=init_attn(k1, cfg),
+                            ln2=_zeros_d(cfg), moe=init_moe(k2, cfg))
+        blocks = _stack([mk(i) for i in range(cfg.n_layers)])
+    elif fam == "ssm":
+        blocks = _stack([SsmBlock(ln=_zeros_d(cfg), ssm=init_ssm(keys[i], cfg))
+                         for i in range(cfg.n_layers)])
+    elif fam == "hybrid":
+        n_groups = cfg.n_layers // cfg.attn_every
+        blocks = _stack([SsmBlock(ln=_zeros_d(cfg), ssm=init_ssm(keys[i], cfg))
+                         for i in range(cfg.n_layers)])
+        blocks = jax.tree.map(
+            lambda x: x.reshape(n_groups, cfg.attn_every, *x.shape[1:]),
+            blocks)
+        shared_attn = _init_dense_block(keys[-4], cfg, sandwich=False)
+    else:
+        raise ValueError(f"init_params: family {fam!r} (encdec lives in "
+                         "repro.models.encdec)")
+    return LmParams(embed=embed, blocks=blocks, shared_attn=shared_attn,
+                    final_norm=_zeros_d(cfg), lm_head=lm_head,
+                    patch_proj=patch_proj)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _dense_block_apply(blk: DenseBlock, cfg: ModelConfig, h, positions,
+                       cos_sin, *, window: int, q_chunk: int):
+    h = constrain_batch(h)
+    a = attention(blk.attn, cfg, rms_norm(h, blk.ln1, cfg.norm_eps),
+                  positions, causal=True, window=window, q_chunk=q_chunk,
+                  cos_sin=cos_sin)
+    if blk.post_attn_ln is not None:
+        a = rms_norm(a, blk.post_attn_ln, cfg.norm_eps)
+    h = h + a
+    m = mlp(blk.mlp, rms_norm(h, blk.ln2, cfg.norm_eps), cfg.act)
+    if blk.post_mlp_ln is not None:
+        m = rms_norm(m, blk.post_mlp_ln, cfg.norm_eps)
+    return constrain_batch(h + m)
+
+
+def _moe_block_apply(blk: MoeBlock, cfg: ModelConfig, h, positions, cos_sin,
+                     *, q_chunk: int):
+    h = constrain_batch(h)
+    a = attention(blk.attn, cfg, rms_norm(h, blk.ln1, cfg.norm_eps),
+                  positions, causal=True, q_chunk=q_chunk, cos_sin=cos_sin)
+    h = h + a
+    return constrain_batch(
+        h + moe(blk.moe, cfg, rms_norm(h, blk.ln2, cfg.norm_eps)))
+
+
+def _ssm_block_apply(blk: SsmBlock, cfg: ModelConfig, h, *, chunk: int = 128):
+    h = constrain_batch(h)
+    return constrain_batch(
+        h + ssd_forward(blk.ssm, cfg, rms_norm(h, blk.ln, cfg.norm_eps),
+                        chunk=chunk))
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _embed(params: LmParams, cfg: ModelConfig, batch) -> jnp.ndarray:
+    tokens = batch["tokens"]
+    x = params.embed[tokens].astype(jnp.bfloat16)
+    if cfg.local_global:                       # gemma scales embeddings
+        x = x * jnp.bfloat16(cfg.d_model ** 0.5)
+    if cfg.family == "vlm" and "patches" in batch:
+        P = batch["patches"].shape[1]
+        proj = jnp.einsum("bpd,de->bpe", batch["patches"].astype(jnp.bfloat16),
+                          params.patch_proj.astype(jnp.bfloat16),
+                          preferred_element_type=jnp.float32
+                          ).astype(jnp.bfloat16)
+        x = jax.lax.dynamic_update_slice_in_dim(x, proj, 0, axis=1)
+    return constrain_batch(x)
+
+
+def logits_from_hidden(params: LmParams, cfg: ModelConfig,
+                       h: jnp.ndarray) -> jnp.ndarray:
+    h = rms_norm(h, params.final_norm, cfg.norm_eps)
+    head = params.embed if params.lm_head is None else params.lm_head
+    logits = jnp.einsum("bsd,vd->bsv", h.astype(jnp.bfloat16),
+                        head.astype(jnp.bfloat16),
+                        preferred_element_type=jnp.float32)
+    return softcap(logits, cfg.final_softcap)
+
+
+def forward(params: LmParams, cfg: ModelConfig, batch, *,
+            q_chunk: int = 512, remat: bool = True,
+            ssm_chunk: int = 128, return_hidden: bool = False) -> jnp.ndarray:
+    """Token logits ``(B, S, padded_vocab)`` for a full sequence.
+
+    ``return_hidden=True`` skips the LM head and returns the final hidden
+    states (prefill lowers this + a last-position projection, so the
+    (B, S, V) logits tensor is never materialised)."""
+    x = _embed(params, cfg, batch)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    hd = cfg.head_dim_ if cfg.n_heads else 0
+
+    if cfg.family == "ssm":
+        cos_sin = None
+    elif cfg.mrope:
+        mpos = mrope_positions(positions, cfg.n_frontend_tokens,
+                               cfg.mrope_sections)
+        cos_sin = _mrope_tables(mpos, hd, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        cos_sin = rotary(positions, hd, cfg.rope_theta)
+
+    fam = cfg.family
+    ckpt = (jax.checkpoint if remat else (lambda f, **kw: f))
+
+    if fam in ("dense", "vlm"):
+        if cfg.local_global:
+            def pair_body(h, blk_pair):
+                blk_l = jax.tree.map(lambda x: x[0], blk_pair)
+                blk_g = jax.tree.map(lambda x: x[1], blk_pair)
+                h = _dense_block_apply(blk_l, cfg, h, positions, cos_sin,
+                                       window=cfg.sliding_window,
+                                       q_chunk=q_chunk)
+                h = _dense_block_apply(blk_g, cfg, h, positions, cos_sin,
+                                       window=0, q_chunk=q_chunk)
+                return h, None
+            body = ckpt(pair_body)
+        else:
+            def blk_body(h, blk):
+                return _dense_block_apply(blk, cfg, h, positions, cos_sin,
+                                          window=0, q_chunk=q_chunk), None
+            body = ckpt(blk_body)
+        x, _ = jax.lax.scan(body, x, params.blocks)
+
+    elif fam == "moe":
+        def blk_body(h, blk):
+            return _moe_block_apply(blk, cfg, h, positions, cos_sin,
+                                    q_chunk=q_chunk), None
+        x, _ = jax.lax.scan(ckpt(blk_body), x, params.blocks)
+
+    elif fam == "ssm":
+        def blk_body(h, blk):
+            return _ssm_block_apply(blk, cfg, h, chunk=ssm_chunk), None
+        x, _ = jax.lax.scan(ckpt(blk_body), x, params.blocks)
+
+    elif fam == "hybrid":
+        shared = params.shared_attn
+
+        def group_body(h, group_blocks):
+            h = _dense_block_apply(shared, cfg, h, positions, cos_sin,
+                                   window=0, q_chunk=q_chunk)
+            def inner(hh, blk):
+                return _ssm_block_apply(blk, cfg, hh, chunk=ssm_chunk), None
+            h, _ = jax.lax.scan(inner, h, group_blocks)
+            return h, None
+        x, _ = jax.lax.scan(ckpt(group_body), x, params.blocks)
+
+    else:
+        raise ValueError(fam)
+
+    if return_hidden:
+        return x
+    return logits_from_hidden(params, cfg, x)

@@ -1,0 +1,205 @@
+"""Mamba2 — SSD (state-space duality) blocks, chunked-scan formulation.
+
+Shapes follow the paper: inner width ``din = expand * d_model`` split into
+``H = din / P`` heads of dim ``P``; state size ``N`` (one shared B/C group).
+
+Projections are kept *separate* (z, x, B, C, dt) rather than fused: each
+output can then be tensor-sharded on its own dimension (heads for z/x/dt,
+replicated for the small shared B/C), so the `split` never crosses shard
+boundaries — the TPU-sharding analogue of the fused-GEMM CUDA layout.
+
+Training/prefill uses the chunked SSD algorithm: a quadratic intra-chunk
+term (batched (Q, Q) matmuls — MXU work) plus an inter-chunk recurrence
+carried by ``lax.scan``.  Decode is the exact O(1) recurrence on cached
+state.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import rms_norm
+
+__all__ = ["SsmParams", "init_ssm", "ssd_forward", "ssd_decode_step",
+           "init_ssm_state"]
+
+
+class SsmParams(NamedTuple):
+    wz: jnp.ndarray         # (d, din)   gate
+    wx: jnp.ndarray         # (d, din)   ssm input
+    wB: jnp.ndarray         # (d, N)     input matrix (shared group)
+    wC: jnp.ndarray         # (d, N)     output matrix
+    wdt: jnp.ndarray        # (d, H)     timestep
+    conv_x: jnp.ndarray     # (ck, din)  depthwise causal conv
+    conv_B: jnp.ndarray     # (ck, N)
+    conv_C: jnp.ndarray     # (ck, N)
+    conv_bx: jnp.ndarray    # (din,)
+    conv_bB: jnp.ndarray    # (N,)
+    conv_bC: jnp.ndarray    # (N,)
+    a_log: jnp.ndarray      # (H,)
+    d_skip: jnp.ndarray     # (H,)
+    dt_bias: jnp.ndarray    # (H,)
+    norm: jnp.ndarray       # (din,)
+    out_proj: jnp.ndarray   # (din, d)
+
+
+def init_ssm(key: jax.Array, cfg: ModelConfig) -> SsmParams:
+    d, din, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    H, ck = cfg.ssm_heads, cfg.ssm_conv
+    ks = jax.random.split(key, 9)
+    sc = 0.02
+    n = lambda k, shape: jax.random.normal(k, shape, jnp.float32) * sc
+    return SsmParams(
+        wz=n(ks[0], (d, din)), wx=n(ks[1], (d, din)),
+        wB=n(ks[2], (d, N)), wC=n(ks[3], (d, N)), wdt=n(ks[4], (d, H)),
+        conv_x=n(ks[5], (ck, din)), conv_B=n(ks[6], (ck, N)),
+        conv_C=n(ks[7], (ck, N)),
+        conv_bx=jnp.zeros((din,), jnp.float32),
+        conv_bB=jnp.zeros((N,), jnp.float32),
+        conv_bC=jnp.zeros((N,), jnp.float32),
+        a_log=jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        d_skip=jnp.ones((H,), jnp.float32),
+        dt_bias=jnp.full((H,), -2.0, jnp.float32),
+        norm=jnp.zeros((din,), jnp.float32),
+        out_proj=n(ks[8], (din, d)))
+
+
+def _proj(x, w):
+    return jnp.einsum("btd,de->bte", x.astype(jnp.bfloat16),
+                      w.astype(jnp.bfloat16),
+                      preferred_element_type=jnp.float32)
+
+
+def _causal_conv(u: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over time: ``u (B, T, C)``, ``w (ck, C)``."""
+    ck = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (ck - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + u.shape[1], :] * w[i][None, None, :]
+              for i in range(ck))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def ssd_forward(p: SsmParams, cfg: ModelConfig, x: jnp.ndarray,
+                chunk: int = 128,
+                initial_state: Optional[jnp.ndarray] = None,
+                return_state: bool = False):
+    """Chunked SSD over a full sequence: ``x (B, T, d)`` -> ``(B, T, d)``.
+
+    Recurrence (per head h, inclusive cumsum ``cum_j = sum_{l<=j} dt_l A_h``):
+        S_j = exp(dt_j A) S_{j-1} + dt_j B_j x_j^T
+        y_j = C_j . S_j + D x_j
+    so  y_j = C_j exp(cum_j) S_prev                       [inter-chunk]
+            + sum_{l<=j} exp(cum_j - cum_l) dt_l (C_j.B_l) x_l   [intra]
+    """
+    B, T, d = x.shape
+    din, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    Q = chunk if (T % chunk == 0 and T >= chunk) else T
+    nc = T // Q
+
+    z = _proj(x, p.wz)                                           # (B,T,din)
+    xin = _causal_conv(_proj(x, p.wx), p.conv_x, p.conv_bx)
+    Bm = _causal_conv(_proj(x, p.wB), p.conv_B, p.conv_bB)       # (B,T,N)
+    Cm = _causal_conv(_proj(x, p.wC), p.conv_C, p.conv_bC)
+    dt = jax.nn.softplus(_proj(x, p.wdt).astype(jnp.float32) + p.dt_bias)
+    A = -jnp.exp(p.a_log.astype(jnp.float32))                    # (H,)
+    xh = xin.reshape(B, T, H, P).astype(jnp.float32)
+
+    dtc = dt.reshape(B, nc, Q, H)
+    dA = dtc * A
+    cum = jnp.cumsum(dA, axis=2)                                 # inclusive
+    seg_end = cum[:, :, -1]                                      # (B,nc,H)
+    Bc = Bm.reshape(B, nc, Q, N).astype(jnp.float32)
+    Cc = Cm.reshape(B, nc, Q, N).astype(jnp.float32)
+    xc = xh.reshape(B, nc, Q, H, P)
+
+    # ---- intra-chunk (batched (Q,Q) matmuls) ----
+    G = jnp.einsum("bciN,bcjN->bcij", Cc, Bc)                    # (B,nc,Q,Q)
+    Lmat = jnp.exp(jnp.clip(cum[:, :, :, None, :] - cum[:, :, None, :, :],
+                            -60.0, 0.0))                         # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    M = G[..., None] * jnp.where(tri[None, None, :, :, None], Lmat, 0.0)
+    xdt = xc * dtc[..., None]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M, xdt)
+
+    # ---- inter-chunk recurrence ----
+    decay_out = jnp.exp(jnp.clip(seg_end[:, :, None, :] - cum, -60.0, 0.0))
+    S_local = jnp.einsum("bcjh,bcjhp,bcjn->bchpn", decay_out * dtc, xc, Bc)
+
+    S0 = (jnp.zeros((B, H, P, N), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(S_prev, inp):
+        S_loc, seg, C_chunk, cum_chunk = inp
+        dec = jnp.exp(jnp.clip(cum_chunk, -60.0, 0.0))           # (B,Q,H)
+        y = jnp.einsum("bjn,bjh,bhpn->bjhp", C_chunk, dec, S_prev)
+        S_new = S_prev * jnp.exp(seg)[:, :, None, None] + S_loc
+        return S_new, y
+
+    xs = (jnp.moveaxis(S_local, 1, 0), jnp.moveaxis(seg_end, 1, 0),
+          jnp.moveaxis(Cc, 1, 0), jnp.moveaxis(cum, 1, 0))
+    S_fin, y_inter = jax.lax.scan(step, S0, xs)
+    y_inter = jnp.moveaxis(y_inter, 0, 1)
+
+    y = (y_intra + y_inter).reshape(B, T, H, P)
+    y = y + p.d_skip[None, None, :, None] * xh
+    y = y.reshape(B, T, din)
+
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(jnp.bfloat16), p.norm, cfg.norm_eps)
+    out = jnp.einsum("bte,ed->btd", y.astype(jnp.bfloat16),
+                     p.out_proj.astype(jnp.bfloat16),
+                     preferred_element_type=jnp.float32).astype(jnp.bfloat16)
+    if return_state:
+        return out, S_fin
+    return out
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int):
+    """(ssd_state, conv_x_state, conv_B_state, conv_C_state) zero caches."""
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    din, ck = cfg.d_inner, cfg.ssm_conv
+    return (jnp.zeros((batch, H, P, N), jnp.float32),
+            jnp.zeros((batch, ck - 1, din), jnp.float32),
+            jnp.zeros((batch, ck - 1, N), jnp.float32),
+            jnp.zeros((batch, ck - 1, N), jnp.float32))
+
+
+def _conv_step(state, u_new, w, b):
+    """One causal-conv step: ``state (B, ck-1, C)``, ``u_new (B, C)``."""
+    window = jnp.concatenate([state, u_new[:, None, :]], axis=1)  # (B, ck, C)
+    out = jnp.einsum("bkc,kc->bc", window, w) + b
+    return jax.nn.silu(out), window[:, 1:, :]
+
+
+def ssd_decode_step(p: SsmParams, cfg: ModelConfig, x: jnp.ndarray, state):
+    """Exact single-token recurrence: ``x (B, 1, d)`` -> (out, new_state)."""
+    B = x.shape[0]
+    din, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    S, cx, cB, cC = state
+
+    z = _proj(x, p.wz)[:, 0]                                     # (B, din)
+    xin, cx = _conv_step(cx, _proj(x, p.wx)[:, 0], p.conv_x, p.conv_bx)
+    Bm, cB = _conv_step(cB, _proj(x, p.wB)[:, 0], p.conv_B, p.conv_bB)
+    Cm, cC = _conv_step(cC, _proj(x, p.wC)[:, 0], p.conv_C, p.conv_bC)
+    dt = jax.nn.softplus(_proj(x, p.wdt)[:, 0].astype(jnp.float32) + p.dt_bias)
+    A = -jnp.exp(p.a_log.astype(jnp.float32))
+    xhead = xin.reshape(B, H, P).astype(jnp.float32)
+
+    dA = jnp.exp(dt * A)                                          # (B, H)
+    S_new = S * dA[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xhead, Bm.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", S_new, Cm.astype(jnp.float32))
+    y = y + p.d_skip[None, :, None] * xhead
+    y = y.reshape(B, 1, din)
+    y = y * jax.nn.silu(z.astype(jnp.float32))[:, None, :]
+    y = rms_norm(y.astype(jnp.bfloat16), p.norm, cfg.norm_eps)
+    out = jnp.einsum("bte,ed->btd", y.astype(jnp.bfloat16),
+                     p.out_proj.astype(jnp.bfloat16),
+                     preferred_element_type=jnp.float32).astype(jnp.bfloat16)
+    return out, (S_new, cx, cB, cC)

@@ -1,0 +1,61 @@
+"""KV / state cache construction for every family.
+
+Caches are pytrees of arrays with a leading layer (or group) axis so the
+decode step can ``lax.scan`` over layers; KV tensors are bf16.  A cache can
+optionally be PQ-compressed (the paper's technique as a serving feature) —
+see :mod:`repro.serve.pqkv`.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+
+__all__ = ["init_cache"]
+
+
+def _kv(n_layers: int, B: int, S: int, G: int, hd: int) -> Dict[str, Any]:
+    shape = (n_layers, B, S, G, hd)
+    return {"k": jnp.zeros(shape, jnp.bfloat16),
+            "v": jnp.zeros(shape, jnp.bfloat16)}
+
+
+def _ssm_states(cfg: ModelConfig, n: int, B: int) -> Dict[str, Any]:
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    din, ck = cfg.d_inner, cfg.ssm_conv
+    return {
+        "ssd": jnp.zeros((n, B, H, P, N), jnp.float32),
+        "conv_x": jnp.zeros((n, B, ck - 1, din), jnp.float32),
+        "conv_B": jnp.zeros((n, B, ck - 1, N), jnp.float32),
+        "conv_C": jnp.zeros((n, B, ck - 1, N), jnp.float32),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    """Zero-initialised cache pytree for ``serve_step``."""
+    G, hd = cfg.n_kv_heads, (cfg.head_dim_ if cfg.n_heads else 0)
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return _kv(cfg.n_layers, batch, max_len, G, hd)
+    if fam == "ssm":
+        return _ssm_states(cfg, cfg.n_layers, batch)
+    if fam == "hybrid":
+        n_groups = cfg.n_layers // cfg.attn_every
+        cache = _ssm_states(cfg, cfg.n_layers, batch)
+        # reshape SSM states into (groups, per-group) for the grouped scan
+        cache = {k: v.reshape(n_groups, cfg.attn_every, *v.shape[1:])
+                 for k, v in cache.items()}
+        cache.update({"attn_" + k: v for k, v in
+                      _kv(n_groups, batch, max_len, G, hd).items()})
+        return cache
+    if fam == "encdec":
+        cache = {"self_" + k: v for k, v in
+                 _kv(cfg.n_layers, batch, max_len, G, hd).items()}
+        Sf = cfg.n_frontend_tokens
+        cache.update({"cross_" + k: v for k, v in
+                      _kv(cfg.n_layers, batch, Sf, G, hd).items()})
+        return cache
+    raise ValueError(fam)

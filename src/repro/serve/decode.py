@@ -1,0 +1,216 @@
+"""Single-token decode (``serve_step``) for every family.
+
+``serve_step(params, cfg, cache, token, pos) -> (logits, new_cache)``
+
+The layer stack is consumed with ``lax.scan`` carrying the hidden state and
+threading per-layer cache slices through the scan outputs, so decode HLO
+contains one block body per block type.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from ..models.layers import (attention_decode, mlp, moe, rms_norm, rotary,
+                             softcap)
+from ..models.lm import LmParams, logits_from_hidden
+from ..models.encdec import EncDecParams, cross_kv, encode_frames
+from ..models.ssm import ssd_decode_step
+from ..sharding.partition import constrain_batch
+
+__all__ = ["serve_step", "prefill_cache_encdec"]
+
+
+def _tok_embed(params, cfg: ModelConfig, token: jnp.ndarray) -> jnp.ndarray:
+    x = params.embed[token].astype(jnp.bfloat16)      # (B, 1, d)
+    if cfg.local_global:
+        x = x * jnp.bfloat16(cfg.d_model ** 0.5)
+    return x
+
+
+def _dense_decode_block(blk, cfg, h, kc, vc, pos, *, window, cos_sin):
+    a, kc, vc = attention_decode(blk.attn, cfg,
+                                 rms_norm(h, blk.ln1, cfg.norm_eps),
+                                 kc, vc, pos, window=window, cos_sin=cos_sin)
+    if blk.post_attn_ln is not None:
+        a = rms_norm(a, blk.post_attn_ln, cfg.norm_eps)
+    h = h + a
+    m = mlp(blk.mlp, rms_norm(h, blk.ln2, cfg.norm_eps), cfg.act)
+    if blk.post_mlp_ln is not None:
+        m = rms_norm(m, blk.post_mlp_ln, cfg.norm_eps)
+    return h + m, kc, vc
+
+
+def serve_step(params, cfg: ModelConfig, cache: Dict[str, Any],
+               token: jnp.ndarray, pos) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """``token (B, 1)`` int32, ``pos`` scalar int32 (current write index)."""
+    fam = cfg.family
+    pos = jnp.asarray(pos, jnp.int32)
+    if fam in ("dense", "moe", "vlm"):
+        return _serve_decoder(params, cfg, cache, token, pos)
+    if fam == "ssm":
+        return _serve_ssm(params, cfg, cache, token)
+    if fam == "hybrid":
+        return _serve_hybrid(params, cfg, cache, token, pos)
+    if fam == "encdec":
+        return _serve_encdec(params, cfg, cache, token, pos)
+    raise ValueError(fam)
+
+
+def _decode_cos_sin(cfg, B, pos):
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    return rotary(positions, cfg.head_dim_, cfg.rope_theta)
+
+
+def _serve_decoder(params: LmParams, cfg, cache, token, pos):
+    B = token.shape[0]
+    x = constrain_batch(_tok_embed(params, cfg, token))
+    cos_sin = _decode_cos_sin(cfg, B, pos)
+
+    if cfg.local_global:
+        # blocks stacked as (L/2, 2, ...); caches as (L, ...): regroup
+        L = cfg.n_layers
+        kc = cache["k"].reshape(L // 2, 2, *cache["k"].shape[1:])
+        vc = cache["v"].reshape(L // 2, 2, *cache["v"].shape[1:])
+
+        def body(h, inp):
+            h = constrain_batch(h)
+            blk_pair, kc2, vc2 = inp
+            blk_l = jax.tree.map(lambda t: t[0], blk_pair)
+            blk_g = jax.tree.map(lambda t: t[1], blk_pair)
+            h, k0, v0 = _dense_decode_block(blk_l, cfg, h, kc2[0], vc2[0],
+                                            pos, window=cfg.sliding_window,
+                                            cos_sin=cos_sin)
+            h, k1, v1 = _dense_decode_block(blk_g, cfg, h, kc2[1], vc2[1],
+                                            pos, window=0, cos_sin=cos_sin)
+            return h, (jnp.stack([k0, k1]), jnp.stack([v0, v1]))
+
+        x, (kc, vc) = jax.lax.scan(body, x, (params.blocks, kc, vc))
+        new_cache = {"k": kc.reshape(L, *kc.shape[2:]),
+                     "v": vc.reshape(L, *vc.shape[2:])}
+    elif cfg.family == "moe":
+        def body(h, inp):
+            h = constrain_batch(h)
+            blk, kc, vc = inp
+            a, kc, vc = attention_decode(blk.attn, cfg,
+                                         rms_norm(h, blk.ln1, cfg.norm_eps),
+                                         kc, vc, pos, cos_sin=cos_sin)
+            h = h + a
+            h = h + moe(blk.moe, cfg, rms_norm(h, blk.ln2, cfg.norm_eps))
+            return h, (kc, vc)
+        x, (kc, vc) = jax.lax.scan(body, x, (params.blocks, cache["k"],
+                                             cache["v"]))
+        new_cache = {"k": kc, "v": vc}
+    else:
+        def body(h, inp):
+            h = constrain_batch(h)
+            blk, kc, vc = inp
+            h, kc, vc = _dense_decode_block(blk, cfg, h, kc, vc, pos,
+                                            window=0, cos_sin=cos_sin)
+            return h, (kc, vc)
+        x, (kc, vc) = jax.lax.scan(body, x, (params.blocks, cache["k"],
+                                             cache["v"]))
+        new_cache = {"k": kc, "v": vc}
+
+    return logits_from_hidden(params, cfg, x), new_cache
+
+
+def _serve_ssm(params: LmParams, cfg, cache, token):
+    x = constrain_batch(params.embed[token].astype(jnp.bfloat16))
+
+    def body(h, inp):
+        h = constrain_batch(h)
+        blk, ssd, cx, cB, cC = inp
+        out, (ssd, cx, cB, cC) = ssd_decode_step(
+            blk.ssm, cfg, rms_norm(h, blk.ln, cfg.norm_eps),
+            (ssd, cx, cB, cC))
+        return h + out, (ssd, cx, cB, cC)
+
+    x, (ssd, cx, cB, cC) = jax.lax.scan(
+        body, x, (params.blocks, cache["ssd"], cache["conv_x"],
+                  cache["conv_B"], cache["conv_C"]))
+    new_cache = {"ssd": ssd, "conv_x": cx, "conv_B": cB, "conv_C": cC}
+    return logits_from_hidden(params, cfg, x), new_cache
+
+
+def _serve_hybrid(params: LmParams, cfg, cache, token, pos):
+    B = token.shape[0]
+    x = constrain_batch(params.embed[token].astype(jnp.bfloat16))
+    cos_sin = _decode_cos_sin(cfg, B, pos)
+    shared = params.shared_attn
+
+    def group_body(h, inp):
+        h = constrain_batch(h)
+        grp_blocks, ak, av, ssd, cx, cB, cC = inp
+        h, ak, av = _dense_decode_block(shared, cfg, h, ak, av, pos,
+                                        window=0, cos_sin=cos_sin)
+
+        def inner(hh, blk_state):
+            blk, s0, s1, s2, s3 = blk_state
+            out, (s0, s1, s2, s3) = ssd_decode_step(
+                blk.ssm, cfg, rms_norm(hh, blk.ln, cfg.norm_eps),
+                (s0, s1, s2, s3))
+            return hh + out, (s0, s1, s2, s3)
+
+        h, (ssd, cx, cB, cC) = jax.lax.scan(
+            inner, h, (grp_blocks, ssd, cx, cB, cC))
+        return h, (ak, av, ssd, cx, cB, cC)
+
+    x, (ak, av, ssd, cx, cB, cC) = jax.lax.scan(
+        group_body, x,
+        (params.blocks, cache["attn_k"], cache["attn_v"], cache["ssd"],
+         cache["conv_x"], cache["conv_B"], cache["conv_C"]))
+    new_cache = {"attn_k": ak, "attn_v": av, "ssd": ssd, "conv_x": cx,
+                 "conv_B": cB, "conv_C": cC}
+    return logits_from_hidden(params, cfg, x), new_cache
+
+
+def _serve_encdec(params: EncDecParams, cfg, cache, token, pos):
+    B = token.shape[0]
+    x = constrain_batch(params.embed[token].astype(jnp.bfloat16))
+    cos_sin = _decode_cos_sin(cfg, B, pos)
+    zero_cos_sin = rotary(jnp.zeros((B, 1), jnp.int32), cfg.head_dim_,
+                          cfg.rope_theta)
+
+    def body(h, inp):
+        h = constrain_batch(h)
+        blk, sk, sv, ck, cv = inp
+        a, sk, sv = attention_decode(blk.self_attn, cfg,
+                                     rms_norm(h, blk.ln1, cfg.norm_eps),
+                                     sk, sv, pos, cos_sin=cos_sin)
+        h = h + a
+        c, _, _ = attention_decode(blk.cross_attn, cfg,
+                                   rms_norm(h, blk.ln_x, cfg.norm_eps),
+                                   ck, cv, jnp.int32(ck.shape[1] - 1),
+                                   update_cache=False, cos_sin=zero_cos_sin)
+        h = h + c
+        h = h + mlp(blk.mlp, rms_norm(h, blk.ln2, cfg.norm_eps), cfg.act)
+        return h, (sk, sv)
+
+    x, (sk, sv) = jax.lax.scan(
+        body, x, (params.dec_blocks, cache["self_k"], cache["self_v"],
+                  cache["cross_k"], cache["cross_v"]))
+    new_cache = dict(cache)
+    new_cache["self_k"] = sk
+    new_cache["self_v"] = sv
+    return logits_from_hidden(params, cfg, x), new_cache
+
+
+def prefill_cache_encdec(params: EncDecParams, cfg, cache, frames,
+                         q_chunk: int = 512):
+    """Run the encoder once and fill the cross-attention K/V cache."""
+    enc_out = encode_frames(params, cfg, frames, q_chunk=q_chunk, remat=False)
+
+    def per_layer(blk):
+        k, v = cross_kv(blk.cross_attn, cfg, enc_out)
+        return k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+
+    ck, cv = jax.vmap(per_layer)(params.dec_blocks)
+    new_cache = dict(cache)
+    new_cache["cross_k"] = ck
+    new_cache["cross_v"] = cv
+    return new_cache

@@ -1,0 +1,550 @@
+"""PQ-compressed KV cache — the paper's technique as a serving feature.
+
+The paper compresses a database of time series with product quantization and
+answers elastic-similarity queries from code look-up tables.  An LM decoder
+does the same thing every step: the KV cache is a *database of key vectors*
+and attention is a *similarity search* of the query against it.  We map the
+paper's machinery 1:1:
+
+  codebook training   -> per-(layer, kv-head) Euclidean k-means over observed
+                         keys, subspaces along head_dim (``fit_kv_books``) —
+                         the same ``euclidean_kmeans`` that backs the paper's
+                         PQ_ED baseline.
+  encoding            -> every cached key becomes M uint8 codes
+                         (``encode_keys``; 2*hd bytes -> M bytes).
+  asymmetric distance -> the decode query builds one small ADC table per
+                         layer; every cached position's attention score is
+                         M table look-ups (kernels/pq_attn).
+  filter-then-refine  -> scores inside an exact *recent window* (a ring
+                         buffer of raw keys) override their ADC estimates —
+                         the refinement step of the paper's §3.2 cascade,
+                         applied to the positions that matter most.
+
+Beyond the paper (recorded in EXPERIMENTS.md §Perf):
+
+  * ``mode="topk"``    — sparse value reads: only the top-T scored positions'
+                         values are gathered (HBM traffic S*hd -> T*hd).
+  * ``quantize_v=True``— values PQ-coded too; the attention output is then
+                         computed WITHOUT reconstructing values: softmax mass
+                         is aggregated per codeword (``w[k] = sum p_s``,
+                         ``out = w @ book``) — O(K*hd) instead of O(S*hd).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.kmeans import euclidean_kmeans
+from ..models.config import ModelConfig
+from ..models.layers import mlp, moe, rms_norm, rotary, apply_rope, softcap, _dot
+from ..sharding.partition import constrain_batch, constrain_dims
+
+__all__ = ["PQKVConfig", "PQKVCache", "fit_kv_books", "compress_cache",
+           "init_pq_cache", "pq_attention_decode", "pq_serve_step",
+           "pqkv_memory"]
+
+_NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class PQKVConfig:
+    """Serving-time PQ configuration (paper §3.4 semantics)."""
+    n_sub: int = 8              # M subspaces along head_dim
+    codebook_size: int = 256    # K
+    recent_window: int = 128    # exact ring-buffer length (refinement window)
+    mode: str = "softmax"       # "softmax" (dense ADC) | "topk" (sparse reads)
+    top_t: int = 128            # T for mode="topk"
+    quantize_v: bool = False    # PQ the values too (full 4D/M-style ratio)
+    kmeans_iters: int = 12
+    fit_sample: int = 4096      # max tokens sampled per (layer, group) fit
+
+
+class PQKVCache(NamedTuple):
+    """Layer-stacked compressed cache (a pytree; shard rules in sharding/)."""
+    k_codes: jnp.ndarray            # (L, B, Smax, G, M) int32
+    k_books: jnp.ndarray            # (L, G, M, K, hd/M) f32
+    v: Optional[jnp.ndarray]        # (L, B, Smax, G, hd) bf16 | None
+    v_codes: Optional[jnp.ndarray]  # (L, B, Smax, G, M) int32 | None
+    v_books: Optional[jnp.ndarray]  # (L, G, M, K, hd/M) f32   | None
+    k_recent: jnp.ndarray           # (L, B, W, G, hd) bf16 exact ring
+    v_recent: jnp.ndarray           # (L, B, W, G, hd) bf16 exact ring
+
+
+# ---------------------------------------------------------------------------
+# Codebook fitting / encoding
+# ---------------------------------------------------------------------------
+
+def _subspace_kmeans(key: jax.Array, vecs: jnp.ndarray, n_sub: int, K: int,
+                     iters: int) -> jnp.ndarray:
+    """``vecs (T, hd)`` -> books ``(M, K, hd/M)`` by per-subspace k-means."""
+    T, hd = vecs.shape
+    Ds = hd // n_sub
+    sub = vecs.reshape(T, n_sub, Ds)
+    keys = jax.random.split(key, n_sub)
+
+    def one(k, x):
+        return euclidean_kmeans(k, x, K, iters=iters).centroids
+
+    return jnp.stack([one(keys[m], sub[:, m, :]) for m in range(n_sub)])
+
+
+def fit_kv_books(key: jax.Array, kv: jnp.ndarray, pqc: PQKVConfig,
+                 valid_len: Optional[int] = None) -> jnp.ndarray:
+    """Fit codebooks from observed keys (or values).
+
+    ``kv (L, B, S, G, hd)`` -> books ``(L, G, M, K, hd/M)``.  Tokens are
+    subsampled to ``fit_sample`` per (layer, group); fitting is a one-time
+    prefill-side cost, amortized over the whole decode (paper §3.1).
+    """
+    L, B, S, G, hd = kv.shape
+    S_eff = valid_len if valid_len is not None else S
+    flat = kv[:, :, :S_eff].astype(jnp.float32)
+    flat = jnp.moveaxis(flat, 3, 1).reshape(L, G, B * S_eff, hd)
+    T = flat.shape[2]
+    n = min(pqc.fit_sample, T)
+    keys = jax.random.split(key, L * G).reshape(L, G, 2)
+
+    books = []
+    for l in range(L):
+        per_g = []
+        for g in range(G):
+            kk = jax.random.fold_in(jax.random.PRNGKey(0), l * G + g)
+            idx = jax.random.choice(kk, T, (n,), replace=n > T)
+            per_g.append(_subspace_kmeans(keys[l, g], flat[l, g][idx],
+                                          pqc.n_sub, pqc.codebook_size,
+                                          pqc.kmeans_iters))
+        books.append(jnp.stack(per_g))
+    return jnp.stack(books)          # (L, G, M, K, Ds)
+
+
+def encode_kv(kv: jnp.ndarray, books: jnp.ndarray) -> jnp.ndarray:
+    """``kv (..., G, hd)``, books ``(G, M, K, Ds)`` -> codes ``(..., G, M)``."""
+    G, M, K, Ds = books.shape
+    lead = kv.shape[:-2]
+    x = kv.astype(jnp.float32).reshape(*lead, G, M, Ds)
+    d2 = (jnp.sum(x * x, -1)[..., None]
+          - 2.0 * jnp.einsum("...gmd,gmkd->...gmk", x, books)
+          + jnp.sum(books * books, -1))
+    # uint8 storage: K <= 256 always (paper §3.4's 8-bit code convention)
+    return jnp.argmin(d2, axis=-1).astype(jnp.uint8)
+
+
+def decode_kv(codes: jnp.ndarray, books: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`encode_kv` (reconstruction, test/debug only)."""
+    G, M, K, Ds = books.shape
+    oh = jax.nn.one_hot(codes, K, dtype=jnp.float32)        # (..., G, M, K)
+    rec = jnp.einsum("...gmk,gmkd->...gmd", oh, books)
+    return rec.reshape(*codes.shape[:-1], M * Ds)
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+def init_pq_cache(cfg: ModelConfig, pqc: PQKVConfig, batch: int,
+                  max_len: int, books: jnp.ndarray,
+                  v_books: Optional[jnp.ndarray] = None) -> PQKVCache:
+    """Empty compressed cache (books must be pre-fit)."""
+    L, G = cfg.n_layers, cfg.n_kv_heads
+    hd, M, W = cfg.head_dim_, pqc.n_sub, pqc.recent_window
+    codes = jnp.zeros((L, batch, max_len, G, M), jnp.uint8)
+    if pqc.quantize_v:
+        v = None
+        v_codes = jnp.zeros((L, batch, max_len, G, M), jnp.uint8)
+        assert v_books is not None, "quantize_v=True needs fitted v_books"
+    else:
+        v = jnp.zeros((L, batch, max_len, G, hd), jnp.bfloat16)
+        v_codes, v_books = None, None
+    return PQKVCache(
+        k_codes=codes, k_books=books, v=v, v_codes=v_codes, v_books=v_books,
+        k_recent=jnp.zeros((L, batch, W, G, hd), jnp.bfloat16),
+        v_recent=jnp.zeros((L, batch, W, G, hd), jnp.bfloat16))
+
+
+def compress_cache(cache: Dict[str, jnp.ndarray], cfg: ModelConfig,
+                   pqc: PQKVConfig, pos: int,
+                   key: jax.Array = None) -> PQKVCache:
+    """Compress an exact prefill cache {k, v} into a :class:`PQKVCache`.
+
+    Fits key (and optionally value) codebooks on the first ``pos`` cached
+    entries, encodes them, and seeds the exact ring with the last W tokens.
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    k_cache, v_cache = cache["k"], cache["v"]
+    L, B, Smax, G, hd = k_cache.shape
+    W = pqc.recent_window
+    kk, kv_ = jax.random.split(key)
+    books = fit_kv_books(kk, k_cache, pqc, valid_len=pos)
+    codes = jax.vmap(encode_kv)(k_cache, books)       # over L, uint8
+
+    v_books = v_codes = None
+    v = v_cache
+    if pqc.quantize_v:
+        v_books = fit_kv_books(kv_, v_cache, pqc, valid_len=pos)
+        v_codes = jax.vmap(encode_kv)(v_cache, v_books)
+        v = None
+
+    # seed the exact ring with the last W prefill tokens (ring slot = p % W)
+    take = jnp.arange(W)
+    ring_pos = (pos - W + take) % Smax                # absolute positions
+    slot = ((pos - W + take) % W + W) % W
+    k_ring = jnp.zeros((L, B, W, G, hd), jnp.bfloat16)
+    v_ring = jnp.zeros((L, B, W, G, hd), jnp.bfloat16)
+    k_ring = k_ring.at[:, :, slot].set(
+        k_cache[:, :, ring_pos].astype(jnp.bfloat16))
+    v_ring = v_ring.at[:, :, slot].set(
+        v_cache[:, :, ring_pos].astype(jnp.bfloat16))
+    return PQKVCache(k_codes=codes, k_books=books, v=v, v_codes=v_codes,
+                     v_books=v_books, k_recent=k_ring, v_recent=v_ring)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention against the compressed cache (one layer)
+# ---------------------------------------------------------------------------
+
+def _adc_scores(q: jnp.ndarray, codes: jnp.ndarray,
+                books: jnp.ndarray) -> jnp.ndarray:
+    """ADC scores: ``q (B, G, R, hd)``, codes ``(B, S, G, M)``,
+    books ``(G, M, K, Ds)`` -> ``(B, G, R, S)`` un-scaled dot products.
+
+    The per-query cost is one tiny LUT build (G*R*M*K*Ds MACs) plus M LUT
+    gathers per cached position — the paper's asymmetric distance
+    computation.  Gather form: a dense one-hot over the full cache would
+    materialise (B,S,G,M,K) floats; the Pallas kernel (kernels/pq_attn)
+    uses the one-hot MXU contraction blockwise in VMEM instead.
+    """
+    from ..sharding.partition import current_model_size
+    G, M, K, Ds = books.shape
+    B, S = codes.shape[0], codes.shape[1]
+    qr = q.astype(jnp.float32).reshape(B, G, -1, M, Ds)
+    R = qr.shape[2]
+    qlut = jnp.einsum("bgrmd,gmkd->bgrmk", qr, books
+                      ).astype(jnp.bfloat16)                 # (B,G,R,M,K)
+
+    # shard-blocked one-hot contraction (the pq_attn kernel's formulation):
+    # S is laid out as (P shards, inner chunks, chunk) so every scan step
+    # works on all TP shards in parallel and the transient one-hot block
+    # stays small.  take_along_axis gathers over a sharded S axis trigger
+    # SPMD "involuntary full rematerialization" (21 GB/layer all-gathers).
+    P = current_model_size()
+    P = P if S % P == 0 else 1
+    Sp = S // P
+    inner = 256 if (Sp % 256 == 0 and Sp > 256) else Sp
+    nc = Sp // inner
+    cs = codes.transpose(0, 2, 3, 1).reshape(B, G, M, P, nc, inner)
+    cs = constrain_dims(cs, {0: "dp", 3: "model"})
+
+    def one_chunk(cc):                                       # (B,G,M,P,i)
+        oh = jax.nn.one_hot(cc, K, dtype=jnp.bfloat16)       # (B,G,M,P,i,K)
+        return jnp.einsum("bgrmk,bgmpik->bgrpi", qlut, oh,
+                          preferred_element_type=jnp.float32)
+
+    if nc == 1:
+        scores = one_chunk(cs[:, :, :, :, 0])[..., None, :]  # (B,G,R,P,1,i)
+    else:
+        _, out = jax.lax.scan(
+            lambda c, cc: (c, one_chunk(cc)), 0,
+            jnp.moveaxis(cs, 4, 0))                          # (nc,B,G,R,P,i)
+        scores = jnp.moveaxis(out, 0, 4)                     # (B,G,R,P,nc,i)
+    return scores.reshape(B, G, R, S)
+
+
+def pq_attention_decode(q: jnp.ndarray, layer_cache, pos: jnp.ndarray, *,
+                        pqc: PQKVConfig, window: int = 0) -> jnp.ndarray:
+    """One-layer decode attention against a compressed cache slice.
+
+    ``q (B, G, R, hd)``; ``layer_cache`` holds this layer's
+    (k_codes (B,S,G,M), k_books, v or v_codes/v_books, k_recent, v_recent).
+    Returns ``(B, G, R, hd)`` attention output.
+    """
+    k_codes, k_books, v, v_codes, v_books, k_rec, v_rec = layer_cache
+    B, S, G, M = k_codes.shape
+    hd = q.shape[-1]
+    W = k_rec.shape[1]                           # per-layer ring (B, W, G, hd)
+    scale = hd ** -0.5
+
+    scores = _adc_scores(q, k_codes, k_books) * scale        # (B,G,R,S)
+    # under the launch context: batch on DP, cache positions on "model"
+    # (matches the code layout — ADC stays shard-local per cache shard)
+    scores = constrain_dims(scores, {0: "dp", 3: "model"})
+
+    # Two-piece softmax: the ADC tail (positions outside the ring, S-axis
+    # sharded) and the exact ring (slot space, replicated).  Keeping the
+    # ring piece in slot space avoids cross-shard scatter/gather between
+    # the S axis and the W ring (SPMD rematerialization hazard).
+    kpos = jnp.arange(S)
+    in_recent = (kpos > pos - W) & (kpos <= pos)
+    mask_tail = (kpos <= pos) & ~in_recent
+    if window > 0:
+        mask_tail &= kpos > (pos - window)
+    s_tail = jnp.where(mask_tail[None, None, None, :], scores, _NEG_INF)
+
+    qf = q.astype(jnp.float32)
+    s_ring = jnp.einsum("bgrh,bwgh->bgrw", qf,
+                        k_rec.astype(jnp.float32)) * scale   # (B,G,R,W)
+    slots = jnp.arange(W)
+    ring_abs = pos - jnp.mod(pos - slots, W)                 # abs position
+    ring_valid = ring_abs >= 0
+    if window > 0:
+        ring_valid &= ring_abs > (pos - window)
+    s_ring = jnp.where(ring_valid[None, None, None, :], s_ring, _NEG_INF)
+
+    if pqc.mode == "topk":
+        # sparse value reads: only the top-T ADC-scored tail positions'
+        # values are read; the exact ring is always attended.
+        T = min(pqc.top_t, S)
+        top_s, top_i = jax.lax.top_k(s_tail, T)              # (B,G,R,T)
+        m = jnp.maximum(jnp.max(top_s, -1, keepdims=True),
+                        jnp.max(s_ring, -1, keepdims=True))
+        et = jnp.exp(top_s - m)
+        er = jnp.exp(s_ring - m)
+        denom = et.sum(-1, keepdims=True) + er.sum(-1, keepdims=True)
+        if v is not None:
+            vg = jnp.take_along_axis(
+                v.astype(jnp.float32)[:, :, :, None, :].transpose(
+                    0, 2, 3, 1, 4),
+                top_i[..., None], axis=3)                    # (B,G,R,T,hd)
+        else:
+            cg = jnp.take_along_axis(
+                v_codes.transpose(0, 2, 1, 3)[:, :, None, :, :],
+                top_i[..., None], axis=3)                    # (B,G,R,T,M)
+            oh = jax.nn.one_hot(cg, v_books.shape[2], dtype=jnp.float32)
+            vg = jnp.einsum("bgrtmk,gmkd->bgrtmd", oh, v_books)
+            vg = vg.reshape(*vg.shape[:-2], -1)
+        out = jnp.einsum("bgrt,bgrth->bgrh", et, vg)
+        out = out + jnp.einsum("bgrw,bwgh->bgrh", er,
+                               v_rec.astype(jnp.float32))
+        return (out / denom).astype(jnp.bfloat16)
+
+    m = jnp.maximum(jnp.max(s_tail, -1, keepdims=True),
+                    jnp.max(s_ring, -1, keepdims=True))
+    et = jnp.exp(s_tail - m)                                 # (B,G,R,S)
+    er = jnp.exp(s_ring - m)                                 # (B,G,R,W)
+    denom = et.sum(-1, keepdims=True) + er.sum(-1, keepdims=True)
+
+    out = jnp.einsum("bgrw,bwgh->bgrh", er, v_rec.astype(jnp.float32))
+    if v is not None:
+        out = out + jnp.einsum("bgrs,bsgh->bgrh",
+                               et.astype(jnp.bfloat16),
+                               v.astype(jnp.bfloat16),
+                               preferred_element_type=jnp.float32)
+    else:
+        # values PQ-coded: aggregate softmax mass per codeword with the
+        # same shard-blocked one-hot contraction, then one (K x Ds)
+        # contraction per subspace — O(K*hd) value reads, not O(S*hd).
+        from ..sharding.partition import current_model_size
+        K = v_books.shape[2]
+        R = et.shape[2]
+        P = current_model_size()
+        P = P if S % P == 0 else 1
+        Sp = S // P
+        inner = 256 if (Sp % 256 == 0 and Sp > 256) else Sp
+        nc = Sp // inner
+        ct = v_codes.transpose(0, 2, 3, 1).reshape(B, G, M, P, nc, inner)
+        ct = constrain_dims(ct, {0: "dp", 3: "model"})
+        pt = et.reshape(B, G, R, P, nc, inner)
+
+        def mass_chunk(cc, pc):                              # per nc chunk
+            oh = jax.nn.one_hot(cc, K, dtype=jnp.bfloat16)   # (B,G,M,P,i,K)
+            return jnp.einsum("bgrpi,bgmpik->bgrmk",
+                              pc.astype(jnp.bfloat16), oh,
+                              preferred_element_type=jnp.float32)
+
+        if nc == 1:
+            wmass = mass_chunk(ct[:, :, :, :, 0], pt[:, :, :, :, 0])
+        else:
+            def body(acc, xs):
+                cc, pc = xs
+                return acc + mass_chunk(cc, pc), None
+            wmass, _ = jax.lax.scan(
+                body, jnp.zeros((B, G, R, M, K), jnp.float32),
+                (jnp.moveaxis(ct, 4, 0), jnp.moveaxis(pt, 4, 0)))
+        vhat = jnp.einsum("bgrmk,gmkd->bgrmd", wmass, v_books)
+        out = out + vhat.reshape(*vhat.shape[:-2], -1)
+    return (out / denom).astype(jnp.bfloat16)
+
+
+# ---------------------------------------------------------------------------
+# Full decode step with the compressed cache (dense / moe / vlm families)
+# ---------------------------------------------------------------------------
+
+def _pq_attn_block(attn_p, cfg: ModelConfig, x, layer_cache, pos, *,
+                   pqc: PQKVConfig, window: int, cos_sin):
+    """Project q/k/v, update the compressed cache at ``pos``, attend."""
+    B = x.shape[0]
+    hd, H, G = cfg.head_dim_, cfg.n_heads, cfg.n_kv_heads
+    R = H // G
+    cos, sin = cos_sin
+
+    q = _dot(x, attn_p.wq, attn_p.bq).reshape(B, 1, G, R, hd)
+    q = apply_rope(q, cos, sin)[:, 0]                        # (B,G,R,hd)
+    k_new = apply_rope(_dot(x, attn_p.wk, attn_p.bk).reshape(B, 1, G, hd),
+                       cos, sin)[:, 0]                       # (B,G,hd)
+    v_new = _dot(x, attn_p.wv, attn_p.bv).reshape(B, G, hd)
+
+    (k_codes, k_books, v, v_codes, v_books, k_rec, v_rec) = layer_cache
+    W = k_rec.shape[1]                           # (B, W, G, hd)
+
+    # write-through: PQ code at pos AND raw copy into the ring at pos % W.
+    # One-hot selects on the (model-sharded) S axis — a DUS at a runtime
+    # position would make SPMD all-gather the cache (see layers.py decode).
+    kc_new = encode_kv(k_new, k_books)                       # (B,G,M)
+    S = k_codes.shape[1]
+    at_pos = (jnp.arange(S) == pos)[None, :, None, None]
+    k_codes = jnp.where(at_pos, kc_new[:, None], k_codes)
+    if v is not None:
+        v = jnp.where(at_pos, v_new.astype(v.dtype)[:, None], v)
+    else:
+        vc_new = encode_kv(v_new, v_books)
+        v_codes = jnp.where(at_pos, vc_new[:, None], v_codes)
+    slot = pos % W
+    k_rec = jax.lax.dynamic_update_slice_in_dim(     # ring: replicated axis
+        k_rec, k_new.astype(k_rec.dtype)[:, None], slot, axis=1)
+    v_rec = jax.lax.dynamic_update_slice_in_dim(
+        v_rec, v_new.astype(v_rec.dtype)[:, None], slot, axis=1)
+
+    new_cache = (k_codes, k_books, v, v_codes, v_books, k_rec, v_rec)
+    out = pq_attention_decode(q, new_cache, pos, pqc=pqc, window=window)
+    out = out.reshape(B, 1, H * hd).astype(jnp.bfloat16)
+    return _dot(out, attn_p.wo), new_cache
+
+
+def pq_serve_step(params, cfg: ModelConfig, pq_cache: PQKVCache,
+                  token: jnp.ndarray, pos, *, pqc: PQKVConfig
+                  ) -> Tuple[jnp.ndarray, PQKVCache]:
+    """Single-token decode with the PQ-compressed cache.
+
+    Families: dense / moe / vlm (uniform GQA blocks) and gemma2-style
+    local/global alternation (PQ on both; local layers add window masking).
+    SSM/hybrid have no (or tiny) KV caches — the technique is inapplicable
+    there (DESIGN.md §5).
+    """
+    from ..models.lm import logits_from_hidden
+
+    fam = cfg.family
+    assert fam in ("dense", "moe", "vlm"), f"PQ-KV: unsupported family {fam}"
+    pos = jnp.asarray(pos, jnp.int32)
+    B = token.shape[0]
+    x = params.embed[token].astype(jnp.bfloat16)
+    if cfg.local_global:
+        x = x * jnp.bfloat16(cfg.d_model ** 0.5)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    cos_sin = rotary(positions, cfg.head_dim_, cfg.rope_theta)
+
+    cache_leaves = (pq_cache.k_codes, pq_cache.k_books, pq_cache.v,
+                    pq_cache.v_codes, pq_cache.v_books,
+                    pq_cache.k_recent, pq_cache.v_recent)
+
+    if cfg.local_global:
+        L = cfg.n_layers
+        def regroup(t):
+            return (None if t is None
+                    else t.reshape(L // 2, 2, *t.shape[1:]))
+        leaves = tuple(regroup(t) for t in cache_leaves)
+
+        def body(h, inp):
+            blk_pair = jax.tree.map(lambda t: t, inp[0])
+            lc_pair = inp[1:]
+            outs = []
+            for i, win in enumerate((cfg.sliding_window, 0)):
+                blk = jax.tree.map(lambda t: t[i], blk_pair)
+                lc = tuple(None if t is None else t[i] for t in lc_pair)
+                a, lc = _pq_attn_block(blk.attn, cfg,
+                                       rms_norm(h, blk.ln1, cfg.norm_eps),
+                                       lc, pos, pqc=pqc, window=win,
+                                       cos_sin=cos_sin)
+                if blk.post_attn_ln is not None:
+                    a = rms_norm(a, blk.post_attn_ln, cfg.norm_eps)
+                h = h + a
+                m = mlp(blk.mlp, rms_norm(h, blk.ln2, cfg.norm_eps), cfg.act)
+                if blk.post_mlp_ln is not None:
+                    m = rms_norm(m, blk.post_mlp_ln, cfg.norm_eps)
+                h = h + m
+                outs.append(lc)
+            stacked = tuple(
+                None if a is None else jnp.stack([a, b])
+                for a, b in zip(outs[0], outs[1]))
+            return h, stacked
+
+        x, new_leaves = _scan_optional(body, x, (params.blocks,) + leaves)
+        new_leaves = tuple(
+            None if t is None else t.reshape(L, *t.shape[2:])
+            for t in new_leaves)
+    else:
+        def body(h, inp):
+            blk = inp[0]
+            lc = inp[1:]
+            a, lc = _pq_attn_block(blk.attn, cfg,
+                                   rms_norm(h, blk.ln1, cfg.norm_eps),
+                                   lc, pos, pqc=pqc, window=0,
+                                   cos_sin=cos_sin)
+            h = h + a
+            if fam == "moe":
+                h = h + moe(blk.moe, cfg, rms_norm(h, blk.ln2, cfg.norm_eps))
+            else:
+                m = mlp(blk.mlp, rms_norm(h, blk.ln2, cfg.norm_eps), cfg.act)
+                if blk.post_mlp_ln is not None:
+                    m = rms_norm(m, blk.post_mlp_ln, cfg.norm_eps)
+                h = h + m
+            return h, lc
+
+        x, new_leaves = _scan_optional(body, x, (params.blocks,) + cache_leaves)
+
+    new_cache = PQKVCache(k_codes=new_leaves[0], k_books=pq_cache.k_books,
+                          v=new_leaves[2], v_codes=new_leaves[3],
+                          v_books=pq_cache.v_books,
+                          k_recent=new_leaves[5], v_recent=new_leaves[6])
+    return logits_from_hidden(params, cfg, x), new_cache
+
+
+def _scan_optional(body, init, xs):
+    """``lax.scan`` that tolerates ``None`` leaves in ``xs``.
+
+    ``xs[0]`` is the per-layer params pytree; the rest are cache leaves (or
+    None).  ``body`` receives the full tuple per layer and must return the
+    cache leaves (len(xs) - 1 items, Nones preserved positionally).
+    Returns ``(carry, cache_outs)`` with Nones reinserted.
+    """
+    flags = tuple(x is None for x in xs)
+    xs_real = tuple(x for x in xs if x is not None)
+
+    def wrapped(c, xr):
+        it = iter(xr)
+        full = tuple(None if f else next(it) for f in flags)
+        c, out = body(c, full)
+        out_real = tuple(o for o in out if o is not None)
+        return c, out_real
+
+    c, outs_real = jax.lax.scan(wrapped, init, xs_real)
+    it = iter(outs_real)
+    # body's outputs correspond to the cache slots (xs[1:])
+    outs = tuple(None if f else next(it) for f in flags[1:])
+    return c, outs
+
+
+# ---------------------------------------------------------------------------
+# Memory accounting (paper §3.4, applied to the KV cache)
+# ---------------------------------------------------------------------------
+
+def pqkv_memory(cfg: ModelConfig, pqc: PQKVConfig, batch: int,
+                seq_len: int) -> dict:
+    """Bytes for the exact vs PQ-compressed cache (per the paper's §3.4)."""
+    L, G, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim_
+    M, K, W = pqc.n_sub, pqc.codebook_size, pqc.recent_window
+    n_vec = L * batch * seq_len * G
+    exact = 2 * n_vec * hd * 2                       # k+v bf16
+    code_bytes = max(1, (K - 1).bit_length() // 8 + (1 if (K - 1).bit_length() % 8 else 0))
+    codes = n_vec * M * code_bytes
+    k_side = codes if pqc.quantize_v else codes + n_vec * hd * 2
+    v_side = codes if pqc.quantize_v else 0
+    books = L * G * M * K * (hd // M) * 4 * (2 if pqc.quantize_v else 1)
+    ring = 2 * L * batch * W * G * hd * 2
+    total = k_side + v_side + books + ring
+    return dict(exact_bytes=exact, pq_bytes=total, books_bytes=books,
+                ring_bytes=ring, compression=exact / max(total, 1))

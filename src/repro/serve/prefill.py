@@ -1,0 +1,124 @@
+"""Batched prefill: one forward pass over the whole prompt that FILLS the
+KV cache, returning last-position logits — the production prompt path
+(token-sequential `serve_step` prefill is O(S) dispatches and O(S²·L) total
+work re-reading the growing cache; this is one chunked-causal pass).
+
+Families: dense / moe / vlm (uniform GQA blocks, incl. gemma2-style
+local/global alternation).  SSM/hybrid prefill needs the final recurrent
+state and stays on the step path; enc-dec fills its cross-attention cache
+via :func:`repro.serve.decode.prefill_cache_encdec`.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from ..models.layers import (_qkv, attention, mlp, moe, rms_norm, rotary,
+                             mrope_positions, _mrope_tables)
+from ..models.lm import LmParams, logits_from_hidden
+from ..sharding.partition import constrain_batch
+
+__all__ = ["prefill"]
+
+
+def _block_prefill(blk, cfg: ModelConfig, h, positions, cos_sin, kc, vc, *,
+                   window: int, q_chunk: int):
+    """One block over the full prompt; returns (h, k_cache, v_cache)."""
+    B, S, _ = h.shape
+    h = constrain_batch(h)
+    xn = rms_norm(h, blk.ln1, cfg.norm_eps)
+    cos, sin = cos_sin
+    _, k, v = _qkv(blk.attn, cfg, xn, cos, sin)          # roped k, raw v
+    kc = jax.lax.dynamic_update_slice_in_dim(
+        kc, k.astype(kc.dtype), 0, axis=1)               # static offset 0
+    vc = jax.lax.dynamic_update_slice_in_dim(
+        vc, v.astype(vc.dtype), 0, axis=1)
+    kv_mask = jnp.ones((B, S), bool)
+    a = attention(blk.attn, cfg, xn, positions, causal=True, window=window,
+                  q_chunk=q_chunk, cos_sin=cos_sin,
+                  kv_override=(k, v, kv_mask))
+    if getattr(blk, "post_attn_ln", None) is not None:
+        a = rms_norm(a, blk.post_attn_ln, cfg.norm_eps)
+    h = h + a
+    if cfg.family == "moe" and hasattr(blk, "moe"):
+        h = h + moe(blk.moe, cfg, rms_norm(h, blk.ln2, cfg.norm_eps))
+    else:
+        m = mlp(blk.mlp, rms_norm(h, blk.ln2, cfg.norm_eps), cfg.act)
+        if getattr(blk, "post_mlp_ln", None) is not None:
+            m = rms_norm(m, blk.post_mlp_ln, cfg.norm_eps)
+        h = h + m
+    return constrain_batch(h), kc, vc
+
+
+def prefill(params: LmParams, cfg: ModelConfig, cache: Dict[str, Any],
+            batch: Dict[str, jnp.ndarray], *, q_chunk: int = 512
+            ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """``batch = {tokens (B, S), [patches]}`` -> (last logits (B, 1, Vp),
+    cache with positions [0, S) filled).  ``S`` may be < cache max_len."""
+    fam = cfg.family
+    assert fam in ("dense", "moe", "vlm"), \
+        f"batched prefill: unsupported family {fam}"
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = params.embed[tokens].astype(jnp.bfloat16)
+    if cfg.local_global:
+        x = x * jnp.bfloat16(cfg.d_model ** 0.5)
+    if fam == "vlm" and "patches" in batch:
+        proj = jnp.einsum("bpd,de->bpe",
+                          batch["patches"].astype(jnp.bfloat16),
+                          params.patch_proj.astype(jnp.bfloat16),
+                          preferred_element_type=jnp.float32
+                          ).astype(jnp.bfloat16)
+        x = jax.lax.dynamic_update_slice_in_dim(x, proj, 0, axis=1)
+    x = constrain_batch(x)
+
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                 (B, S))
+    hd = cfg.head_dim_
+    if cfg.mrope and "patches" in batch:
+        # M-RoPE grid positions apply only to the patch region; text-only
+        # requests use plain positions (t=h=w -> identical to 1-D RoPE,
+        # matching the decode path)
+        mpos = mrope_positions(positions, cfg.n_frontend_tokens,
+                               cfg.mrope_sections)
+        cos_sin = _mrope_tables(mpos, hd, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        cos_sin = rotary(positions, hd, cfg.rope_theta)
+    q_chunk = min(q_chunk, S)
+
+    if cfg.local_global:
+        L = cfg.n_layers
+        kc = cache["k"].reshape(L // 2, 2, *cache["k"].shape[1:])
+        vc = cache["v"].reshape(L // 2, 2, *cache["v"].shape[1:])
+
+        def body(h, inp):
+            blk_pair, kc2, vc2 = inp
+            outs = []
+            for i, win in enumerate((cfg.sliding_window, 0)):
+                blk = jax.tree.map(lambda t: t[i], blk_pair)
+                h, k_i, v_i = _block_prefill(
+                    blk, cfg, h, positions, cos_sin, kc2[i], vc2[i],
+                    window=win, q_chunk=q_chunk)
+                outs.append((k_i, v_i))
+            return h, (jnp.stack([outs[0][0], outs[1][0]]),
+                       jnp.stack([outs[0][1], outs[1][1]]))
+
+        x, (kc, vc) = jax.lax.scan(body, x, (params.blocks, kc, vc))
+        new_cache = {"k": kc.reshape(L, *kc.shape[2:]),
+                     "v": vc.reshape(L, *vc.shape[2:])}
+    else:
+        def body(h, inp):
+            blk, kc, vc = inp
+            h, kc, vc = _block_prefill(blk, cfg, h, positions, cos_sin,
+                                       kc, vc, window=0, q_chunk=q_chunk)
+            return h, (kc, vc)
+
+        x, (kc, vc) = jax.lax.scan(body, x, (params.blocks, cache["k"],
+                                             cache["v"]))
+        new_cache = {"k": kc, "v": vc}
+
+    return logits_from_hidden(params, cfg, x[:, -1:, :]), new_cache

@@ -1,0 +1,241 @@
+"""Partitioning rules: params / optimizer state / caches / batches -> specs.
+
+Scheme (single-pod mesh ``(data, model)``, multi-pod ``(pod, data, model)``):
+
+  * TP over ``model``: attention heads & ffn columns (column-parallel),
+    output rows (row-parallel), vocab, experts (EP), SSM heads.
+  * FSDP over ``data`` (+``pod``): the non-TP dimension of every large
+    matrix is sharded too, so param + optimizer memory scales with the
+    full chip count (ZeRO-3 style; XLA inserts the per-layer all-gathers).
+  * DP over ``data`` (+``pod``): the batch dimension of activations; the
+    sequence axis of KV caches is TP-sharded (decode attention becomes a
+    ``model``-axis reduction).
+
+Rules are *name -> trailing-dims spec*; leading (scan/stack) axes are padded
+with ``None``.  Any dim not divisible by its axis size falls back to
+replication for that dim (e.g. batch=1 long-context decode).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["param_specs", "cache_specs", "batch_specs", "named_shardings",
+           "fsdp_axes", "dp_axes", "activation_sharding", "constrain_batch",
+           "current_act_axes"]
+
+# ---------------------------------------------------------------------------
+# Activation-sharding context.
+#
+# Sharding propagation alone does NOT keep activations batch-sharded through
+# the layer scan: the embedding's FSDP axis (d over 'data') conflicts with
+# batch-over-'data' at the token gather, and the partitioner resolves the tie
+# by replicating the batch — silently multiplying per-device compute by the
+# DP degree (caught by the dry-run cost model).  Model code therefore calls
+# ``constrain_batch(x)`` on (B, ...) activations; outside a mesh/launch
+# context it is a no-op, so tests and CPU examples are unaffected.
+# ---------------------------------------------------------------------------
+
+_ACT_AXES: contextvars.ContextVar[Optional[Tuple[str, ...]]] = \
+    contextvars.ContextVar("repro_act_axes", default=None)
+_MODEL_SIZE: contextvars.ContextVar[int] = \
+    contextvars.ContextVar("repro_model_axis_size", default=1)
+
+
+@contextlib.contextmanager
+def activation_sharding(axes: Optional[Tuple[str, ...]],
+                        model_size: int = 1):
+    """Enable batch-dim activation constraints during tracing.
+
+    ``model_size`` exposes the TP degree to model code that needs
+    shard-blocked layouts (e.g. the PQ-KV ADC scorer)."""
+    tok = _ACT_AXES.set(tuple(axes) if axes else None)
+    tok2 = _MODEL_SIZE.set(model_size)
+    try:
+        yield
+    finally:
+        _ACT_AXES.reset(tok)
+        _MODEL_SIZE.reset(tok2)
+
+
+def current_act_axes() -> Optional[Tuple[str, ...]]:
+    return _ACT_AXES.get()
+
+
+def current_model_size() -> int:
+    return _MODEL_SIZE.get()
+
+
+def constrain_batch(x):
+    """Pin dim 0 of an activation to the DP axes (no-op outside context,
+    or when the batch does not divide the DP degree)."""
+    axes = _ACT_AXES.get()
+    if axes is None or x.ndim < 1:
+        return x
+    spec = P(axes, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_dims(x, dims):
+    """Pin named dims of an activation: ``dims`` maps axis index -> "dp"
+    (the DP axes) or a mesh axis name.  No-op outside the launch context."""
+    axes = _ACT_AXES.get()
+    if axes is None:
+        return x
+    entries = [None] * x.ndim
+    for i, a in dims.items():
+        entries[i] = axes if a == "dp" else a
+    return jax.lax.with_sharding_constraint(x, P(*entries))
+
+_F = "__fsdp__"   # placeholder resolved to ('data',) or ('pod', 'data')
+_D = "__dp__"
+
+# name -> spec for the TRAILING dims of the leaf
+_PARAM_RULES = {
+    # embeddings / heads
+    "embed": ("model", _F),
+    "lm_head": ("model", _F),
+    "patch_proj": (_F, "model"),
+    "frame_proj": (_F, "model"),
+    # attention
+    "wq": (_F, "model"), "wk": (_F, "model"), "wv": (_F, "model"),
+    "wo": ("model", _F),
+    "bq": ("model",), "bk": ("model",), "bv": ("model",),
+    # dense mlp
+    "w_gate": (_F, "model"), "w_up": (_F, "model"), "w_down": ("model", _F),
+    # moe (experts on model = EP; dense dims FSDP)
+    "router": (_F, None),
+    "we_gate": ("model", _F, None), "we_up": ("model", _F, None),
+    "we_down": ("model", None, _F),
+    # mamba2
+    "wz": (_F, "model"), "wx": (_F, "model"),
+    "wB": (_F, None), "wC": (_F, None), "wdt": (_F, "model"),
+    "conv_x": (None, "model"), "conv_B": (None, None), "conv_C": (None, None),
+    "conv_bx": ("model",), "conv_bB": (None,), "conv_bC": (None,),
+    "a_log": ("model",), "d_skip": ("model",), "dt_bias": ("model",),
+    "norm": ("model",),          # SSM gated-norm scale over d_inner
+    "out_proj": ("model", _F),
+    # layer norms (d_model,) — small, replicated
+    "ln": (None,), "ln1": (None,), "ln2": (None,), "ln_x": (None,),
+    "post_attn_ln": (None,), "post_mlp_ln": (None,),
+    "final_norm": (None,), "enc_norm": (None,),
+}
+
+_CACHE_RULES = {
+    # KV caches: trailing (B, S, G, hd) — batch on DP, sequence on model
+    "k": (_D, "model", None, None), "v": (_D, "model", None, None),
+    # PQ-compressed cache (serve/pqkv.py): codes shard like the exact cache,
+    # codebooks are small and replicated, exact rings shard on batch only
+    "k_codes": (_D, "model", None, None),
+    "v_codes": (_D, "model", None, None),
+    "k_books": (None, None, None, None),
+    "v_books": (None, None, None, None),
+    "k_recent": (_D, None, None, None),
+    "v_recent": (_D, None, None, None),
+    "self_k": (_D, "model", None, None), "self_v": (_D, "model", None, None),
+    "cross_k": (_D, "model", None, None), "cross_v": (_D, "model", None, None),
+    "attn_k": (_D, "model", None, None), "attn_v": (_D, "model", None, None),
+    # SSM states: trailing (B, H, P, N) / conv (B, ck-1, C)
+    "ssd": (_D, "model", None, None),
+    "conv_x": (_D, None, "model"), "conv_B": (_D, None, None),
+    "conv_C": (_D, None, None),
+}
+
+_BATCH_RULES = {
+    "tokens": (_D, None), "labels": (_D, None), "token": (_D, None),
+    "patches": (_D, None, None), "frames": (_D, None, None),
+}
+
+
+def fsdp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return fsdp_axes(mesh)
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    names = entry if isinstance(entry, tuple) else (entry,)
+    size = 1
+    for n in names:
+        size *= mesh.shape[n]
+    return size
+
+
+def _resolve(rule, mesh: Mesh, shape, fsdp_enabled: bool = True) -> P:
+    fsdp = fsdp_axes(mesh)
+    fsdp = fsdp if len(fsdp) > 1 else fsdp[0]
+    entries = []
+    for e in rule:
+        if e is _F and not fsdp_enabled:
+            entries.append(None)         # TP-only (serving layout)
+        elif e in (_F, _D):
+            entries.append(fsdp)
+        else:
+            entries.append(e)
+    # pad leading scan/stack axes with None
+    pad = len(shape) - len(entries)
+    entries = [None] * pad + entries
+    # divisibility guard: replicate any dim the axis does not divide
+    out = []
+    for dim, e in zip(shape, entries):
+        if e is not None and dim % _axis_size(mesh, e) != 0:
+            e = None
+        out.append(e)
+    return P(*out)
+
+
+def _last_name(path) -> Optional[str]:
+    for key in reversed(path):
+        if hasattr(key, "name"):
+            return key.name
+        if hasattr(key, "key"):
+            return str(key.key)
+    return None
+
+
+def _specs(tree, mesh: Mesh, rules, fsdp_enabled: bool = True) -> Any:
+    def leaf(path, x):
+        name = _last_name(path)
+        rule = rules.get(name)
+        if rule is None or len(rule) > x.ndim:
+            return P()
+        return _resolve(rule, mesh, x.shape, fsdp_enabled)
+    return jax.tree_util.tree_map_with_path(leaf, tree)
+
+
+def param_specs(params, mesh: Mesh, fsdp: bool = True):
+    """PartitionSpecs for model params (and, by structure, Adam moments).
+
+    ``fsdp=False`` gives the TP-only serving layout: weights replicated
+    across the DP axes so decode steps never re-gather them (training needs
+    FSDP for optimizer-state memory; serving keeps bf16 weights resident).
+    """
+    return _specs(params, mesh, _PARAM_RULES, fsdp)
+
+
+def cache_specs(cache, mesh: Mesh):
+    return _specs(cache, mesh, _CACHE_RULES)
+
+
+def batch_specs(batch, mesh: Mesh):
+    def leaf(path, x):
+        name = _last_name(path)
+        rule = _BATCH_RULES.get(name)
+        if rule is None or x.ndim == 0:
+            return P()
+        return _resolve(rule, mesh, x.shape)
+    return jax.tree_util.tree_map_with_path(leaf, batch)
+
+
+def named_shardings(specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

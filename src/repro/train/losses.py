@@ -1,0 +1,36 @@
+"""Training losses: next-token cross-entropy with z-loss regularizer."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["next_token_loss"]
+
+
+def next_token_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+                    z_loss: float = 1e-4,
+                    ignore_id: int = -100) -> Tuple[jnp.ndarray, dict]:
+    """``logits (B, S, V)`` vs ``labels (B, S)``; returns (loss, metrics).
+
+    ``labels`` already aligned (caller shifts); ``ignore_id`` masked out.
+    z-loss (log^2 Z) keeps the softmax normalizer from drifting — standard
+    large-scale stabilizer.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)                      # (B, S)
+    label_safe = jnp.maximum(labels, 0)
+    picked = jnp.take_along_axis(logits, label_safe[..., None],
+                                 axis=-1)[..., 0]
+    nll = lse - picked
+    mask = (labels != ignore_id).astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = jnp.sum(nll * mask) / denom
+    zl = jnp.sum((lse ** 2) * mask) / denom
+    loss = ce + z_loss * zl
+    metrics = {"ce": ce, "z_loss": zl,
+               "ppl": jnp.exp(jnp.clip(ce, 0.0, 20.0)),
+               "tokens": mask.sum()}
+    return loss, metrics

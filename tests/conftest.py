@@ -1,0 +1,22 @@
+import numpy as np
+import pytest
+
+
+def dtw_reference(a: np.ndarray, b: np.ndarray, window=None) -> float:
+    """O(L^2) numpy oracle for squared DTW with optional Sakoe-Chiba band."""
+    n, m = len(a), len(b)
+    w = max(n, m) if window is None else int(window)
+    D = np.full((n + 1, m + 1), np.inf)
+    D[0, 0] = 0.0
+    for i in range(1, n + 1):
+        lo = max(1, i - w)
+        hi = min(m, i + w)
+        for j in range(lo, hi + 1):
+            cost = (a[i - 1] - b[j - 1]) ** 2
+            D[i, j] = cost + min(D[i - 1, j - 1], D[i, j - 1], D[i - 1, j])
+    return float(D[n, m])
+
+
+@pytest.fixture
+def dtw_ref():
+    return dtw_reference

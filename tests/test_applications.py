@@ -1,0 +1,122 @@
+"""End-to-end application behaviour: 1NN classification, clustering,
+baseline distance measures (§4, §6)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import pq as pqm
+from repro.core.baselines import (cdtw_cdist, ed_cdist, sax_mindist_cdist,
+                                  sax_transform, sbd_cdist)
+from repro.core.cluster import hierarchical_labels, linkage
+from repro.core.knn import (knn_classify_asym, knn_classify_sym,
+                            nn_dtw_exact, nn_dtw_pruned)
+from repro.core.metrics import adjusted_rand_index, error_rate, rand_index
+from repro.core.pq import PQConfig
+from repro.data.timeseries import cbf, trace_like
+
+
+@pytest.fixture(scope="module")
+def cbf_split():
+    Xtr, ytr = cbf(20, length=64, seed=0)   # 60 train
+    Xte, yte = cbf(10, length=64, seed=1)   # 30 test
+    return Xtr, ytr, Xte, yte
+
+
+@pytest.fixture(scope="module")
+def trained(cbf_split):
+    Xtr, ytr, _, _ = cbf_split
+    cfg = PQConfig(n_sub=4, codebook_size=16, window_frac=0.2,
+                   kmeans_iters=4, dba_iters=1, refine_frac=0.5)
+    cb = pqm.fit(jax.random.PRNGKey(0), Xtr, cfg)
+    codes = pqm.encode(Xtr, cb, cfg)
+    return cfg, cb, codes
+
+
+def test_1nn_sym_beats_chance(cbf_split, trained):
+    Xtr, ytr, Xte, yte = cbf_split
+    cfg, cb, codes = trained
+    pred = np.asarray(knn_classify_sym(codes, jax.numpy.asarray(ytr), Xte,
+                                       cb, cfg))
+    err = error_rate(yte, pred)
+    assert err < 0.45  # 3 classes -> chance is 0.67
+
+
+def test_1nn_asym_at_least_as_good_as_sym(cbf_split, trained):
+    Xtr, ytr, Xte, yte = cbf_split
+    cfg, cb, codes = trained
+    pred_s = np.asarray(knn_classify_sym(codes, jax.numpy.asarray(ytr), Xte,
+                                         cb, cfg))
+    pred_a = np.asarray(knn_classify_asym(codes, jax.numpy.asarray(ytr), Xte,
+                                          cb, cfg))
+    # asymmetric removes query-side quantization noise; allow small slack
+    assert error_rate(yte, pred_a) <= error_rate(yte, pred_s) + 0.15
+
+
+def test_exact_nn_dtw_reference(cbf_split):
+    Xtr, ytr, Xte, yte = cbf_split
+    pred = np.asarray(nn_dtw_exact(Xtr, jax.numpy.asarray(ytr), Xte, window=8))
+    assert error_rate(yte, pred) < 0.3
+
+
+def test_pruned_nn_matches_exact(cbf_split):
+    Xtr, ytr, Xte, yte = cbf_split
+    exact = np.asarray(nn_dtw_exact(Xtr, jax.numpy.asarray(ytr), Xte, window=8))
+    pruned, frac = nn_dtw_pruned(Xtr, ytr, Xte, window=8)
+    assert (pruned == exact).mean() > 0.95  # ties may break differently
+    assert 0.0 <= frac < 1.0
+
+
+def test_linkage_matches_scipy():
+    scipy_hier = pytest.importorskip("scipy.cluster.hierarchy")
+    rng = np.random.default_rng(0)
+    pts = rng.standard_normal((12, 3))
+    d = np.sqrt(((pts[:, None] - pts[None, :]) ** 2).sum(-1))
+    from scipy.spatial.distance import squareform
+    for method in ("single", "complete", "average"):
+        ours = linkage(d, method)
+        theirs = scipy_hier.linkage(squareform(d, checks=False), method)
+        assert np.allclose(ours[:, 2], theirs[:, 2], atol=1e-8), method
+        ours_lab = hierarchical_labels(d, 3, method)
+        theirs_lab = scipy_hier.fcluster(theirs, 3, criterion="maxclust")
+        assert adjusted_rand_index(ours_lab, theirs_lab) == pytest.approx(1.0)
+
+
+def test_clustering_with_pq_distances(trained, cbf_split):
+    Xtr, ytr, _, _ = cbf_split
+    cfg, cb, codes = trained
+    segs = pqm.segment(Xtr, cfg)
+    D = np.asarray(pqm.cdist_sym_refined(codes, segs, codes, segs, cb))
+    labels = hierarchical_labels(D, 3, "complete")
+    ri = rand_index(ytr, labels)
+    assert ri > 0.5
+
+
+def test_baseline_distances_sane():
+    X, y = trace_like(5, length=64, seed=2)
+    ed = np.asarray(ed_cdist(X, X))
+    assert np.allclose(np.diag(ed), 0, atol=1e-2)  # fp32 a2+b2-2ab cancellation
+    cd = np.asarray(cdtw_cdist(X, X, window=6))
+    assert (cd <= ed + 1e-2).all()   # banded DTW <= lock-step
+    sbd = np.asarray(sbd_cdist(X, X))
+    assert np.allclose(np.diag(sbd), 0, atol=1e-4)
+    assert (sbd >= -1e-6).all() and (sbd <= 2.0 + 1e-6).all()
+
+
+def test_sax_mindist_lower_bounds_ed():
+    X, _ = cbf(5, length=60, seed=3)
+    S = sax_transform(X, n_segments=12, alphabet=4)
+    assert S.min() >= 0 and S.max() < 4
+    md = sax_mindist_cdist(S, S, L=60)
+    # MINDIST lower-bounds ED on z-normalized series
+    Xz = (X - X.mean(1, keepdims=True)) / X.std(1, keepdims=True)
+    ed = np.asarray(ed_cdist(Xz, Xz))
+    assert (md <= ed + 1e-3).all()
+
+
+def test_rand_index_properties():
+    a = np.array([0, 0, 1, 1, 2, 2])
+    assert rand_index(a, a) == 1.0
+    assert adjusted_rand_index(a, a) == 1.0
+    b = np.array([1, 1, 2, 2, 0, 0])  # same partition, renamed
+    assert adjusted_rand_index(a, b) == 1.0

@@ -1,0 +1,104 @@
+"""Per-architecture smoke tests (assignment deliverable f).
+
+Every assigned arch instantiates its REDUCED config (same family/structure,
+laptop scale) and runs one forward pass, one train step, and — where the
+family has a decode path — one serve step, asserting output shapes and
+finite values.  The FULL configs are exercised only via the dry-run
+(ShapeDtypeStructs, no allocation): tested here structurally.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import (ARCH_IDS, SHAPES, all_cells, get_config,
+                                    get_reduced, shape_applicable)
+from repro.launch.specs import abstract_params, input_specs
+from repro.serve.cache import init_cache
+from repro.serve.decode import prefill_cache_encdec, serve_step
+from repro.train.optim import AdamWConfig
+from repro.train.step import init_train_state, make_train_step
+
+B, S = 2, 32
+
+
+def _batch(cfg, key):
+    batch = {
+        "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.family in ("vlm",):
+        batch["patches"] = jax.random.normal(
+            key, (B, cfg.n_frontend_tokens, cfg.d_model))
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            key, (B, cfg.n_frontend_tokens, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+class TestReducedSmoke:
+    def test_train_step(self, arch):
+        cfg = get_reduced(arch)
+        key = jax.random.PRNGKey(0)
+        state = init_train_state(key, cfg)
+        step = make_train_step(cfg, AdamWConfig(lr=1e-3),
+                               q_chunk=16, microbatches=2)
+        state, metrics = jax.jit(step)(state, _batch(cfg, key))
+        assert int(state.step) == 1
+        loss = float(metrics["loss"])
+        assert np.isfinite(loss) and loss > 0
+        # params actually moved
+        leaves0 = jax.tree.leaves(init_train_state(key, cfg).params)
+        leaves1 = jax.tree.leaves(state.params)
+        assert any(not np.allclose(np.asarray(a), np.asarray(b))
+                   for a, b in zip(leaves0, leaves1))
+
+    def test_serve_step(self, arch):
+        cfg = get_reduced(arch)
+        key = jax.random.PRNGKey(1)
+        from repro.train.step import model_init
+        params = model_init(cfg)(key, cfg)
+        cache = init_cache(cfg, B, max_len=16)
+        if cfg.family == "encdec":
+            frames = jax.random.normal(
+                key, (B, cfg.n_frontend_tokens, cfg.d_model))
+            cache = prefill_cache_encdec(params, cfg, cache, frames)
+        tok = jax.random.randint(key, (B, 1), 0, cfg.vocab_size)
+        logits, new_cache = serve_step(params, cfg, cache, tok, 0)
+        assert logits.shape == (B, 1, cfg.padded_vocab)
+        assert np.isfinite(np.asarray(logits, np.float32)).all()
+        # cache structure preserved, something was written
+        assert jax.tree.structure(new_cache) == jax.tree.structure(cache)
+        changed = any(
+            not np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(jax.tree.leaves(new_cache),
+                            jax.tree.leaves(cache)))
+        assert changed
+
+    def test_full_config_is_abstractable(self, arch):
+        """FULL config: abstract params + inputs build without allocation."""
+        cfg = get_config(arch)
+        p = abstract_params(cfg)
+        n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(p))
+        # abstract leaf count should be within 2x of the analytic count
+        # (analytic skips small norms/biases)
+        assert n > 0.5 * cfg.param_count()
+        for shape in SHAPES.values():
+            ok, _ = shape_applicable(cfg, shape)
+            if not ok:
+                continue
+            specs = input_specs(cfg, shape)
+            assert all(hasattr(s, "shape") for s in jax.tree.leaves(specs))
+
+
+def test_cell_enumeration_covers_40():
+    cells = list(all_cells())
+    assert len(cells) == 40
+    applicable = [c for c in cells if c[2]]
+    assert len(applicable) == 32          # 8 documented long_500k skips
+    skipped = {(a, s.name) for a, s, ok, _ in cells if not ok}
+    assert all(s == "long_500k" for _, s in skipped)
+    assert ("mamba2-780m", "long_500k") not in skipped
+    assert ("zamba2-2.7b", "long_500k") not in skipped

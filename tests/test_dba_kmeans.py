@@ -1,0 +1,88 @@
+"""DBA barycenters and DBA k-means behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dba import alignment_path, dba, dba_update
+from repro.core.dtw import dtw_batch, dtw_cdist
+from repro.core.kmeans import dba_kmeans, euclidean_kmeans
+
+
+def _shifted_family(n, L, seed=0):
+    """Same underlying bump, randomly shifted — DBA should recover the bump."""
+    rng = np.random.default_rng(seed)
+    t = np.arange(L, dtype=np.float32)
+    out = np.zeros((n, L), np.float32)
+    for i in range(n):
+        c = L / 2 + rng.uniform(-L / 8, L / 8)
+        out[i] = np.exp(-((t - c) ** 2) / (2 * (L / 12) ** 2))
+    return out
+
+
+def test_alignment_path_valid():
+    rng = np.random.default_rng(1)
+    c = rng.standard_normal(16).astype(np.float32)
+    x = rng.standard_normal(16).astype(np.float32)
+    i_cells, j_cells, active = map(np.asarray, alignment_path(c, x))
+    ii, jj = i_cells[active], j_cells[active]
+    # path starts at the corner and ends at the origin
+    assert ii[0] == 15 and jj[0] == 15
+    assert ii[-1] == 0 and jj[-1] == 0
+    # monotone, unit steps
+    di = -np.diff(ii)
+    dj = -np.diff(jj)
+    assert ((di == 0) | (di == 1)).all()
+    assert ((dj == 0) | (dj == 1)).all()
+    assert ((di + dj) >= 1).all()
+    # every barycenter index visited
+    assert set(ii.tolist()) == set(range(16))
+
+
+def test_dba_reduces_within_cost():
+    X = _shifted_family(12, 48)
+    c0 = X[0]
+    before = float(jnp.sum(dtw_batch(
+        jnp.broadcast_to(c0, X.shape), jnp.asarray(X))))
+    c = dba(c0, X, iters=5)
+    after = float(jnp.sum(dtw_batch(
+        jnp.broadcast_to(np.asarray(c), X.shape), jnp.asarray(X))))
+    assert after <= before + 1e-5
+
+
+def test_dba_identity_fixed_point():
+    """A barycenter of identical series is that series."""
+    x = np.random.default_rng(2).standard_normal(24).astype(np.float32)
+    X = np.tile(x, (5, 1))
+    c = np.asarray(dba_update(jnp.asarray(x), jnp.asarray(X)))
+    assert np.allclose(c, x, atol=1e-5)
+
+
+def test_dba_kmeans_separates_obvious_clusters():
+    rng = np.random.default_rng(5)
+    lo = rng.standard_normal((20, 32)).astype(np.float32) * 0.1 - 3
+    hi = rng.standard_normal((20, 32)).astype(np.float32) * 0.1 + 3
+    X = np.concatenate([lo, hi])
+    res = dba_kmeans(jax.random.PRNGKey(0), X, k=2, iters=5, window=4)
+    a = np.asarray(res.assignment)
+    assert len(np.unique(a[:20])) == 1
+    assert len(np.unique(a[20:])) == 1
+    assert a[0] != a[20]
+
+
+def test_dba_kmeans_inertia_reasonable():
+    X = _shifted_family(24, 32, seed=9)
+    res1 = dba_kmeans(jax.random.PRNGKey(1), X, k=1, iters=4, window=4)
+    res4 = dba_kmeans(jax.random.PRNGKey(1), X, k=4, iters=4, window=4)
+    assert float(res4.inertia) <= float(res1.inertia) + 1e-5
+
+
+def test_euclidean_kmeans_matches_structure():
+    rng = np.random.default_rng(6)
+    a = rng.standard_normal((15, 16)).astype(np.float32) + 4
+    b = rng.standard_normal((15, 16)).astype(np.float32) - 4
+    X = np.concatenate([a, b])
+    res = euclidean_kmeans(jax.random.PRNGKey(2), X, k=2, iters=10)
+    lab = np.asarray(res.assignment)
+    assert lab[:15].std() == 0 and lab[15:].std() == 0 and lab[0] != lab[-1]

@@ -1,0 +1,88 @@
+"""Wavefront DTW vs the O(L^2) numpy oracle + metric properties."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dtw import dtw_pair, dtw_batch, dtw_cdist, dtw_full_table
+
+
+def _rand(n, l, seed):
+    return np.random.default_rng(seed).standard_normal((n, l)).astype(np.float32)
+
+
+@pytest.mark.parametrize("L", [2, 3, 8, 17, 32, 64])
+@pytest.mark.parametrize("window", [None, 1, 3, 10])
+def test_matches_oracle(dtw_ref, L, window):
+    if window is not None and window >= L:
+        pytest.skip("window >= L is equivalent to None")
+    a, b = _rand(2, L, seed=L * 7 + (window or 0))
+    got = float(dtw_pair(jnp.asarray(a), jnp.asarray(b), window))
+    want = dtw_ref(a, b, window)
+    assert got == pytest.approx(want, rel=1e-5)
+
+
+def test_identity_is_zero():
+    a = _rand(1, 50, 3)[0]
+    assert float(dtw_pair(a, a)) == pytest.approx(0.0, abs=1e-6)
+
+
+def test_symmetry():
+    a, b = _rand(2, 40, 11)
+    assert float(dtw_pair(a, b)) == pytest.approx(float(dtw_pair(b, a)), rel=1e-6)
+
+
+def test_band_monotonicity():
+    """Widening the band can only lower (or keep) the DTW cost."""
+    a, b = _rand(2, 48, 5)
+    costs = [float(dtw_pair(a, b, w)) for w in (1, 2, 4, 8, 16, None)]
+    for narrow, wide in zip(costs, costs[1:]):
+        assert wide <= narrow + 1e-5
+
+
+def test_dtw_le_euclidean():
+    """Unconstrained DTW is <= lock-step (diagonal path) squared cost."""
+    a, b = _rand(2, 64, 9)
+    assert float(dtw_pair(a, b)) <= float(np.sum((a - b) ** 2)) + 1e-4
+
+
+def test_batch_and_cdist_agree():
+    A = _rand(6, 32, 1)
+    B = _rand(4, 32, 2)
+    full = np.asarray(dtw_cdist(A, B, window=4, block=8))
+    for i in range(6):
+        for j in range(4):
+            assert full[i, j] == pytest.approx(
+                float(dtw_pair(A[i], B[j], 4)), rel=1e-5)
+    zipped = np.asarray(dtw_batch(A[:4], B, window=4))
+    assert np.allclose(zipped, full[np.arange(4), np.arange(4)], rtol=1e-5)
+
+
+def test_full_table_layout(dtw_ref):
+    """table[i+j, i] must equal the DP cell dtw[i, j]."""
+    a, b = _rand(2, 12, 21)
+    table = np.asarray(dtw_full_table(a, b))
+    for i in range(12):
+        for j in range(12):
+            want = dtw_ref(a[: i + 1], b[: j + 1])
+            assert table[i + j, i] == pytest.approx(want, rel=1e-4), (i, j)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 24), st.integers(0, 10_000))
+def test_property_nonneg_and_oracle(L, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal(L).astype(np.float32)
+    b = rng.standard_normal(L).astype(np.float32)
+    got = float(dtw_pair(a, b))
+    assert got >= 0.0
+    # oracle check on small sizes
+    n, m = len(a), len(b)
+    D = np.full((n + 1, m + 1), np.inf)
+    D[0, 0] = 0.0
+    for i in range(1, n + 1):
+        for j in range(1, m + 1):
+            c = (a[i - 1] - b[j - 1]) ** 2
+            D[i, j] = c + min(D[i - 1, j - 1], D[i, j - 1], D[i - 1, j])
+    assert got == pytest.approx(float(D[n, m]), rel=1e-4)

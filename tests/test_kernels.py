@@ -1,0 +1,195 @@
+"""Pallas kernels (interpret mode) vs pure-jnp oracles — shape/dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.dtw_band.ops import dtw_band, dtw_band_cdist
+from repro.kernels.dtw_band.ref import dtw_band_ref, dtw_band_cdist_ref
+from repro.kernels.pq_adc.ops import adc_lookup, adc_sym_cdist
+from repro.kernels.pq_adc.ref import adc_lookup_ref, adc_sym_cdist_ref
+from repro.kernels.pq_attn.ops import (build_qlut, encode_keys,
+                                       pq_attn_decode)
+from repro.kernels.pq_attn.ref import pq_attn_decode_ref, reconstruct_keys
+
+
+# ---------------------------------------------------------------------------
+# dtw_band
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,L", [(1, 8), (5, 16), (8, 32), (13, 64), (32, 24)])
+@pytest.mark.parametrize("window", [None, 2, 5])
+def test_dtw_band_matches_ref(n, L, window):
+    rng = np.random.default_rng(n * 131 + L)
+    A = rng.standard_normal((n, L)).astype(np.float32)
+    B = rng.standard_normal((n, L)).astype(np.float32)
+    got = np.asarray(dtw_band(A, B, window, interpret=True))
+    want = np.asarray(dtw_band_ref(A, B, window))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64, np.float16])
+def test_dtw_band_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    A = rng.standard_normal((4, 16)).astype(dtype)
+    B = rng.standard_normal((4, 16)).astype(dtype)
+    got = np.asarray(dtw_band(A, B, 3, interpret=True))
+    want = np.asarray(dtw_band_ref(A.astype(np.float32),
+                                   B.astype(np.float32), 3))
+    rtol = 1e-5 if dtype != np.float16 else 2e-2
+    np.testing.assert_allclose(got, want, rtol=rtol, atol=1e-2)
+
+
+def test_dtw_band_cdist_matches_ref():
+    rng = np.random.default_rng(3)
+    A = rng.standard_normal((6, 20)).astype(np.float32)
+    B = rng.standard_normal((9, 20)).astype(np.float32)
+    got = np.asarray(dtw_band_cdist(A, B, 4, interpret=True))
+    want = np.asarray(dtw_band_cdist_ref(A, B, 4))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_dtw_band_odd_batch_padding():
+    """Batch not divisible by block must round-trip through padding."""
+    rng = np.random.default_rng(4)
+    A = rng.standard_normal((7, 12)).astype(np.float32)
+    B = rng.standard_normal((7, 12)).astype(np.float32)
+    got = np.asarray(dtw_band(A, B, None, block=8, interpret=True))
+    want = np.asarray(dtw_band_ref(A, B, None))
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# pq_adc
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("na,nb,M,K", [(4, 4, 2, 8), (17, 9, 4, 16),
+                                       (64, 64, 8, 256), (3, 130, 5, 32)])
+def test_adc_sym_matches_ref(na, nb, M, K):
+    rng = np.random.default_rng(na * 7 + nb)
+    lut = np.abs(rng.standard_normal((M, K, K))).astype(np.float32)
+    lut = lut + lut.transpose(0, 2, 1)
+    a = rng.integers(0, K, (na, M)).astype(np.int32)
+    b = rng.integers(0, K, (nb, M)).astype(np.int32)
+    got = np.asarray(adc_sym_cdist(a, b, lut, block_a=8, block_b=8,
+                                   interpret=True))
+    want = np.asarray(adc_sym_cdist_ref(a, b, lut))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,M,K", [(5, 3, 8), (100, 7, 256), (257, 4, 64)])
+def test_adc_lookup_matches_ref(n, M, K):
+    rng = np.random.default_rng(n)
+    qlut = np.abs(rng.standard_normal((M, K))).astype(np.float32)
+    codes = rng.integers(0, K, (n, M)).astype(np.int32)
+    got = np.asarray(adc_lookup(codes, qlut, block=32, interpret=True))
+    want = np.asarray(adc_lookup_ref(codes, qlut))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_adc_sym_consistent_with_core_pq():
+    """Kernel output must equal the core library's symmetric distance."""
+    from repro.core.pq import cdist_sym
+    rng = np.random.default_rng(11)
+    M, K = 4, 16
+    lut = np.abs(rng.standard_normal((M, K, K))).astype(np.float32)
+    for m in range(M):
+        np.fill_diagonal(lut[m], 0.0)
+    codes = rng.integers(0, K, (12, M)).astype(np.int32)
+    got = np.asarray(adc_sym_cdist(codes, codes, lut, interpret=True))
+    want = np.asarray(cdist_sym(jnp.asarray(codes), jnp.asarray(codes),
+                                jnp.asarray(lut)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# pq_attn
+# ---------------------------------------------------------------------------
+
+def _attn_setup(S, G, H, M, K, Ds, seed=0):
+    rng = np.random.default_rng(seed)
+    D = M * Ds
+    q = rng.standard_normal((H, D)).astype(np.float32)
+    k_books = rng.standard_normal((G, M, K, Ds)).astype(np.float32)
+    k_codes = rng.integers(0, K, (S, G, M)).astype(np.int32)
+    v = rng.standard_normal((S, G, D)).astype(np.float32)
+    return q, k_codes, k_books, v
+
+
+@pytest.mark.parametrize("S,G,H,M,K,Ds",
+                         [(16, 1, 1, 2, 4, 4),
+                          (64, 2, 4, 4, 16, 8),
+                          (100, 2, 8, 2, 32, 16),
+                          (256, 4, 8, 8, 64, 8)])
+def test_pq_attn_matches_ref(S, G, H, M, K, Ds):
+    q, k_codes, k_books, v = _attn_setup(S, G, H, M, K, Ds, seed=S)
+    got = np.asarray(pq_attn_decode(q, k_codes, k_books, v, block_s=32,
+                                    interpret=True))
+    want = np.asarray(pq_attn_decode_ref(q, k_codes, k_books, v))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_pq_attn_valid_len_masking():
+    q, k_codes, k_books, v = _attn_setup(64, 2, 4, 4, 16, 8, seed=1)
+    got = np.asarray(pq_attn_decode(q, k_codes, k_books, v, valid_len=40,
+                                    block_s=16, interpret=True))
+    want = np.asarray(pq_attn_decode_ref(q, k_codes, k_books, v,
+                                         valid_len=40))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+    # masked tail must actually change the answer vs full length
+    full = np.asarray(pq_attn_decode_ref(q, k_codes, k_books, v))
+    assert not np.allclose(want, full, atol=1e-4)
+
+
+def test_pq_attn_exact_when_codes_reconstruct_exactly():
+    """If every key IS a codeword, PQ attention == exact attention."""
+    rng = np.random.default_rng(5)
+    S, G, H, M, K, Ds = 32, 1, 2, 2, 8, 8
+    D = M * Ds
+    k_books = rng.standard_normal((G, M, K, Ds)).astype(np.float32)
+    k_codes = rng.integers(0, K, (S, G, M)).astype(np.int32)
+    keys = np.asarray(reconstruct_keys(jnp.asarray(k_codes),
+                                       jnp.asarray(k_books)))  # (S, G, D)
+    q = rng.standard_normal((H, D)).astype(np.float32)
+    v = rng.standard_normal((S, G, D)).astype(np.float32)
+    # exact attention with the reconstructed keys
+    scores = np.einsum("hd,sd->hs", q, keys[:, 0]) / np.sqrt(D)
+    p = np.exp(scores - scores.max(1, keepdims=True))
+    p /= p.sum(1, keepdims=True)
+    want = p @ v[:, 0]
+    got = np.asarray(pq_attn_decode(q, k_codes, k_books, v, block_s=8,
+                                    interpret=True))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_encode_keys_roundtrip():
+    """encode_keys must pick the true nearest codeword."""
+    rng = np.random.default_rng(7)
+    G, M, K, Ds, S = 2, 3, 16, 4, 20
+    k_books = rng.standard_normal((G, M, K, Ds)).astype(np.float32)
+    codes = rng.integers(0, K, (S, G, M)).astype(np.int32)
+    keys = np.asarray(reconstruct_keys(jnp.asarray(codes),
+                                       jnp.asarray(k_books)))
+    got = np.asarray(encode_keys(jnp.asarray(keys).reshape(S, G, M * Ds),
+                                 jnp.asarray(k_books)))
+    assert (got == codes).all()
+
+
+def test_build_qlut_algebra():
+    """qlut gathers must equal dot products with reconstructed keys."""
+    rng = np.random.default_rng(9)
+    G, R, M, K, Ds = 2, 3, 4, 8, 4
+    H, D = G * R, M * Ds
+    q = rng.standard_normal((H, D)).astype(np.float32)
+    books = rng.standard_normal((G, M, K, Ds)).astype(np.float32)
+    qlut = np.asarray(build_qlut(jnp.asarray(q), jnp.asarray(books)))
+    codes = rng.integers(0, K, (5, G, M)).astype(np.int32)
+    keys = np.asarray(reconstruct_keys(jnp.asarray(codes),
+                                       jnp.asarray(books)))
+    for s in range(5):
+        for h in range(H):
+            g = h // R
+            want = float(q[h] @ keys[s, g])
+            got = sum(qlut[h, m, codes[s, g, m]] for m in range(M))
+            assert got == pytest.approx(want, rel=1e-4, abs=1e-4)

@@ -1,0 +1,63 @@
+"""Lower bounds must never exceed true (squared, banded) DTW."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dtw import dtw_pair
+from repro.core.lb import keogh_envelope, lb_keogh, lb_kim, lb_cascade
+
+
+def test_envelope_contains_series():
+    x = np.random.default_rng(0).standard_normal(64).astype(np.float32)
+    up, lo = keogh_envelope(x, window=5)
+    assert np.all(np.asarray(up) >= x - 1e-6)
+    assert np.all(np.asarray(lo) <= x + 1e-6)
+
+
+def test_envelope_batched():
+    X = np.random.default_rng(1).standard_normal((7, 32)).astype(np.float32)
+    up, lo = keogh_envelope(X, window=3)
+    assert up.shape == X.shape and lo.shape == X.shape
+    u0, l0 = keogh_envelope(X[0], window=3)
+    assert np.allclose(np.asarray(up[0]), np.asarray(u0))
+
+
+def test_envelope_window_zero_is_identity():
+    x = np.random.default_rng(2).standard_normal(16).astype(np.float32)
+    up, lo = keogh_envelope(x, window=0)
+    assert np.allclose(np.asarray(up), x) and np.allclose(np.asarray(lo), x)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(4, 40), st.integers(1, 8), st.integers(0, 10_000))
+def test_lb_keogh_is_lower_bound(L, w, seed):
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal(L).astype(np.float32)
+    c = rng.standard_normal(L).astype(np.float32)
+    w = min(w, L - 1)
+    up, lo = keogh_envelope(c, window=w)
+    bound = float(lb_keogh(jnp.asarray(q), up, lo))
+    true = float(dtw_pair(q, c, window=w))
+    assert bound <= true + 1e-4
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 40), st.integers(0, 10_000))
+def test_lb_kim_is_lower_bound(L, seed):
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal(L).astype(np.float32)
+    c = rng.standard_normal(L).astype(np.float32)
+    assert float(lb_kim(q, c)) <= float(dtw_pair(q, c)) + 1e-4
+
+
+def test_cascade_le_banded_dtw():
+    rng = np.random.default_rng(7)
+    q = rng.standard_normal(32).astype(np.float32)
+    C = rng.standard_normal((16, 32)).astype(np.float32)
+    w = 4
+    up, lo = keogh_envelope(C, window=w)
+    bounds = np.asarray(lb_cascade(jnp.asarray(q), C, up, lo))
+    for k in range(16):
+        assert bounds[k] <= float(dtw_pair(q, C[k], window=w)) + 1e-4

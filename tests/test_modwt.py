@@ -1,0 +1,86 @@
+"""MODWT pre-alignment: scale coefficients, segmentation, snapping, interp."""
+
+import numpy as np
+import pytest
+
+from repro.core.modwt import (modwt_scale, segment_points, snap_splits,
+                              extract_segments, prealign, fixed_segments)
+
+
+def test_scale_level1_is_pairwise_mean():
+    x = np.arange(8, dtype=np.float32)
+    v = np.asarray(modwt_scale(x, 1))
+    want = 0.5 * (x + np.roll(x, 1))
+    assert np.allclose(v, want)
+
+
+def test_scale_level_j_is_dyadic_mean():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(64).astype(np.float32)
+    for j in (1, 2, 3):
+        v = np.asarray(modwt_scale(x, j))
+        width = 2 ** j
+        want = np.array([np.mean([x[(i - s) % 64] for s in range(width)])
+                         for i in range(64)])
+        assert np.allclose(v, want, atol=1e-5), j
+
+
+def test_constant_series_has_no_segment_points():
+    x = np.ones(32, np.float32)
+    pts = np.asarray(segment_points(x, 2))
+    assert not pts.any()
+
+
+def test_segment_points_on_square_wave():
+    t = np.arange(64)
+    x = np.where((t // 16) % 2 == 0, 1.0, -1.0).astype(np.float32)
+    pts = np.asarray(segment_points(x, 3))
+    assert pts.any()  # transitions must be detected
+
+
+def test_snap_splits_uses_rightmost_point_in_tail():
+    L, n_sub, tail = 32, 4, 4
+    pts = np.zeros(L, bool)
+    pts[6] = True   # inside [8-4, 8] -> split 8 moves to 6
+    pts[5] = True   # 6 is right-most, wins
+    pts[20] = True  # inside [24-4, 24] -> split 24 moves to 20; split 16 stays
+    bounds = np.asarray(snap_splits(pts, n_sub, tail))
+    assert bounds.tolist() == [0, 6, 16, 20, 32]
+
+
+def test_snap_splits_batched_shape():
+    pts = np.zeros((5, 64), bool)
+    b = np.asarray(snap_splits(pts, 4, 3))
+    assert b.shape == (5, 5)
+    assert (b[:, 0] == 0).all() and (b[:, -1] == 64).all()
+
+
+def test_extract_segments_identity_resample():
+    x = np.arange(16, dtype=np.float32)
+    bounds = np.array([0, 8, 16], np.int32)
+    segs = np.asarray(extract_segments(x, bounds, 8))
+    assert np.allclose(segs[0], x[:8], atol=1e-5)
+    assert np.allclose(segs[1], x[8:], atol=1e-5)
+
+
+def test_extract_segments_linear_interp():
+    x = np.arange(16, dtype=np.float32)
+    bounds = np.array([0, 4, 16], np.int32)
+    segs = np.asarray(extract_segments(x, bounds, 7))
+    # first segment covers x[0..3], resampled to 7 points: linspace(0,3,7)
+    assert np.allclose(segs[0], np.linspace(0, 3, 7), atol=1e-5)
+
+
+def test_prealign_shapes_and_finiteness():
+    rng = np.random.default_rng(3)
+    X = rng.standard_normal((6, 120)).astype(np.float32)
+    out = np.asarray(prealign(X, n_sub=4, level=3, tail=5))
+    assert out.shape == (6, 4, 120 // 4 + 5)
+    assert np.isfinite(out).all()
+
+
+def test_fixed_segments_roundtrip():
+    X = np.arange(24, dtype=np.float32).reshape(2, 12)
+    segs = np.asarray(fixed_segments(X, 3))
+    assert segs.shape == (2, 3, 4)
+    assert np.allclose(segs.reshape(2, 12), X)

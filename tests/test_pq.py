@@ -1,0 +1,164 @@
+"""Product quantizer invariants: fit/encode/distances/memory (§3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pq as pqm
+from repro.core.dtw import dtw_cdist
+from repro.core.pq import PQConfig
+from repro.data.timeseries import cbf
+
+
+@pytest.fixture(scope="module")
+def small_pq():
+    X, y = cbf(12, length=64, seed=0)  # 36 series
+    cfg = PQConfig(n_sub=4, codebook_size=8, window_frac=0.15,
+                   kmeans_iters=3, dba_iters=1, use_prealign=True,
+                   wavelet_level=2, tail_frac=0.2, refine_frac=0.5)
+    cb = pqm.fit(jax.random.PRNGKey(0), X, cfg)
+    return X, y, cfg, cb
+
+
+def test_codebook_shapes(small_pq):
+    X, _, cfg, cb = small_pq
+    S = cfg.subseq_len(X.shape[1])
+    assert cb.centroids.shape == (4, 8, S)
+    assert cb.lut.shape == (4, 8, 8)
+    assert cb.env_upper.shape == (4, 8, S)
+    assert np.isfinite(np.asarray(cb.centroids)).all()
+
+
+def test_lut_is_symmetric_dtw(small_pq):
+    X, _, cfg, cb = small_pq
+    lut = np.asarray(cb.lut)
+    assert np.allclose(lut, lut.transpose(0, 2, 1), atol=1e-4)
+    assert np.allclose(np.diagonal(lut, axis1=1, axis2=2), 0.0, atol=1e-5)
+    # spot-check one entry against direct DTW
+    w = cfg.window(X.shape[1])
+    d = dtw_cdist(cb.centroids[0], cb.centroids[0], w)
+    assert np.allclose(lut[0], np.asarray(d), atol=1e-4)
+
+
+def test_encode_in_range_and_deterministic(small_pq):
+    X, _, cfg, cb = small_pq
+    c1 = np.asarray(pqm.encode(X, cb, cfg))
+    c2 = np.asarray(pqm.encode(X, cb, cfg))
+    assert c1.shape == (X.shape[0], cfg.n_sub)
+    assert (c1 >= 0).all() and (c1 < cfg.codebook_size).all()
+    assert (c1 == c2).all()
+
+
+def test_exact_encode_matches_bruteforce(small_pq):
+    X, _, cfg, cb = small_pq
+    cfg_exact = PQConfig(**{**cfg.__dict__, "exact_encode": True})
+    codes = np.asarray(pqm.encode(X, cb, cfg_exact))
+    segs = np.asarray(pqm.segment(X, cfg))
+    w = cfg.window(X.shape[1])
+    for n in range(0, X.shape[0], 7):
+        for m in range(cfg.n_sub):
+            d = np.asarray(dtw_cdist(segs[n][m][None], cb.centroids[m], w))[0]
+            assert codes[n, m] == int(np.argmin(d))
+
+
+def test_filter_refine_soundness_certificate(small_pq):
+    """With refine_frac=0.5 on easy data most codes should be certified, and
+    certified codes must equal the exact encoding."""
+    X, _, cfg, cb = small_pq
+    codes, sound = pqm.encode_with_stats(X, cb, cfg)
+    codes, sound = np.asarray(codes), np.asarray(sound)
+    cfg_exact = PQConfig(**{**cfg.__dict__, "exact_encode": True})
+    exact = np.asarray(pqm.encode(X, cb, cfg_exact))
+    assert (codes[sound] == exact[sound]).all()
+    assert sound.mean() > 0.5
+
+
+def test_sym_distance_matches_lut_sum(small_pq):
+    X, _, cfg, cb = small_pq
+    codes = pqm.encode(X, cb, cfg)
+    D = np.asarray(pqm.cdist_sym(codes, codes, cb.lut))
+    codes_np = np.asarray(codes)
+    lut = np.asarray(cb.lut)
+    i, j = 3, 17
+    want = np.sqrt(sum(lut[m, codes_np[i, m], codes_np[j, m]]
+                       for m in range(cfg.n_sub)))
+    assert D[i, j] == pytest.approx(want, rel=1e-5)
+    assert np.allclose(D, D.T, atol=1e-5)
+    assert np.allclose(np.diag(D), 0.0, atol=1e-5)
+
+
+def test_asym_le_sym_error(small_pq):
+    """Asymmetric distances use the raw query, so queries identical to a
+    database series should give distance <= the symmetric value."""
+    X, _, cfg, cb = small_pq
+    codes = pqm.encode(X, cb, cfg)
+    Dس = np.asarray(pqm.cdist_sym(codes, codes, cb.lut))
+    Da = np.asarray(pqm.cdist_asym(X, codes, cb, cfg))
+    assert Da.shape == Dس.shape
+    assert np.isfinite(Da).all()
+
+
+def test_sym_refined_bounds(small_pq):
+    """§4.2: refined distance equals sym where codes differ; for identical
+    codes it is >= 0 and <= the true subspace DTW distance."""
+    X, _, cfg, cb = small_pq
+    codes = pqm.encode(X, cb, cfg)
+    segs = pqm.segment(X, cfg)
+    D_ref = np.asarray(pqm.cdist_sym_refined(codes, segs, codes, segs, cb))
+    D_sym = np.asarray(pqm.cdist_sym(codes, codes, cb.lut))
+    codes_np = np.asarray(codes)
+    diff_mask = (codes_np[:, None, :] != codes_np[None, :, :]).all(-1)
+    assert np.allclose(D_ref[diff_mask], D_sym[diff_mask], atol=1e-5)
+    assert (D_ref >= -1e-6).all()
+    # Where codes are shared the fallback is the Keogh LB of the raw subspace
+    # vs the shared centroid — bounded by the true DTW to that centroid.
+    from repro.core.dtw import dtw_pair
+    segs_np = np.asarray(segs)
+    w = cfg.window(X.shape[1])
+    i = 0  # diagonal pair (i, i) shares every code
+    per_sub_sq = np.asarray(D_ref[i, i]) ** 2
+    true_sq = sum(float(dtw_pair(segs_np[i, m],
+                                 np.asarray(cb.centroids[m, codes_np[i, m]]),
+                                 w)) for m in range(cfg.n_sub))
+    assert per_sub_sq <= true_sq + 1e-4
+
+
+def test_memory_cost_formula():
+    cfg = PQConfig(n_sub=7, codebook_size=256, use_prealign=False)
+    mc = pqm.memory_cost(cfg, D=140, n_series=1_000_000)
+    # paper §3.4: 140-long series -> 80x compression with 7 subspaces,
+    # and ~2.3MB of auxiliary structures for D=140, K=256, M=7.
+    assert mc["compression"] == pytest.approx(80.0)
+    assert mc["code_bytes"] == 7 * 1_000_000
+    assert mc["aux_bytes"] == pytest.approx(2.3e6, rel=0.05)
+    assert mc["aux_bytes"] < 0.01 * mc["raw_bytes"]
+
+
+def test_euclidean_metric_variant():
+    X, y = cbf(8, length=64, seed=1)
+    cfg = PQConfig(n_sub=4, codebook_size=8, metric="euclidean",
+                   kmeans_iters=5, use_prealign=False)
+    cb = pqm.fit(jax.random.PRNGKey(1), X, cfg)
+    codes = np.asarray(pqm.encode(X, cb, cfg))
+    assert codes.shape == (X.shape[0], 4)
+    segs = np.asarray(pqm.segment(X, cfg))
+    # exactness: euclidean encoding is always exact argmin
+    for n in range(0, X.shape[0], 5):
+        d = ((np.asarray(cb.centroids[2]) - segs[n, 2][None]) ** 2).sum(-1)
+        assert codes[n, 2] == int(np.argmin(d))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000))
+def test_property_sym_distance_triangle_of_zero(seed):
+    """Series mapping to identical codes have symmetric distance exactly 0."""
+    rng = np.random.default_rng(seed)
+    lut = np.abs(rng.standard_normal((3, 5, 5))).astype(np.float32)
+    for m in range(3):
+        np.fill_diagonal(lut[m], 0.0)
+    codes = rng.integers(0, 5, (4, 3)).astype(np.int32)
+    D = np.asarray(pqm.cdist_sym(jnp.asarray(codes), jnp.asarray(codes),
+                                 jnp.asarray(lut)))
+    assert np.allclose(np.diag(D), 0.0, atol=1e-6)

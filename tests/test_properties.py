@@ -1,0 +1,253 @@
+"""Property-based tests (hypothesis) on the system's core invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dtw import dtw_pair, dtw_cdist, euclidean_sq
+from repro.core.lb import keogh_envelope, lb_keogh, lb_kim
+from repro.core.metrics import adjusted_rand_index, rand_index
+from repro.core.cluster import cut_k, linkage
+from repro.core.pq import PQConfig, PQCodebook, cdist_sym, encode_with_stats, fit
+from repro.train.optim import AdamWConfig, adamw_init, adamw_step, warmup_cosine
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _series(draw, n, length, lo=-4.0, hi=4.0):
+    vals = draw(st.lists(
+        st.floats(lo, hi, allow_nan=False, allow_infinity=False, width=32),
+        min_size=n * length, max_size=n * length))
+    return np.asarray(vals, np.float32).reshape(n, length)
+
+
+@st.composite
+def series_pair(draw, length=16):
+    x = _series(draw, 1, length)[0]
+    y = _series(draw, 1, length)[0]
+    return x, y
+
+
+class TestDtwInvariants:
+    @given(series_pair())
+    @settings(**SETTINGS)
+    def test_identity_zero(self, pair):
+        a, _ = pair
+        d = float(dtw_pair(jnp.asarray(a), jnp.asarray(a), None))
+        assert d == pytest.approx(0.0, abs=1e-5)
+
+    @given(series_pair())
+    @settings(**SETTINGS)
+    def test_symmetry(self, pair):
+        a, b = pair
+        dab = float(dtw_pair(jnp.asarray(a), jnp.asarray(b), None))
+        dba = float(dtw_pair(jnp.asarray(b), jnp.asarray(a), None))
+        assert dab == pytest.approx(dba, rel=1e-5, abs=1e-5)
+
+    @given(series_pair())
+    @settings(**SETTINGS)
+    def test_dtw_leq_euclidean(self, pair):
+        """The diagonal path is one warping path, so DTW <= squared ED."""
+        a, b = pair
+        d = float(dtw_pair(jnp.asarray(a), jnp.asarray(b), None))
+        ed = float(np.sum((a - b) ** 2))
+        assert d <= ed + 1e-4 + 1e-5 * abs(ed)
+
+    @given(series_pair(), st.integers(1, 16))
+    @settings(**SETTINGS)
+    def test_window_monotone(self, pair, w):
+        """Widening the Sakoe-Chiba band can only lower the distance."""
+        a, b = pair
+        aj, bj = jnp.asarray(a), jnp.asarray(b)
+        d_w = float(dtw_pair(aj, bj, w))
+        d_full = float(dtw_pair(aj, bj, None))
+        assert d_full <= d_w + 1e-4 + 1e-5 * abs(d_w)
+
+    @given(series_pair())
+    @settings(**SETTINGS)
+    def test_full_window_equals_unconstrained(self, pair):
+        a, b = pair
+        aj, bj = jnp.asarray(a), jnp.asarray(b)
+        assert float(dtw_pair(aj, bj, len(a))) == pytest.approx(
+            float(dtw_pair(aj, bj, None)), rel=1e-5, abs=1e-5)
+
+
+class TestLowerBounds:
+    @given(series_pair(), st.integers(1, 8))
+    @settings(**SETTINGS)
+    def test_lb_keogh_sound(self, pair, w):
+        """LB_Keogh(q, env(c)) <= DTW(q, c) — the pruning soundness."""
+        q, c = pair
+        up, lo = keogh_envelope(jnp.asarray(c)[None, :], w)
+        lb = float(lb_keogh(jnp.asarray(q)[None, :], up, lo)[0])
+        d = float(dtw_pair(jnp.asarray(q), jnp.asarray(c), w))
+        assert lb <= d + 1e-3 + 1e-4 * abs(d)
+
+    @given(series_pair())
+    @settings(**SETTINGS)
+    def test_lb_kim_sound(self, pair):
+        q, c = pair
+        lb = float(lb_kim(jnp.asarray(q)[None, :], jnp.asarray(c)[None, :])[0])
+        d = float(dtw_pair(jnp.asarray(q), jnp.asarray(c), None))
+        assert lb <= d + 1e-3 + 1e-4 * abs(d)
+
+    @given(st.integers(0, 10_000))
+    @settings(**SETTINGS)
+    def test_envelope_contains_series(self, seed):
+        x = np.random.default_rng(seed).standard_normal((3, 12)).astype(
+            np.float32)
+        up, lo = keogh_envelope(jnp.asarray(x), 2)
+        assert bool(jnp.all(up >= jnp.asarray(x) - 1e-6))
+        assert bool(jnp.all(lo <= jnp.asarray(x) + 1e-6))
+
+
+class TestQuantizer:
+    @pytest.fixture(scope="class")
+    def fitted(self):
+        rng = np.random.default_rng(0)
+        X = jnp.asarray(rng.standard_normal((24, 32)), jnp.float32)
+        cfg = PQConfig(n_sub=4, codebook_size=8, use_prealign=False,
+                       kmeans_iters=2, dba_iters=1)
+        cb = fit(jax.random.PRNGKey(0), X, cfg)
+        return X, cfg, cb
+
+    def test_codes_in_range_and_deterministic(self, fitted):
+        X, cfg, cb = fitted
+        codes1, _ = encode_with_stats(X, cb, cfg)
+        codes2, _ = encode_with_stats(X, cb, cfg)
+        assert codes1.shape == (24, 4)
+        assert int(codes1.min()) >= 0 and int(codes1.max()) < 8
+        np.testing.assert_array_equal(np.asarray(codes1), np.asarray(codes2))
+
+    def test_sym_distance_axioms(self, fitted):
+        X, cfg, cb = fitted
+        codes, _ = encode_with_stats(X, cb, cfg)
+        d = np.asarray(cdist_sym(codes, codes, cb.lut))
+        assert (d >= -1e-6).all()
+        np.testing.assert_allclose(d, d.T, atol=1e-5)   # symmetric
+        assert np.allclose(np.diag(d), 0.0, atol=1e-5)  # self-distance 0
+
+    def test_lut_diagonal_zero(self, fitted):
+        _, _, cb = fitted
+        lut = np.asarray(cb.lut)
+        for m in range(lut.shape[0]):
+            assert np.allclose(np.diag(lut[m]), 0.0, atol=1e-4)
+
+
+class TestClusterMetrics:
+    @given(st.integers(2, 6), st.integers(0, 1000))
+    @settings(**SETTINGS)
+    def test_cut_k_produces_k(self, k, seed):
+        rng = np.random.default_rng(seed)
+        n = 12
+        pts = rng.standard_normal((n, 2))
+        d = np.linalg.norm(pts[:, None] - pts[None, :], axis=-1)
+        Z = linkage(d, "complete")
+        labels = cut_k(Z, n, k)
+        assert len(np.unique(labels)) == k
+
+    @given(st.integers(0, 1000))
+    @settings(**SETTINGS)
+    def test_rand_index_bounds(self, seed):
+        rng = np.random.default_rng(seed)
+        a = rng.integers(0, 3, 20)
+        b = rng.integers(0, 3, 20)
+        assert rand_index(a, a) == pytest.approx(1.0)
+        assert 0.0 <= rand_index(a, b) <= 1.0
+
+    @given(st.integers(0, 1000))
+    @settings(**SETTINGS)
+    def test_ari_permutation_invariant(self, seed):
+        rng = np.random.default_rng(seed)
+        a = rng.integers(0, 3, 16)
+        b = rng.integers(0, 3, 16)
+        perm = {0: 2, 1: 0, 2: 1}
+        b2 = np.vectorize(perm.get)(b)
+        assert adjusted_rand_index(a, b) == pytest.approx(
+            adjusted_rand_index(a, b2), abs=1e-9)
+
+
+class TestOptimizer:
+    def test_zero_grad_moves_only_by_decay(self):
+        params = {"w": jnp.ones((4, 4)), "b": jnp.zeros((4,))}
+        opt = adamw_init(params)
+        cfg = AdamWConfig(lr=1e-2, weight_decay=0.0)
+        zero = jax.tree.map(jnp.zeros_like, params)
+        new_p, _ = adamw_step(cfg, params, zero, opt)
+        np.testing.assert_allclose(np.asarray(new_p["w"]),
+                                   np.asarray(params["w"]), atol=1e-6)
+
+    @given(st.integers(0, 20_000))
+    @settings(**SETTINGS)
+    def test_lr_schedule_bounds(self, step):
+        cfg = AdamWConfig(lr=3e-4, warmup_steps=100, total_steps=10_000,
+                          min_lr_frac=0.1)
+        lr = float(warmup_cosine(cfg, jnp.asarray(step)))
+        assert 0.0 <= lr <= cfg.lr * (1 + 1e-6)
+        if step >= cfg.total_steps:
+            assert lr == pytest.approx(cfg.lr * cfg.min_lr_frac, rel=1e-4)
+
+    def test_grad_step_descends_quadratic(self):
+        params = {"w": jnp.asarray([3.0, -2.0])}
+        opt = adamw_init(params)
+        cfg = AdamWConfig(lr=5e-2, weight_decay=0.0, warmup_steps=0)
+        for _ in range(50):
+            grads = {"w": 2 * params["w"]}
+            params, opt = adamw_step(cfg, params, grads, opt)
+        assert float(jnp.abs(params["w"]).max()) < 1.5
+
+
+class TestHloCostModel:
+    def test_shape_bytes(self):
+        from repro.launch.hlo_cost import _shape_bytes
+        assert _shape_bytes("f32[2,3]{1,0}") == 24
+        assert _shape_bytes("bf16[10]") == 20
+        assert _shape_bytes("(f32[2], s32[3])") == 8 + 12
+        assert _shape_bytes("pred[7]") == 7
+
+    def test_trip_count_multiplication(self):
+        from repro.launch.hlo_cost import analyze_module
+        hlo = """
+HloModule m
+%body (p: (s32[], f32[4,4])) -> (s32[], f32[4,4]) {
+  %p = (s32[], f32[4,4]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[4,4]{1,0} get-tuple-element(%p), index=1
+  %y = f32[4,4]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (s32[], f32[4,4]) tuple(%i, %y)
+}
+%cond (p: (s32[], f32[4,4])) -> pred[] {
+  %p = (s32[], f32[4,4]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+ENTRY %main (a: f32[4,4]) -> (s32[], f32[4,4]) {
+  %a = f32[4,4]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[4,4]) tuple(%z, %a)
+  ROOT %w = (s32[], f32[4,4]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+}
+"""
+        c = analyze_module(hlo)
+        # one 4x4x4 dot = 2*4*4*4 = 128 flops, x5 trips
+        assert c.flops == pytest.approx(128 * 5)
+
+    def test_collective_conventions(self):
+        from repro.launch.hlo_cost import analyze_module
+        hlo = """
+HloModule m
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+ENTRY %main (x: f32[128]) -> f32[128] {
+  %x = f32[128]{0} parameter(0)
+  ROOT %ar = f32[128]{0} all-reduce(%x), to_apply=%add
+}
+"""
+        c = analyze_module(hlo)
+        assert c.coll["all-reduce"] == pytest.approx(2 * 128 * 4)
