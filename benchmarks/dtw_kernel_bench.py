@@ -1,0 +1,95 @@
+"""Banded-DTW kernel throughput: pure-JAX scan vs full-width Pallas vs
+band-compressed Pallas, at several ``(L, window, batch)`` points.
+
+The band-compressed wavefront keeps the sequential depth at ``2L-1`` but
+shrinks every step from ``L`` lanes to ``~window+1`` lanes, so at the
+paper's default ``window_frac = 0.1`` it should approach a ``~L/(w+1)``-x
+reduction in per-step VPU work over the full-width sweep.
+
+Results go to ``experiments/bench/dtw_kernel.json`` (the shared Bench dir)
+AND to a top-level ``BENCH_dtw_kernel.json`` summary with the headline
+band-vs-full speedups.  Run with ``python -m benchmarks.dtw_kernel_bench``
+or via ``python -m benchmarks.run --only dtw_kernel``.
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax
+import numpy as np
+
+from repro.core.dtw import dtw_batch
+from repro.kernels.common import default_interpret
+from repro.kernels.dtw_band.ops import dtw_band
+
+from .common import Bench, timeit
+
+WINDOW_FRAC = 0.1
+
+
+def _points(quick: bool):
+    # (length, batch) — windows derive from WINDOW_FRAC
+    if quick:
+        return ((128, 64), (256, 64), (512, 32))
+    return ((128, 256), (256, 256), (512, 128), (1024, 64), (2048, 32))
+
+
+def run(quick: bool = True) -> Bench:
+    b = Bench("dtw_kernel")
+    interpret = default_interpret()
+    rng = np.random.default_rng(0)
+    summary = []
+    for L, batch in _points(quick):
+        w = max(1, int(round(WINDOW_FRAC * L)))
+        A = rng.standard_normal((batch, L)).astype(np.float32)
+        B = rng.standard_normal((batch, L)).astype(np.float32)
+
+        impls = {
+            "jax_scan": lambda: dtw_batch(A, B, w),
+            "pallas_full": lambda: dtw_band(A, B, w, interpret=interpret,
+                                            mode="full"),
+            "pallas_band": lambda: dtw_band(A, B, w, interpret=interpret,
+                                            mode="compressed"),
+        }
+        # all three must agree before timing means anything
+        ref = np.asarray(impls["jax_scan"]())
+        times = {}
+        for name, fn in impls.items():
+            np.testing.assert_allclose(np.asarray(fn()), ref,
+                                       rtol=1e-4, atol=1e-4)
+            times[name] = timeit(fn, repeats=3)["median_s"]
+
+        pairs_per_s = {k: batch / v for k, v in times.items()}
+        band_vs_full = times["pallas_full"] / times["pallas_band"]
+        band_vs_jax = times["jax_scan"] / times["pallas_band"]
+        b.add(L=L, batch=batch, window=w,
+              jax_scan_s=times["jax_scan"],
+              pallas_full_s=times["pallas_full"],
+              pallas_band_s=times["pallas_band"],
+              band_vs_full_speedup=band_vs_full,
+              band_vs_jax_speedup=band_vs_jax,
+              pairs_per_s_band=pairs_per_s["pallas_band"])
+        summary.append(dict(L=L, batch=batch, window=w, times_s=times,
+                            band_vs_full_speedup=band_vs_full,
+                            band_vs_jax_speedup=band_vs_jax))
+
+    path = b.save()
+    headline = {
+        "window_frac": WINDOW_FRAC,
+        "backend": jax.default_backend(),
+        "pallas_interpret": interpret,
+        "rows": summary,
+        "min_band_vs_full_speedup": min(r["band_vs_full_speedup"]
+                                        for r in summary),
+    }
+    with open("BENCH_dtw_kernel.json", "w") as f:
+        json.dump(headline, f, indent=1)
+    print(f"  saved {path} and BENCH_dtw_kernel.json "
+          f"(min band-vs-full speedup "
+          f"{headline['min_band_vs_full_speedup']:.2f}x)")
+    return b
+
+
+if __name__ == "__main__":
+    run()

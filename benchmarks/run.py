@@ -6,10 +6,12 @@ from __future__ import annotations
 import argparse
 import time
 
-from . import (fig5a_scaling, fig5b_params, fig5c_prealign, ivf_scaling,
-               memory_cost, pqkv_bench, roofline, table1_accuracy)
+from . import (dtw_kernel_bench, fig5a_scaling, fig5b_params, fig5c_prealign,
+               ivf_scaling, memory_cost, pqkv_bench, roofline,
+               table1_accuracy)
 
 SUITES = {
+    "dtw_kernel": dtw_kernel_bench.run,
     "fig5a": fig5a_scaling.run,
     "fig5b": fig5b_params.run,
     "fig5c": fig5c_prealign.run,

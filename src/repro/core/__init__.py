@@ -1,6 +1,8 @@
 """PQDTW core — the paper's contribution as a composable JAX library.
 
 Public API:
+    dispatch    — unified elastic-kernel dispatch (Pallas on TPU, pure-JAX
+                  fallback; $REPRO_ELASTIC_BACKEND / set_backend override)
     dtw         — wavefront (banded) DTW primitives
     lb          — Keogh envelopes + lower bounds
     modwt       — MODWT pre-alignment (§3.5)
@@ -13,8 +15,10 @@ Public API:
 
 from .pq import (PQConfig, PQCodebook, fit, encode, encode_with_stats,
                  cdist_sym, cdist_asym, cdist_sym_refined, segment,
-                 memory_cost)
+                 memory_cost, query_lut, query_lut_batch)
 from .dtw import dtw, dtw_pair, dtw_batch, dtw_cdist
+from .dispatch import (elastic_pairwise, elastic_cdist, adc_cdist,
+                       adc_lookup, get_backend, set_backend, use_backend)
 from .lb import keogh_envelope, lb_keogh, lb_kim, lb_cascade
 from .modwt import prealign, fixed_segments, modwt_scale
 from .dba import dba, dba_update, alignment_path
@@ -27,7 +31,10 @@ from .metrics import rand_index, adjusted_rand_index, error_rate
 __all__ = [
     "PQConfig", "PQCodebook", "fit", "encode", "encode_with_stats",
     "cdist_sym", "cdist_asym", "cdist_sym_refined", "segment", "memory_cost",
+    "query_lut", "query_lut_batch",
     "dtw", "dtw_pair", "dtw_batch", "dtw_cdist",
+    "elastic_pairwise", "elastic_cdist", "adc_cdist", "adc_lookup",
+    "get_backend", "set_backend", "use_backend",
     "keogh_envelope", "lb_keogh", "lb_kim", "lb_cascade",
     "prealign", "fixed_segments", "modwt_scale",
     "dba", "dba_update", "alignment_path",

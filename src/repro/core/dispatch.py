@@ -1,0 +1,154 @@
+"""Unified execution-engine dispatch for every elastic-distance hot path.
+
+Every DTW / ADC consumer in the library (PQ encoding, query LUTs, DBA
+k-means assignment, IVF coarse search, exact NN-DTW, symmetric code
+distances) funnels through the four entry points here instead of calling a
+specific implementation, so the Pallas kernels are the *default engine* on
+TPU rather than a dead benchmark artifact:
+
+    elastic_pairwise(A, B, window)   zipped pairs    -> (N,)
+    elastic_cdist(A, B, window)      all pairs       -> (N, M)
+    adc_cdist(codes_a, codes_b, lut) symmetric ADC   -> (Na, Nb)
+    adc_lookup(codes, qlut)          asymmetric scan -> (N,)
+
+Backends (resolved once per call site at trace time):
+
+    "pallas"           Pallas kernels; compiled on TPU, interpret elsewhere
+    "pallas_interpret" Pallas kernels, interpret mode forced (CI / debug)
+    "jax"              pure-JAX lax.scan wavefront + gather ADC (reference)
+    "auto"             "pallas" on TPU, "jax" otherwise
+
+Selection order: :func:`set_backend` override > ``$REPRO_ELASTIC_BACKEND`` >
+``"auto"``.  The :data:`stats` counters record which route every op took;
+they are incremented at *trace* time (a jitted caller that hits its cache
+does not re-count), which is exactly what tests need to assert that a code
+path really executes through the dispatch layer.
+"""
+
+from __future__ import annotations
+
+import os
+from contextlib import contextmanager
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.dtw_band.ops import dtw_band, dtw_band_cdist
+from ..kernels.pq_adc.ops import adc_lookup as _adc_lookup_pallas
+from ..kernels.pq_adc.ops import adc_sym_cdist as _adc_sym_pallas
+from ..kernels.pq_adc.ref import adc_lookup_ref, adc_sym_cdist_ref
+from .dtw import dtw_batch, dtw_cdist
+
+__all__ = [
+    "BACKENDS", "ENV_VAR", "get_backend", "set_backend", "use_backend",
+    "elastic_pairwise", "elastic_cdist", "adc_cdist", "adc_lookup",
+    "stats", "reset_stats",
+]
+
+ENV_VAR = "REPRO_ELASTIC_BACKEND"
+BACKENDS = ("auto", "pallas", "pallas_interpret", "jax")
+
+_override: Optional[str] = None
+
+# (op, resolved backend) -> number of dispatches (trace-time, see module doc)
+stats: Dict[Tuple[str, str], int] = {}
+
+
+def _check(name: str) -> str:
+    if name not in BACKENDS:
+        raise ValueError(
+            f"unknown elastic backend {name!r}; expected one of {BACKENDS}")
+    return name
+
+
+def get_backend() -> str:
+    """Resolved backend name: ``"pallas"``, ``"pallas_interpret"`` or
+    ``"jax"`` (``"auto"`` is resolved against the runtime platform)."""
+    name = _override if _override is not None else _check(
+        os.environ.get(ENV_VAR, "auto"))
+    if name == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jax"
+    return name
+
+
+def set_backend(name: Optional[str]) -> None:
+    """Process-wide override (``None`` restores env/auto selection).
+
+    Callers that were already traced keep their route — pair with
+    ``jax.clear_caches()`` to force re-dispatch.
+    """
+    global _override
+    _override = _check(name) if name is not None else None
+
+
+@contextmanager
+def use_backend(name: str):
+    """Scoped :func:`set_backend` (tests, benchmarks)."""
+    global _override
+    prev = _override
+    _override = _check(name)
+    try:
+        yield
+    finally:
+        _override = prev
+
+
+def reset_stats() -> None:
+    stats.clear()
+
+
+def _count(op: str, route: str) -> None:
+    stats[(op, route)] = stats.get((op, route), 0) + 1
+
+
+def _interpret_flag(backend: str) -> Optional[bool]:
+    # "pallas" defers to default_interpret() (compiled on TPU); forced True
+    # under "pallas_interpret" so CI exercises the kernel bodies on CPU.
+    return True if backend == "pallas_interpret" else None
+
+
+def elastic_pairwise(A: jnp.ndarray, B: jnp.ndarray,
+                     window: Optional[int] = None, *,
+                     block: int = 8) -> jnp.ndarray:
+    """Squared elastic distance over zipped pairs: ``(N, L) x (N, L) -> (N,)``."""
+    backend = get_backend()
+    _count("elastic_pairwise", backend)
+    if backend == "jax":
+        return dtw_batch(A, B, window)
+    return dtw_band(A, B, window, block=block,
+                    interpret=_interpret_flag(backend))
+
+
+def elastic_cdist(A: jnp.ndarray, B: jnp.ndarray,
+                  window: Optional[int] = None, *,
+                  block: int = 8) -> jnp.ndarray:
+    """All-pairs squared elastic distance: ``(N, L) x (M, L) -> (N, M)``."""
+    backend = get_backend()
+    _count("elastic_cdist", backend)
+    if backend == "jax":
+        return dtw_cdist(A, B, window)
+    return dtw_band_cdist(A, B, window, block=block,
+                          interpret=_interpret_flag(backend))
+
+
+def adc_cdist(codes_a: jnp.ndarray, codes_b: jnp.ndarray,
+              lut: jnp.ndarray) -> jnp.ndarray:
+    """Symmetric PQ distance matrix ``sqrt(sum_m LUT[m, a^m, b^m])``:
+    one-hot MXU contractions on the Pallas route, plain gathers on "jax"."""
+    backend = get_backend()
+    _count("adc_cdist", backend)
+    if backend == "jax":
+        return adc_sym_cdist_ref(codes_a, codes_b, lut)
+    return _adc_sym_pallas(codes_a, codes_b, lut,
+                           interpret=_interpret_flag(backend))
+
+
+def adc_lookup(codes: jnp.ndarray, qlut: jnp.ndarray) -> jnp.ndarray:
+    """Asymmetric ADC scan: ``codes (N, M)``, ``qlut (M, K)`` -> ``(N,)``."""
+    backend = get_backend()
+    _count("adc_lookup", backend)
+    if backend == "jax":
+        return adc_lookup_ref(codes, qlut)
+    return _adc_lookup_pallas(codes, qlut,
+                              interpret=_interpret_flag(backend))

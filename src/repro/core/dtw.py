@@ -113,23 +113,20 @@ def dtw_cdist(A: jnp.ndarray, B: jnp.ndarray,
               window: Optional[int] = None, block: int = 4096) -> jnp.ndarray:
     """All-pairs squared DTW: ``A (N, L)``, ``B (M, L)`` -> ``(N, M)``.
 
-    Flattens the cross-product and sweeps it in fixed-size blocks so peak
-    memory stays bounded for large N*M.
+    Flattens the cross-product and sweeps it in fixed-size blocks; the pair
+    indices are derived arithmetically (``idx // M``, ``idx % M``) inside
+    each block, so peak memory is bounded by ``block`` — nothing of size
+    N*M is ever materialized.
     """
     N, L = A.shape
     M = B.shape[0]
     total = N * M
     nblk = -(-total // block)
-    pad = nblk * block - total
-    ai = jnp.repeat(jnp.arange(N), M)
-    bi = jnp.tile(jnp.arange(M), N)
-    ai = jnp.concatenate([ai, jnp.zeros((pad,), ai.dtype)])
-    bi = jnp.concatenate([bi, jnp.zeros((pad,), bi.dtype)])
 
     def blk(carry, k):
-        s = k * block
-        aa = A[jax.lax.dynamic_slice_in_dim(ai, s, block)]
-        bb = B[jax.lax.dynamic_slice_in_dim(bi, s, block)]
+        idx = jnp.minimum(k * block + jnp.arange(block), total - 1)
+        aa = A[idx // M]
+        bb = B[idx % M]
         d = jax.vmap(lambda x, y: dtw_pair(x, y, window))(aa, bb)
         return carry, d
 

@@ -23,9 +23,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .dtw import dtw_cdist
+from .dispatch import elastic_cdist
 from .kmeans import dba_kmeans
-from .pq import PQCodebook, PQConfig, encode, fit, query_lut, segment
+from .pq import (PQCodebook, PQConfig, _adc_gather, encode, fit,
+                 query_lut_batch, segment)
 
 __all__ = ["IVFPQIndex", "build_index", "search", "search_batch"]
 
@@ -89,6 +90,19 @@ def _candidates(index: IVFPQIndex, probe_lists: jnp.ndarray
     return slots.reshape(-1), valid.reshape(-1)
 
 
+def _fine_stage(index: IVFPQIndex, dc: jnp.ndarray, qlut: jnp.ndarray,
+                n_probe: int, topk: int
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Probe the ``n_probe`` nearest lists and rank their candidates with
+    the precomputed asymmetric table.  ``dc (n_lists,)``, ``qlut (M, K)``."""
+    _, probes = jax.lax.top_k(-dc, n_probe)
+    slots, valid = _candidates(index, probes)
+    cand_codes = index.codes[slots]                         # (cap, M)
+    d = jnp.where(valid, _adc_gather(qlut, cand_codes), jnp.inf)
+    neg, best = jax.lax.top_k(-d, topk)
+    return -neg, index.ids[slots[best]]
+
+
 def search(index: IVFPQIndex, q: jnp.ndarray, cfg: PQConfig, *,
            n_probe: int, topk: int = 1,
            coarse_window: Optional[int] = None
@@ -98,27 +112,27 @@ def search(index: IVFPQIndex, q: jnp.ndarray, cfg: PQConfig, *,
     Coarse stage: banded DTW to all list centroids; fine stage: asymmetric
     PQDTW over the probed lists' candidates only.
     """
-    D = q.shape[-1]
-    w = coarse_window if coarse_window is not None else max(
-        1, int(round(0.1 * D)))
-    dc = dtw_cdist(q[None, :], index.coarse, w)[0]          # (n_lists,)
-    _, probes = jax.lax.top_k(-dc, n_probe)
-
-    slots, valid = _candidates(index, probes)
-    cand_codes = index.codes[slots]                         # (cap, M)
-    q_segs = segment(q[None, :], cfg)[0]                    # (M, S)
-    qlut = query_lut(q_segs, index.cb, cfg.window(D),
-                     cfg.metric != "dtw")                   # (M, K)
-    m_idx = jnp.arange(qlut.shape[0])
-    d2 = jnp.sum(qlut[m_idx[None, :], cand_codes], axis=-1)
-    d = jnp.sqrt(jnp.maximum(d2, 0.0))
-    d = jnp.where(valid, d, jnp.inf)
-    neg, best = jax.lax.top_k(-d, topk)
-    return -neg, index.ids[slots[best]]
+    d, ids = search_batch(index, q[None, :], cfg, n_probe=n_probe,
+                          topk=topk, coarse_window=coarse_window)
+    return d[0], ids[0]
 
 
 def search_batch(index: IVFPQIndex, Q: jnp.ndarray, cfg: PQConfig, *,
-                 n_probe: int, topk: int = 1):
-    """vmapped :func:`search` over queries ``Q (Nq, D)``."""
-    fn = lambda q: search(index, q, cfg, n_probe=n_probe, topk=topk)
-    return jax.vmap(fn)(jnp.asarray(Q, jnp.float32))
+                 n_probe: int, topk: int = 1,
+                 coarse_window: Optional[int] = None):
+    """Batched search over queries ``Q (Nq, D)``.
+
+    The coarse DTW stage and the asymmetric query tables are computed for
+    the whole batch in two dispatch-layer launches (Pallas kernels on TPU);
+    only the cheap probe/gather/top-k tail is vmapped.
+    """
+    Q = jnp.asarray(Q, jnp.float32)
+    D = Q.shape[-1]
+    w = coarse_window if coarse_window is not None else max(
+        1, int(round(0.1 * D)))
+    dc = elastic_cdist(Q, index.coarse, w)                  # (Nq, n_lists)
+    q_segs = segment(Q, cfg)                                # (Nq, M, S)
+    qluts = query_lut_batch(q_segs, index.cb, cfg.window(D),
+                            cfg.metric != "dtw")            # (Nq, M, K)
+    fn = lambda dcr, ql: _fine_stage(index, dcr, ql, n_probe, topk)
+    return jax.vmap(fn)(dc, qluts)

@@ -1,6 +1,7 @@
 """DBA k-means — the codebook learner of the paper's training phase.
 
-Assignment uses batched wavefront DTW (`dtw_cdist`); the update step runs one
+Assignment uses batched wavefront DTW through the elastic dispatch layer
+(`dispatch.elastic_cdist` — Pallas kernel on TPU); the update step runs one
 or more DBA iterations per round, where each series contributes only to its
 assigned centroid (scatter-add by cluster id, so the cost per round is N
 backtracks, not N*K).
@@ -16,7 +17,8 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from .dtw import dtw_cdist, euclidean_sq
+from .dispatch import elastic_cdist
+from .dtw import euclidean_sq
 from .dba import alignment_path
 
 __all__ = ["KMeansResult", "dba_kmeans", "euclidean_kmeans"]
@@ -66,11 +68,11 @@ def dba_kmeans(key: jax.Array, X: jnp.ndarray, k: int, iters: int = 10,
     C = _init_centroids(key, X, k)
     assign = jnp.zeros((X.shape[0],), jnp.int32)
     for _ in range(iters):
-        d = dtw_cdist(X, C, window)           # (N, K) squared DTW
+        d = elastic_cdist(X, C, window)       # (N, K) squared DTW
         assign = jnp.argmin(d, axis=1)
         for _ in range(dba_iters):
             C = _dba_assigned_update(C, X, assign, window)
-    d = dtw_cdist(X, C, window)
+    d = elastic_cdist(X, C, window)
     assign = jnp.argmin(d, axis=1)
     inertia = jnp.sum(jnp.min(d, axis=1))
     return KMeansResult(C, assign, inertia)

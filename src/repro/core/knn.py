@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .dtw import dtw_batch, dtw_cdist
+from .dispatch import elastic_cdist, elastic_pairwise
 from .lb import keogh_envelope, lb_keogh
 from .pq import PQCodebook, PQConfig, cdist_asym, cdist_sym, encode
 
@@ -41,7 +41,8 @@ def knn_classify_asym(train_codes: jnp.ndarray, train_labels: jnp.ndarray,
 def nn_dtw_exact(X: jnp.ndarray, labels: jnp.ndarray, Q: jnp.ndarray,
                  window: Optional[int] = None) -> jnp.ndarray:
     """Exact (banded) NN-DTW, fully vectorized — the accuracy reference."""
-    d = dtw_cdist(Q, X, window)
+    d = elastic_cdist(jnp.asarray(Q, jnp.float32),
+                      jnp.asarray(X, jnp.float32), window)
     return labels[jnp.argmin(d, axis=1)]
 
 
@@ -77,9 +78,15 @@ def nn_dtw_pruned(X: np.ndarray, labels: np.ndarray, Q: np.ndarray,
                 if lbs[qi, idx[min(s, len(idx) - 1)]] >= best:
                     break
                 continue
-            d = np.asarray(dtw_batch(
-                jnp.broadcast_to(jnp.asarray(Q[qi]), (len(cand), Q.shape[1])),
-                jnp.asarray(X[cand]), window))
+            # Pad the candidate batch to a power of two so the number of
+            # distinct shapes hitting the kernel path stays O(log chunk)
+            # instead of one trace/compile per survivor count.
+            n_c = len(cand)
+            n_pad = 1 << (n_c - 1).bit_length()
+            cand_p = np.concatenate([cand, np.repeat(cand[:1], n_pad - n_c)])
+            d = np.asarray(elastic_pairwise(
+                jnp.broadcast_to(jnp.asarray(Q[qi]), (n_pad, Q.shape[1])),
+                jnp.asarray(X[cand_p]), window))[:n_c]
             n_dtw += len(cand)
             j = int(np.argmin(d))
             if d[j] < best:

@@ -12,6 +12,10 @@ at once) followed by exact banded DTW on the top-T most promising centroids
 Distances (§3.3): symmetric = M LUT gathers + sum; asymmetric = one fresh
 M x K DTW table per query, then gathers.  §4.2's clustering refinement
 replaces the 0 distance of identical codes by the Keogh lower bound.
+
+Every exact-DTW evaluation and the symmetric code-distance matrix route
+through :mod:`repro.core.dispatch`, so the Pallas kernels are the default
+execution engine on TPU (pure-JAX wavefront elsewhere).
 """
 
 from __future__ import annotations
@@ -24,14 +28,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .dtw import dtw_pair, dtw_cdist, euclidean_sq
+from .dtw import euclidean_sq
+from .dispatch import adc_cdist, elastic_cdist, elastic_pairwise
 from .lb import keogh_envelope, lb_keogh, lb_kim
 from .kmeans import dba_kmeans, euclidean_kmeans
 from .modwt import prealign, fixed_segments
 
 __all__ = ["PQConfig", "PQCodebook", "segment", "fit", "encode",
-           "encode_with_stats", "query_lut", "cdist_sym", "cdist_asym",
-           "cdist_sym_refined", "memory_cost"]
+           "encode_with_stats", "query_lut", "query_lut_batch", "cdist_sym",
+           "cdist_asym", "cdist_sym_refined", "memory_cost"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,7 +121,7 @@ def fit(key: jax.Array, X: jnp.ndarray, cfg: PQConfig) -> PQCodebook:
             res = dba_kmeans(keys[m], sub, cfg.codebook_size,
                              iters=cfg.kmeans_iters, dba_iters=cfg.dba_iters,
                              window=window)
-            lut = dtw_cdist(res.centroids, res.centroids, window)
+            lut = elastic_cdist(res.centroids, res.centroids, window)
         else:
             res = euclidean_kmeans(keys[m], sub, cfg.codebook_size,
                                    iters=cfg.kmeans_iters)
@@ -139,31 +144,48 @@ def fit(key: jax.Array, X: jnp.ndarray, cfg: PQConfig) -> PQCodebook:
 def _encode_segs(segs: jnp.ndarray, cb: PQCodebook, window: Optional[int],
                  refine_t: int, exact: bool, euclidean: bool
                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """``segs (N, M, S)`` -> codes ``(N, M)`` int32 + soundness flags."""
+    """``segs (N, M, S)`` -> codes ``(N, M)`` int32 + soundness flags.
 
-    def one(q, cents, up, lo):
-        # q (S,), cents (K, S)
-        if euclidean:
-            d = jnp.sum((cents - q[None, :]) ** 2, -1)
-            return jnp.argmin(d).astype(jnp.int32), jnp.bool_(True)
-        lbs = jnp.maximum(lb_kim(q[None, :], cents), lb_keogh(q[None, :], up, lo))
-        if exact:
-            d = jax.vmap(lambda c: dtw_pair(q, c, window))(cents)
-            return jnp.argmin(d).astype(jnp.int32), jnp.bool_(True)
-        neg, cand = jax.lax.top_k(-lbs, refine_t)            # T most promising
-        d = jax.vmap(lambda c: dtw_pair(q, c, window))(cents[cand])
-        best = jnp.argmin(d)
-        best_d = d[best]
-        # Soundness certificate: the true NN is inside the candidate set iff
-        # best refined distance <= every excluded centroid's lower bound.
-        excluded_min = jnp.min(jnp.where(
-            jnp.zeros_like(lbs, jnp.bool_).at[cand].set(True), jnp.inf, lbs))
-        return cand[best].astype(jnp.int32), best_d <= excluded_min
+    All exact-DTW refinements across the whole (series x subspace x
+    candidate) set are flattened into ONE zipped-pair batch through the
+    dispatch layer, so the Pallas wavefront kernel sees a single large
+    launch instead of N*M tiny ones.
+    """
+    N, M, S = segs.shape
+    K = cb.codebook_size
 
-    per_sub = jax.vmap(one, in_axes=(0, 0, 0, 0))            # over M
-    codes, sound = jax.vmap(per_sub, in_axes=(0, None, None, None))(
-        segs, cb.centroids, cb.env_upper, cb.env_lower)      # over N
-    return codes, sound
+    if euclidean:
+        d = jnp.sum((segs[:, :, None, :] - cb.centroids[None]) ** 2, -1)
+        return jnp.argmin(d, -1).astype(jnp.int32), jnp.ones((N, M), bool)
+
+    if exact or refine_t >= K:
+        # Full scan: per-subspace all-pairs launches — the cdist kernel
+        # broadcasts centroids per tile, so nothing of size N*K*S is ever
+        # materialized.
+        d = jnp.stack([elastic_cdist(segs[:, m], cb.centroids[m], window)
+                       for m in range(M)], axis=1)           # (N, M, K)
+        return jnp.argmin(d, -1).astype(jnp.int32), jnp.ones((N, M), bool)
+
+    lbs = jnp.maximum(
+        lb_kim(segs[:, :, None, :], cb.centroids[None]),
+        lb_keogh(segs[:, :, None, :], cb.env_upper[None],
+                 cb.env_lower[None]))                        # (N, M, K)
+    _, cand = jax.lax.top_k(-lbs, refine_t)                  # T most promising
+    T = refine_t
+
+    qs = jnp.broadcast_to(segs[:, :, None, :], (N, M, T, S))
+    cs = cb.centroids[jnp.arange(M)[None, :, None], cand]    # (N, M, T, S)
+    d = elastic_pairwise(qs.reshape(-1, S), cs.reshape(-1, S),
+                         window).reshape(N, M, T)
+    best = jnp.argmin(d, -1)                                 # (N, M)
+    codes = jnp.take_along_axis(
+        cand, best[..., None], -1)[..., 0].astype(jnp.int32)
+    # Soundness certificate: the true NN is inside the candidate set iff
+    # best refined distance <= every excluded centroid's lower bound; the
+    # excluded minimum is simply the (T+1)-th smallest bound.
+    best_d = jnp.take_along_axis(d, best[..., None], -1)[..., 0]
+    neg, _ = jax.lax.top_k(-lbs, refine_t + 1)
+    return codes, best_d <= -neg[..., -1]
 
 
 def encode(X: jnp.ndarray, cb: PQCodebook, cfg: PQConfig) -> jnp.ndarray:
@@ -186,28 +208,40 @@ def encode_with_stats(X: jnp.ndarray, cb: PQCodebook, cfg: PQConfig
 # Distances (§3.3)
 # ---------------------------------------------------------------------------
 
-@jax.jit
 def cdist_sym(codes_a: jnp.ndarray, codes_b: jnp.ndarray,
               lut: jnp.ndarray) -> jnp.ndarray:
     """Symmetric PQ distance matrix: ``(Na, M) x (Nb, M) -> (Na, Nb)``.
 
-    ``M`` gathers + adds per pair; sqrt of the summed squared subspace costs.
+    Routed through the dispatch layer: one-hot MXU contractions on the
+    Pallas ADC kernel, plain LUT gathers on the pure-JAX route; sqrt of the
+    summed squared subspace costs either way.
     """
-    def per_sub(am, bm, lut_m):
-        return lut_m[am[:, None], bm[None, :]]
-    d2 = jnp.sum(jax.vmap(per_sub, in_axes=(1, 1, 0))(codes_a, codes_b, lut), 0)
-    return jnp.sqrt(jnp.maximum(d2, 0.0))
+    return adc_cdist(codes_a, codes_b, lut)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "euclidean"))
 def query_lut(q_segs: jnp.ndarray, cb: PQCodebook, window: Optional[int],
               euclidean: bool = False) -> jnp.ndarray:
     """Asymmetric query table: ``q_segs (M, S)`` -> ``(M, K)`` squared dists."""
+    return query_lut_batch(q_segs[None], cb, window, euclidean)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("window", "euclidean"))
+def query_lut_batch(q_segs: jnp.ndarray, cb: PQCodebook,
+                    window: Optional[int],
+                    euclidean: bool = False) -> jnp.ndarray:
+    """Batched asymmetric tables: ``q_segs (Nq, M, S)`` -> ``(Nq, M, K)``.
+
+    One all-pairs dispatch launch per subspace; the cdist kernel broadcasts
+    each centroid row per tile, so the Nq x K cross-product of series is
+    never materialized.
+    """
+    Nq, M, S = q_segs.shape
     if euclidean:
-        return jax.vmap(lambda q, c: jnp.sum((c - q[None, :]) ** 2, -1))(
-            q_segs, cb.centroids)
-    return jax.vmap(lambda q, c: jax.vmap(
-        lambda ck: dtw_pair(q, ck, window))(c))(q_segs, cb.centroids)
+        return jnp.sum(
+            (q_segs[:, :, None, :] - cb.centroids[None]) ** 2, -1)
+    return jnp.stack([elastic_cdist(q_segs[:, m], cb.centroids[m], window)
+                      for m in range(M)], axis=1)
 
 
 @jax.jit
@@ -225,7 +259,7 @@ def cdist_asym(Q: jnp.ndarray, codes: jnp.ndarray, cb: PQCodebook,
     D = Q.shape[-1]
     q_segs = segment(Q, cfg)                     # (Nq, M, S)
     euc = cfg.metric != "dtw"
-    luts = jax.vmap(lambda s: query_lut(s, cb, cfg.window(D), euc))(q_segs)
+    luts = query_lut_batch(q_segs, cb, cfg.window(D), euc)
     return jax.vmap(lambda ql: _adc_gather(ql, codes))(luts)
 
 

@@ -1,17 +1,40 @@
-"""Banded-DTW wavefront Pallas kernel.
+"""Banded-DTW wavefront Pallas kernels.
 
-Each grid step owns a VMEM tile of ``block`` (query, candidate) pairs and
-sweeps the shared DP table anti-diagonal by anti-diagonal.  The two live
-diagonals are ``(block, L)`` vector registers; every wavefront step is one
-VPU-wide fused multiply/min, so the sequential depth is ``2L - 1``
-irrespective of the batch size.
+Two generations of the same anti-diagonal sweep live here:
 
-TPU notes:
+``dtw_band_kernel`` (full-width, legacy)
+    The two live diagonals are ``(block, L)`` registers and the Sakoe-Chiba
+    band is only a *mask*: every wavefront step still pays for all ``L``
+    lanes, so at the paper's default ``w = 0.1*L`` roughly ``L/(w+1) ~ 5-10x``
+    of the VPU work is thrown away.  Kept as the benchmark baseline.
+
+``dtw_band_compressed_kernel`` (band-compressed)
+    The registers hold only the *feasible* cells of each diagonal.  On
+    anti-diagonal ``d`` the valid rows are ``i in [lo(d), hi(d)]`` with
+
+        lo(d) = max(0, d - (L-1), ceil((d-w)/2))
+        hi(d) = min(L-1, d,        floor((d+w)/2))
+
+    so at most ``w + 1`` cells are live; the register width is
+    ``W = min(L, roundup(min(w, L-1) + 1, lane))`` — per-step cost scales
+    with the band, not the series length.  Sequential depth stays ``2L-1``.
+
+    Compressed-coordinate recurrence: slot ``t`` on diagonal ``d`` is cell
+    ``i = lo(d) + t``.  Its predecessors sit at slots shifted by the *base
+    drift* between consecutive diagonals:
+
+        (i,   j-1) on d-1  ->  t + s1,      s1 = lo(d) - lo(d-1)   in {0, 1}
+        (i-1, j  ) on d-1  ->  t + s1 - 1
+        (i-1, j-1) on d-2  ->  t + s2,      s2 = lo(d) - lo(d-2) - 1
+                                                                in {-1, 0, 1}
+
+    All shifts are lane rotates selected by the (scalar) drift — no gathers.
+
+TPU notes (both kernels):
   * the diagonal gather ``b[d - i]`` is a dynamic slice of a pre-reversed,
     pre-padded copy of ``b`` (built once per tile) — no scatter/gather ops;
-  * the ``i-1`` predecessor shift is a lane rotate (`jnp.roll`) plus an edge
-    mask — also gather-free;
-  * the Sakoe-Chiba band is a static mask, so shapes never depend on data.
+  * the band geometry is integer arithmetic on the loop counter, so shapes
+    never depend on data.
 """
 
 from __future__ import annotations
@@ -23,10 +46,28 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["dtw_band_kernel", "make_dtw_band_call"]
+__all__ = [
+    "dtw_band_kernel",
+    "dtw_band_compressed_kernel",
+    "make_dtw_band_call",
+    "make_dtw_band_cdist_call",
+    "band_width",
+]
 
 _NEG_SAFE_INF = 3.0e38  # finite stand-in for +inf (avoids inf-inf NaNs)
 
+
+def band_width(length: int, window: Optional[int], lane: int = 8) -> int:
+    """Compressed register width: band cells padded up to a lane multiple,
+    capped at ``length`` (beyond which compression cannot help)."""
+    w = length if window is None else int(window)
+    need = min(w, length - 1) + 1
+    return min(length, -(-need // lane) * lane)
+
+
+# ---------------------------------------------------------------------------
+# Full-width kernel (legacy / benchmark baseline)
+# ---------------------------------------------------------------------------
 
 def dtw_band_kernel(a_ref, b_ref, o_ref, *, length: int, window: int,
                     block: int):
@@ -66,16 +107,97 @@ def dtw_band_kernel(a_ref, b_ref, o_ref, *, length: int, window: int,
     o_ref[...] = last[:, L - 1:L]
 
 
+# ---------------------------------------------------------------------------
+# Band-compressed kernel
+# ---------------------------------------------------------------------------
+
+def dtw_band_compressed_kernel(a_ref, b_ref, o_ref, *, length: int,
+                               window: int, block: int, width: int,
+                               broadcast_b: bool = False):
+    """Kernel body: ``a_ref (block, L)`` and ``b_ref (block, L)`` (or
+    ``(1, L)`` with ``broadcast_b``) -> ``o_ref (block, 1)``.
+
+    Registers are ``(block, width)`` — only the feasible band cells of each
+    anti-diagonal are materialized.
+    """
+    L, w, W = length, window, width
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    if broadcast_b:
+        b = jnp.broadcast_to(b, (block, L))
+
+    inf = jnp.float32(_NEG_SAFE_INF)
+    t = jax.lax.broadcasted_iota(jnp.int32, (block, W), 1)
+
+    # Padded copies so the per-diagonal windows are plain dynamic slices:
+    #   a cells:  a[lo + t]              -> slice of a_pad at lo
+    #   b cells:  b[d - lo - t]
+    #           = b_rev[L-1-d+lo + t]    -> slice of b_rev_pad at L-1-d+lo
+    # (0 <= lo <= L-1 and 0 <= L-1-d+lo <= L-1 for every feasible diagonal.)
+    pad = jnp.zeros((block, W), jnp.float32)
+    a_pad = jnp.concatenate([a, pad], axis=1)
+    b_rev_pad = jnp.concatenate([jnp.flip(b, axis=1), pad], axis=1)
+
+    def lo_of(d):
+        # max(0, d - (L-1), ceil((d - w) / 2)); jnp // is floor division.
+        return jnp.maximum(jnp.maximum(0, d - (L - 1)), -((w - d) // 2))
+
+    def read(reg, s):
+        """``reg[t + s]`` for scalar shift ``s`` in {-1, 0, 1}; out-of-range
+        slots read the +inf sentinel (lane rotate + edge mask, gather-free)."""
+        left = jnp.where(t == W - 1, inf, jnp.roll(reg, -1, axis=1))
+        right = jnp.where(t == 0, inf, jnp.roll(reg, 1, axis=1))
+        return jnp.where(s == 0, reg, jnp.where(s > 0, left, right))
+
+    def step(d, carry):
+        prev1, prev2 = carry  # compressed diagonals d-1 / d-2, inf-masked
+        lo = lo_of(d)
+        hi = jnp.minimum(jnp.minimum(L - 1, d), (d + w) // 2)
+        s1 = lo - lo_of(d - 1)
+        s2 = lo - lo_of(d - 2) - 1
+
+        av = jax.lax.dynamic_slice_in_dim(a_pad, lo, W, axis=1)
+        bv = jax.lax.dynamic_slice_in_dim(b_rev_pad, L - 1 - d + lo, W,
+                                          axis=1)
+        cost = (av - bv) ** 2
+
+        best = jnp.minimum(jnp.minimum(read(prev2, s2), read(prev1, s1)),
+                           read(prev1, s1 - 1))
+        best = jnp.where((t == 0) & (d == 0), 0.0, best)
+        diag = jnp.where(t <= hi - lo, cost + best, inf)
+        diag = jnp.minimum(diag, inf)
+        return diag, prev1
+
+    init = (jnp.full((block, W), inf), jnp.full((block, W), inf))
+    last, _ = jax.lax.fori_loop(0, 2 * L - 1, step, init)
+    # Diagonal 2L-2 has lo = L-1: cell (L-1, L-1) sits in slot 0.
+    o_ref[...] = last[:, 0:1]
+
+
+# ---------------------------------------------------------------------------
+# pallas_call builders
+# ---------------------------------------------------------------------------
+
 def make_dtw_band_call(n_pairs: int, length: int, window: Optional[int],
-                       block: int, interpret: bool):
+                       block: int, interpret: bool, mode: str = "compressed",
+                       lane: int = 8):
     """Build the pallas_call for ``(n_pairs, L)`` zipped pair batches.
 
     ``n_pairs`` must already be padded to a multiple of ``block``.
+    ``mode`` selects the band-compressed sweep (default) or the legacy
+    full-width sweep (benchmark baseline).
     """
     w = length if window is None else int(window)
     grid = (n_pairs // block,)
-    kernel = functools.partial(dtw_band_kernel, length=length, window=w,
-                               block=block)
+    if mode == "full":
+        kernel = functools.partial(dtw_band_kernel, length=length, window=w,
+                                   block=block)
+    elif mode == "compressed":
+        kernel = functools.partial(dtw_band_compressed_kernel, length=length,
+                                   window=w, block=block,
+                                   width=band_width(length, w, lane))
+    else:
+        raise ValueError(f"unknown dtw_band mode: {mode!r}")
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -85,5 +207,33 @@ def make_dtw_band_call(n_pairs: int, length: int, window: Optional[int],
         ],
         out_specs=pl.BlockSpec((block, 1), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n_pairs, 1), jnp.float32),
+        interpret=interpret,
+    )
+
+
+def make_dtw_band_cdist_call(n_a: int, n_b: int, length: int,
+                             window: Optional[int], block_a: int,
+                             interpret: bool, lane: int = 8):
+    """All-pairs call on a 2-D grid: ``A (n_a, L) x B (n_b, L) -> (n_a, n_b)``.
+
+    Each grid step sweeps ``block_a`` rows of A against ONE row of B
+    (broadcast inside the kernel), so the N*M cross-product is never
+    materialized in HBM.  ``n_a`` must be padded to a multiple of
+    ``block_a``.
+    """
+    w = length if window is None else int(window)
+    kernel = functools.partial(dtw_band_compressed_kernel, length=length,
+                               window=w, block=block_a,
+                               width=band_width(length, w, lane),
+                               broadcast_b=True)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_a // block_a, n_b),
+        in_specs=[
+            pl.BlockSpec((block_a, length), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, length), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_a, 1), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_a, n_b), jnp.float32),
         interpret=interpret,
     )

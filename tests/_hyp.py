@@ -1,0 +1,42 @@
+"""Optional-hypothesis shim.
+
+``hypothesis`` is a dev-only dependency (see requirements-dev.txt /
+pyproject's ``[dev]`` extra).  Test modules that mix plain pytest tests
+with property-based ones import ``given`` / ``settings`` / ``st`` from
+here: when hypothesis is installed they are the real thing; when it is
+not, ``@given`` replaces the test with a cleanly-skipped stub so the rest
+of the module still runs.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAS_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def _skipped():
+                pass
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _StrategyStub:
+        """Placeholder for ``hypothesis.strategies``: every attribute is a
+        callable returning None, so module-level ``st.integers(...)`` in
+        decorator position evaluates without the real package."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
+
+__all__ = ["given", "settings", "st", "HAS_HYPOTHESIS"]

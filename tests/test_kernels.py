@@ -61,6 +61,44 @@ def test_dtw_band_odd_batch_padding():
 
 
 # ---------------------------------------------------------------------------
+# dtw_band: band-compressed vs full-width sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,L", [(1, 8), (5, 16), (7, 32), (13, 64), (3, 2)])
+@pytest.mark.parametrize("window", [None, 1, 3, 100])  # 100 >= every L
+def test_dtw_band_compressed_matches_ref(n, L, window):
+    rng = np.random.default_rng(n * 311 + L)
+    A = rng.standard_normal((n, L)).astype(np.float32)
+    B = rng.standard_normal((n, L)).astype(np.float32)
+    got = np.asarray(dtw_band(A, B, window, interpret=True,
+                              mode="compressed"))
+    want = np.asarray(dtw_band_ref(A, B, window))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_dtw_band_modes_agree():
+    """Full-width and band-compressed sweeps are the same DP."""
+    rng = np.random.default_rng(8)
+    A = rng.standard_normal((6, 40)).astype(np.float32)
+    B = rng.standard_normal((6, 40)).astype(np.float32)
+    full = np.asarray(dtw_band(A, B, 4, interpret=True, mode="full"))
+    comp = np.asarray(dtw_band(A, B, 4, interpret=True, mode="compressed"))
+    np.testing.assert_allclose(comp, full, rtol=1e-6, atol=1e-6)
+
+
+def test_dtw_band_cdist_no_materialize_grid():
+    """2-D grid cdist (B broadcast per tile) vs reference, odd shapes."""
+    rng = np.random.default_rng(12)
+    A = rng.standard_normal((11, 24)).astype(np.float32)
+    B = rng.standard_normal((5, 24)).astype(np.float32)
+    for window in (None, 2, 50):
+        got = np.asarray(dtw_band_cdist(A, B, window, block=4,
+                                        interpret=True))
+        want = np.asarray(dtw_band_cdist_ref(A, B, window))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
 # pq_adc
 # ---------------------------------------------------------------------------
 
@@ -174,6 +212,165 @@ def test_encode_keys_roundtrip():
     got = np.asarray(encode_keys(jnp.asarray(keys).reshape(S, G, M * Ds),
                                  jnp.asarray(k_books)))
     assert (got == codes).all()
+
+
+# ---------------------------------------------------------------------------
+# dispatch layer
+# ---------------------------------------------------------------------------
+
+from repro.core import dispatch
+
+
+@pytest.fixture
+def fresh_dispatch():
+    """Clear jit caches + counters so routing is observable at trace time."""
+    jax.clear_caches()
+    dispatch.reset_stats()
+    yield dispatch
+    dispatch.set_backend(None)
+
+
+def _route_count(op, route="pallas_interpret"):
+    return dispatch.stats.get((op, route), 0)
+
+
+def test_dispatch_backend_selection(fresh_dispatch):
+    with dispatch.use_backend("jax"):
+        assert dispatch.get_backend() == "jax"
+        with dispatch.use_backend("pallas_interpret"):
+            assert dispatch.get_backend() == "pallas_interpret"
+        assert dispatch.get_backend() == "jax"
+    with pytest.raises(ValueError):
+        dispatch.set_backend("cuda")
+
+
+@pytest.mark.parametrize("n,L,window", [(3, 8, None), (7, 16, 2),
+                                        (8, 24, 30), (13, 32, 3)])
+def test_dispatch_pairwise_backends_agree(fresh_dispatch, n, L, window):
+    rng = np.random.default_rng(n * 17 + L)
+    A = rng.standard_normal((n, L)).astype(np.float32)
+    B = rng.standard_normal((n, L)).astype(np.float32)
+    with dispatch.use_backend("jax"):
+        want = np.asarray(dispatch.elastic_pairwise(A, B, window))
+    with dispatch.use_backend("pallas_interpret"):
+        got = np.asarray(dispatch.elastic_pairwise(A, B, window))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,m,L,window", [(4, 6, 12, None), (9, 5, 16, 2),
+                                          (6, 6, 20, 40)])
+def test_dispatch_cdist_backends_agree(fresh_dispatch, n, m, L, window):
+    rng = np.random.default_rng(n * 13 + m)
+    A = rng.standard_normal((n, L)).astype(np.float32)
+    B = rng.standard_normal((m, L)).astype(np.float32)
+    with dispatch.use_backend("jax"):
+        want = np.asarray(dispatch.elastic_cdist(A, B, window))
+    with dispatch.use_backend("pallas_interpret"):
+        got = np.asarray(dispatch.elastic_cdist(A, B, window))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_dispatch_adc_backends_agree(fresh_dispatch):
+    rng = np.random.default_rng(2)
+    M, K = 3, 16
+    lut = np.abs(rng.standard_normal((M, K, K))).astype(np.float32)
+    codes_a = rng.integers(0, K, (10, M)).astype(np.int32)
+    codes_b = rng.integers(0, K, (7, M)).astype(np.int32)
+    qlut = np.abs(rng.standard_normal((M, K))).astype(np.float32)
+    with dispatch.use_backend("jax"):
+        want_c = np.asarray(dispatch.adc_cdist(codes_a, codes_b, lut))
+        want_l = np.asarray(dispatch.adc_lookup(codes_a, qlut))
+    with dispatch.use_backend("pallas_interpret"):
+        got_c = np.asarray(dispatch.adc_cdist(codes_a, codes_b, lut))
+        got_l = np.asarray(dispatch.adc_lookup(codes_a, qlut))
+    np.testing.assert_allclose(got_c, want_c, rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(got_l, want_l, rtol=1e-5, atol=1e-4)
+
+
+def _toy_corpus(n=20, d=32, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n, d)).astype(np.float32)
+
+
+def _toy_cfg():
+    from repro.core.pq import PQConfig
+    return PQConfig(n_sub=2, codebook_size=4, kmeans_iters=2, dba_iters=1)
+
+
+def test_encode_and_fit_route_through_dispatch(fresh_dispatch):
+    """PQ training + encoding must execute on the Pallas route, and agree
+    with the pure-JAX route to <= 1e-4."""
+    from repro.core.pq import encode_with_stats, fit
+    X = _toy_corpus()
+    cfg = _toy_cfg()
+    key = jax.random.PRNGKey(0)
+    with dispatch.use_backend("jax"):
+        cb = fit(key, X, cfg)
+        codes_j, _ = encode_with_stats(X, cb, cfg)
+    jax.clear_caches()
+    dispatch.reset_stats()
+    with dispatch.use_backend("pallas_interpret"):
+        cb_p = fit(key, X, cfg)
+        codes_p, _ = encode_with_stats(X, cb_p, cfg)
+        assert _route_count("elastic_cdist") > 0       # k-means + LUT build
+        assert _route_count("elastic_pairwise") > 0    # encode refinement
+    np.testing.assert_allclose(np.asarray(cb_p.lut), np.asarray(cb.lut),
+                               rtol=1e-5, atol=1e-4)
+    assert (np.asarray(codes_p) == np.asarray(codes_j)).all()
+
+
+def test_query_and_sym_route_through_dispatch(fresh_dispatch):
+    from repro.core.pq import cdist_asym, cdist_sym, encode, fit
+    X = _toy_corpus(seed=3)
+    cfg = _toy_cfg()
+    with dispatch.use_backend("jax"):
+        cb = fit(jax.random.PRNGKey(1), X, cfg)
+        codes = encode(X, cb, cfg)
+        want_sym = np.asarray(cdist_sym(codes, codes, cb.lut))
+        want_asym = np.asarray(cdist_asym(X[:3], codes, cb, cfg))
+    jax.clear_caches()
+    dispatch.reset_stats()
+    with dispatch.use_backend("pallas_interpret"):
+        got_sym = np.asarray(cdist_sym(codes, codes, cb.lut))
+        got_asym = np.asarray(cdist_asym(X[:3], codes, cb, cfg))
+        assert _route_count("adc_cdist") > 0           # MXU ADC kernel
+        assert _route_count("elastic_cdist") > 0       # query LUT build
+    np.testing.assert_allclose(got_sym, want_sym, rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(got_asym, want_asym, rtol=1e-5, atol=1e-4)
+
+
+def test_ivf_search_routes_through_dispatch(fresh_dispatch):
+    from repro.core import ivf
+    X = _toy_corpus(n=24, seed=5)
+    cfg = _toy_cfg()
+    with dispatch.use_backend("jax"):
+        index = ivf.build_index(jax.random.PRNGKey(2), X, cfg, n_lists=3)
+        want_d, want_i = ivf.search_batch(index, X[:4], cfg, n_probe=2,
+                                          topk=3)
+    jax.clear_caches()
+    dispatch.reset_stats()
+    with dispatch.use_backend("pallas_interpret"):
+        got_d, got_i = ivf.search_batch(index, X[:4], cfg, n_probe=2,
+                                        topk=3)
+        assert _route_count("elastic_cdist") > 0       # coarse + query LUTs
+    np.testing.assert_allclose(np.asarray(got_d), np.asarray(want_d),
+                               rtol=1e-5, atol=1e-4)
+    assert (np.asarray(got_i) == np.asarray(want_i)).all()
+
+
+def test_knn_exact_routes_through_dispatch(fresh_dispatch):
+    from repro.core.knn import nn_dtw_exact
+    X = _toy_corpus(n=16, seed=7)
+    Q = _toy_corpus(n=5, seed=8)
+    labels = jnp.arange(16) % 3
+    with dispatch.use_backend("jax"):
+        want = np.asarray(nn_dtw_exact(X, labels, Q, window=3))
+    jax.clear_caches()
+    dispatch.reset_stats()
+    with dispatch.use_backend("pallas_interpret"):
+        got = np.asarray(nn_dtw_exact(X, labels, Q, window=3))
+        assert _route_count("elastic_cdist") > 0
+    assert (got == want).all()
 
 
 def test_build_qlut_algebra():

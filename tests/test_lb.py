@@ -3,7 +3,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.dtw import dtw_pair
 from repro.core.lb import keogh_envelope, lb_keogh, lb_kim, lb_cascade
