@@ -1,0 +1,66 @@
+"""Streaming index lifecycle costs: insert throughput, query latency as a
+function of sealed-segment count, and the cost + payoff of compaction."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.pq import PQConfig
+from repro.data.timeseries import random_walks
+from repro.index import IndexConfig, StreamingIndex
+
+from .common import Bench, timeit
+
+
+def _make_index(D: int, n_lists: int, hot_capacity: int,
+                train_n: int) -> StreamingIndex:
+    cfg = IndexConfig(
+        pq=PQConfig(n_sub=4, codebook_size=32, use_prealign=False,
+                    kmeans_iters=3, dba_iters=1),
+        n_lists=n_lists, hot_capacity=hot_capacity, coarse_iters=4)
+    sample = random_walks(train_n, D, seed=0)
+    return StreamingIndex.bootstrap(jax.random.PRNGKey(0), sample, cfg)
+
+
+def run(quick: bool = True) -> Bench:
+    b = Bench("index_scaling")
+    D, n_lists, cap = (96, 8, 64) if quick else (256, 32, 256)
+    n_segments_sweep = (1, 2, 4, 8) if quick else (1, 2, 4, 8, 16)
+    Q = random_walks(16, D, seed=99)
+
+    # --- insert throughput: amortized over fills + seals --------------------
+    index = _make_index(D, n_lists, cap, train_n=2 * cap)
+    stream = random_walks(4 * cap, D, seed=1)
+    index.insert(stream[:cap])          # warm up the encode/assign jits
+    t0 = time.perf_counter()
+    index.insert(stream[cap:])
+    t_ins = time.perf_counter() - t0
+    b.add(op="insert", series=3 * cap,
+          throughput_per_s=3 * cap / t_ins, total_s=t_ins)
+
+    # --- query latency vs segment count -------------------------------------
+    for n_seg in n_segments_sweep:
+        index = _make_index(D, n_lists, cap, train_n=2 * cap)
+        index.insert(random_walks(n_seg * cap, D, seed=2))
+        assert index.n_segments == n_seg
+        t = timeit(lambda: index.search(Q, n_probe=4, topk=3), repeats=3)
+        b.add(op="search", n_segments=n_seg, rows=n_seg * cap,
+              latency_s=t["median_s"])
+
+    # --- compaction: cost of the merge, payoff on query latency -------------
+    t0 = time.perf_counter()
+    index.compact()
+    t_cmp = time.perf_counter() - t0
+    t = timeit(lambda: index.search(Q, n_probe=4, topk=3), repeats=3)
+    b.add(op="compact", merged_rows=index.segments[0].rows,
+          max_list=index.segments[0].max_list, compact_s=t_cmp,
+          post_compact_latency_s=t["median_s"])
+    b.save()
+    return b
+
+
+if __name__ == "__main__":
+    run(quick=True)

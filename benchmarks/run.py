@@ -7,7 +7,7 @@ import argparse
 import time
 
 from . import (dtw_kernel_bench, fig5a_scaling, fig5b_params, fig5c_prealign,
-               ivf_scaling, memory_cost, pqkv_bench, roofline,
+               index_scaling, ivf_scaling, memory_cost, pqkv_bench, roofline,
                table1_accuracy)
 
 SUITES = {
@@ -18,6 +18,7 @@ SUITES = {
     "table1": table1_accuracy.run,
     "memory": memory_cost.run,
     "ivf": ivf_scaling.run,
+    "index": index_scaling.run,
     "pqkv": pqkv_bench.run,
     "roofline": roofline.run,
 }

@@ -25,9 +25,115 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
-__all__ = ["save", "restore", "latest_step", "AsyncCheckpointer"]
+__all__ = ["save", "restore", "latest_step", "AsyncCheckpointer",
+           "begin_atomic_dir", "write_manifest", "commit_atomic_dir",
+           "latest_numbered_dir", "gc_numbered_dirs", "MANIFEST"]
 
-_MANIFEST = "manifest.json"
+MANIFEST = "manifest.json"
+_MANIFEST = MANIFEST
+
+
+# ---------------------------------------------------------------------------
+# Atomic-directory protocol (shared with repro.index.snapshot)
+#
+# Writers populate a ``.tmp-<name>`` staging directory, fsync a manifest as
+# the commit record, then rename over the final path (an existing version
+# is moved to a ``.old-<name>`` aside first, never deleted in place): a
+# crash at any point leaves a complete version on disk — as the final dir,
+# or as an aside that discovery (:func:`latest_numbered_dir`) renames back —
+# plus at worst stale staging dirs that the next writer clears.  Never a
+# torn read.
+# ---------------------------------------------------------------------------
+
+def begin_atomic_dir(directory: str, name: str) -> str:
+    """Create (clearing any stale leftover) the staging dir for ``name``."""
+    os.makedirs(directory, exist_ok=True)
+    tmp = os.path.join(directory, f".tmp-{name}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    return tmp
+
+
+def write_manifest(tmp: str, manifest: dict) -> None:
+    """fsync'd manifest write — the durability point of the protocol."""
+    with open(os.path.join(tmp, MANIFEST), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def commit_atomic_dir(tmp: str, directory: str, name: str) -> str:
+    """Atomically publish the staged dir as ``directory/name``.
+
+    Durability order: every staged file is fsync'd *before* the rename (a
+    published manifest must never point at torn data blocks), and the
+    parent directory is fsync'd *after* it (the rename itself survives the
+    crash).
+    """
+    for fn in os.listdir(tmp):
+        fd = os.open(os.path.join(tmp, fn), os.O_RDONLY)
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+    tfd = os.open(tmp, os.O_RDONLY)      # the staged dirents themselves
+    try:
+        os.fsync(tfd)
+    finally:
+        os.close(tfd)
+    final = os.path.join(directory, name)
+    # Re-publishing an existing name: move the old version aside rather
+    # than deleting it first, so no crash window destroys the only copy
+    # (the ".old-" prefix keeps it invisible to latest_numbered_dir).
+    old = os.path.join(directory, f".old-{name}")
+    if os.path.exists(old):
+        shutil.rmtree(old)
+    if os.path.exists(final):
+        os.rename(final, old)
+    os.rename(tmp, final)
+    shutil.rmtree(old, ignore_errors=True)
+    dfd = os.open(directory, os.O_RDONLY)
+    try:
+        os.fsync(dfd)
+    finally:
+        os.close(dfd)
+    return final
+
+
+def _recover_old_dirs(directory: str, prefix: str) -> None:
+    """Crash recovery for the re-publish window of :func:`commit_atomic_dir`:
+    a ``.old-<name>`` aside whose ``<name>`` is gone means the process died
+    between the two renames — the aside IS the newest complete version, so
+    rename it back into discoverability."""
+    for d in os.listdir(directory):
+        if not d.startswith(f".old-{prefix}"):
+            continue
+        final = os.path.join(directory, d[len(".old-"):])
+        if os.path.exists(final):
+            continue                 # superseded; next commit cleans it up
+        try:
+            os.rename(os.path.join(directory, d), final)
+        except OSError:
+            pass                     # read-only fs / concurrent writer
+
+
+def latest_numbered_dir(directory: str, prefix: str) -> Optional[int]:
+    """Newest committed (manifest-bearing) ``<prefix><n>`` dir, or None."""
+    if not os.path.isdir(directory):
+        return None
+    _recover_old_dirs(directory, prefix)
+    steps = [int(d[len(prefix):]) for d in os.listdir(directory)
+             if d.startswith(prefix)
+             and os.path.exists(os.path.join(directory, d, MANIFEST))]
+    return max(steps) if steps else None
+
+
+def gc_numbered_dirs(directory: str, keep_last: int, prefix: str) -> None:
+    """Drop all but the newest ``keep_last`` ``<prefix><n>`` dirs."""
+    dirs = sorted(d for d in os.listdir(directory) if d.startswith(prefix))
+    for d in dirs[:-keep_last] if keep_last > 0 else []:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
 
 
 def _leaf_paths(tree):
@@ -48,47 +154,29 @@ def _leaf_paths(tree):
 
 def save(directory: str, step: int, tree: Any, keep_last: int = 3) -> str:
     """Atomically persist ``tree`` under ``directory/step_<step>``."""
-    os.makedirs(directory, exist_ok=True)
-    final = os.path.join(directory, f"step_{step:010d}")
-    tmp = os.path.join(directory, f".tmp-step_{step:010d}")
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
-    os.makedirs(tmp)
+    name = f"step_{step:010d}"
+    tmp = begin_atomic_dir(directory, name)
     flat, _, names = _leaf_paths(tree)
     manifest = {"step": step, "leaves": []}
-    for (path, leaf), name in zip(flat, names):
+    for (path, leaf), leaf_name in zip(flat, names):
         arr = np.asarray(jax.device_get(leaf))
-        fn = f"{len(manifest['leaves']):05d}_{name[:80]}.npy"
+        fn = f"{len(manifest['leaves']):05d}_{leaf_name[:80]}.npy"
         np.save(os.path.join(tmp, fn), arr)
-        manifest["leaves"].append({"file": fn, "name": name,
+        manifest["leaves"].append({"file": fn, "name": leaf_name,
                                    "shape": list(arr.shape),
                                    "dtype": str(arr.dtype)})
-    with open(os.path.join(tmp, _MANIFEST), "w") as f:
-        json.dump(manifest, f)
-        f.flush()
-        os.fsync(f.fileno())
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)
+    write_manifest(tmp, manifest)
+    final = commit_atomic_dir(tmp, directory, name)
     _gc(directory, keep_last)
     return final
 
 
 def _gc(directory: str, keep_last: int) -> None:
-    steps = sorted(d for d in os.listdir(directory) if d.startswith("step_"))
-    for d in steps[:-keep_last] if keep_last > 0 else []:
-        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+    gc_numbered_dirs(directory, keep_last, "step_")
 
 
 def latest_step(directory: str) -> Optional[int]:
-    if not os.path.isdir(directory):
-        return None
-    steps = []
-    for d in os.listdir(directory):
-        if d.startswith("step_") and os.path.exists(
-                os.path.join(directory, d, _MANIFEST)):
-            steps.append(int(d.split("_")[1]))
-    return max(steps) if steps else None
+    return latest_numbered_dir(directory, "step_")
 
 
 def restore(directory: str, step: int, like: Any,

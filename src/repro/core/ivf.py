@@ -13,6 +13,12 @@ shape — so lists share one global PQ codebook over raw series and the coarse
 stage is used purely for pruning.  Search cost per query drops from
 O(N·M) table look-ups to O(n_lists·D²w) coarse DTWs + O(cap·M) look-ups,
 with ``cap`` a static candidate budget (TPU-friendly shapes).
+
+The fine stage is *segment-searchable*: :func:`fine_rank` operates on bare
+list-layout arrays (codes / ids / list_start / list_len [+ optional
+tombstone mask]) instead of a whole :class:`IVFPQIndex`, so the streaming
+segmented index (:mod:`repro.index`) ranks each sealed segment with exactly
+the same code path as the monolithic index.
 """
 
 from __future__ import annotations
@@ -28,7 +34,8 @@ from .kmeans import dba_kmeans
 from .pq import (PQCodebook, PQConfig, _adc_gather, encode, fit,
                  query_lut_batch, segment)
 
-__all__ = ["IVFPQIndex", "build_index", "search", "search_batch"]
+__all__ = ["IVFPQIndex", "build_index", "build_lists", "coarse_assign",
+           "fine_rank", "search", "search_batch", "validate_n_probe"]
 
 
 class IVFPQIndex(NamedTuple):
@@ -45,62 +52,138 @@ class IVFPQIndex(NamedTuple):
         return self.coarse.shape[0]
 
 
+def coarse_assign(X: jnp.ndarray, coarse: jnp.ndarray,
+                  window: Optional[int]) -> jnp.ndarray:
+    """Route series ``X (N, D)`` to their nearest coarse centroid (banded
+    DTW through the dispatch layer) -> ``(N,)`` int32 list ids."""
+    return jnp.argmin(elastic_cdist(X, coarse, window), axis=1).astype(
+        jnp.int32)
+
+
+def build_lists(assign: np.ndarray, n_lists: int
+                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """List-sorted layout from a coarse assignment (host-side).
+
+    Returns ``(order, list_start, list_len, max_list)``: stable sort
+    permutation into list order plus the per-list offsets/lengths.
+    """
+    assign = np.asarray(assign)
+    order = np.argsort(assign, kind="stable")
+    sorted_assign = assign[order]
+    start = np.searchsorted(sorted_assign, np.arange(n_lists)).astype(np.int32)
+    length = (np.searchsorted(sorted_assign, np.arange(n_lists), "right")
+              - start).astype(np.int32)
+    max_list = int(length.max()) if assign.size else 0
+    return order, start, length, max_list
+
+
 def build_index(key: jax.Array, X: jnp.ndarray, cfg: PQConfig,
                 n_lists: int, coarse_iters: int = 8,
-                coarse_window_frac: float = 0.1) -> IVFPQIndex:
-    """Train coarse + fine quantizers and populate the inverted lists."""
+                coarse_window_frac: float = 0.1, *,
+                coarse: Optional[jnp.ndarray] = None,
+                cb: Optional[PQCodebook] = None) -> IVFPQIndex:
+    """Train coarse + fine quantizers and populate the inverted lists.
+
+    Pass pre-trained ``coarse`` centroids and/or a ``cb`` codebook to skip
+    the corresponding training stage — the path the streaming index uses to
+    rebuild an equivalent monolithic index from a shared quantizer.
+    """
     X = jnp.asarray(X, jnp.float32)
     N, D = X.shape
     kc, kf = jax.random.split(key)
     w = max(1, int(round(coarse_window_frac * D)))
-    res = dba_kmeans(kc, X, n_lists, iters=coarse_iters, dba_iters=1,
-                     window=w)
-    assign = np.asarray(res.assignment)
+    if coarse is None:
+        res = dba_kmeans(kc, X, n_lists, iters=coarse_iters, dba_iters=1,
+                         window=w)
+        coarse_cents, assign = res.centroids, np.asarray(res.assignment)
+    else:
+        coarse_cents = jnp.asarray(coarse, jnp.float32)
+        if coarse_cents.shape[0] != n_lists:
+            raise ValueError(
+                f"pre-trained coarse quantizer has {coarse_cents.shape[0]} "
+                f"centroids but n_lists={n_lists}")
+        assign = np.asarray(coarse_assign(X, coarse_cents, w))
 
-    cb = fit(kf, X, cfg)
+    if cb is None:
+        cb = fit(kf, X, cfg)
     codes = np.asarray(encode(X, cb, cfg))
 
-    order = np.argsort(assign, kind="stable")
-    sorted_assign = assign[order]
-    start = np.searchsorted(sorted_assign, np.arange(n_lists))
-    length = np.searchsorted(sorted_assign, np.arange(n_lists), "right") - start
+    order, start, length, max_list = build_lists(assign, n_lists)
     return IVFPQIndex(
-        coarse=res.centroids,
+        coarse=coarse_cents,
         cb=cb,
         codes=jnp.asarray(codes[order]),
         ids=jnp.asarray(order.astype(np.int32)),
-        list_start=jnp.asarray(start.astype(np.int32)),
-        list_len=jnp.asarray(length.astype(np.int32)),
-        max_list=int(length.max()) if N else 0)
+        list_start=jnp.asarray(start),
+        list_len=jnp.asarray(length),
+        max_list=max_list)
 
 
-def _candidates(index: IVFPQIndex, probe_lists: jnp.ndarray
+def _candidates(list_start: jnp.ndarray, list_len: jnp.ndarray,
+                max_list: int, probe_lists: jnp.ndarray
                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Static-shape candidate slots for ``n_probe`` lists.
 
     Returns (slots (n_probe*max_list,) int32 into codes/ids, valid mask).
     """
-    P = probe_lists.shape[0]
-    offs = jnp.arange(index.max_list)
-    start = index.list_start[probe_lists]          # (P,)
-    length = index.list_len[probe_lists]
+    offs = jnp.arange(max_list)
+    start = list_start[probe_lists]                # (P,)
+    length = list_len[probe_lists]
     slots = start[:, None] + offs[None, :]         # (P, max_list)
     valid = offs[None, :] < length[:, None]
     slots = jnp.where(valid, slots, 0)
     return slots.reshape(-1), valid.reshape(-1)
 
 
+def fine_rank(codes: jnp.ndarray, ids: jnp.ndarray,
+              list_start: jnp.ndarray, list_len: jnp.ndarray, max_list: int,
+              dc: jnp.ndarray, qlut: jnp.ndarray, n_probe: int, topk: int,
+              live: Optional[jnp.ndarray] = None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Rank one list-sorted shard against a single query.
+
+    ``dc (n_lists,)`` coarse distances, ``qlut (M, K)`` asymmetric table;
+    ``live`` is an optional ``(N,)`` tombstone mask (False = deleted).
+    Returns ``(distances (topk,), ids (topk,))`` with ``inf`` / ``-1``
+    filling invalid slots, so shard results can be merged by a plain top-k.
+    """
+    _, probes = jax.lax.top_k(-dc, n_probe)
+    slots, valid = _candidates(list_start, list_len, max_list, probes)
+    if live is not None:
+        valid = valid & live[slots]
+    cand_codes = codes[slots]                               # (cap, M)
+    d = jnp.where(valid, _adc_gather(qlut, cand_codes), jnp.inf)
+    neg, best = jax.lax.top_k(-d, topk)
+    out_ids = jnp.where(jnp.isfinite(neg), ids[slots[best]], -1)
+    return -neg, out_ids
+
+
 def _fine_stage(index: IVFPQIndex, dc: jnp.ndarray, qlut: jnp.ndarray,
                 n_probe: int, topk: int
                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Probe the ``n_probe`` nearest lists and rank their candidates with
-    the precomputed asymmetric table.  ``dc (n_lists,)``, ``qlut (M, K)``."""
-    _, probes = jax.lax.top_k(-dc, n_probe)
-    slots, valid = _candidates(index, probes)
-    cand_codes = index.codes[slots]                         # (cap, M)
-    d = jnp.where(valid, _adc_gather(qlut, cand_codes), jnp.inf)
-    neg, best = jax.lax.top_k(-d, topk)
-    return -neg, index.ids[slots[best]]
+    return fine_rank(index.codes, index.ids, index.list_start,
+                     index.list_len, index.max_list, dc, qlut, n_probe, topk)
+
+
+def validate_n_probe(n_probe: int, n_lists: int) -> None:
+    """Shared probe-budget check (monolithic and streaming indexes)."""
+    if not 1 <= n_probe <= n_lists:
+        raise ValueError(
+            f"n_probe={n_probe} out of range: must satisfy "
+            f"1 <= n_probe <= n_lists={n_lists}")
+
+
+def _validate_probe(n_lists: int, max_list: int, n_probe: int,
+                    topk: int) -> None:
+    """Static-shape sanity for the probe/rank stage — a clear ``ValueError``
+    instead of an XLA shape error deep inside ``top_k``."""
+    validate_n_probe(n_probe, n_lists)
+    cap = n_probe * max_list
+    if not 1 <= topk <= cap:
+        raise ValueError(
+            f"topk={topk} out of range: must satisfy 1 <= topk <= "
+            f"n_probe*max_list={cap} (n_probe={n_probe}, "
+            f"max_list={max_list}); raise n_probe or shrink topk")
 
 
 def search(index: IVFPQIndex, q: jnp.ndarray, cfg: PQConfig, *,
@@ -126,6 +209,7 @@ def search_batch(index: IVFPQIndex, Q: jnp.ndarray, cfg: PQConfig, *,
     the whole batch in two dispatch-layer launches (Pallas kernels on TPU);
     only the cheap probe/gather/top-k tail is vmapped.
     """
+    _validate_probe(index.n_lists, index.max_list, n_probe, topk)
     Q = jnp.asarray(Q, jnp.float32)
     D = Q.shape[-1]
     w = coarse_window if coarse_window is not None else max(

@@ -291,8 +291,18 @@ def cdist_sym_refined(codes_a: jnp.ndarray, segs_a: jnp.ndarray,
 # Memory accounting (§3.4)
 # ---------------------------------------------------------------------------
 
-def memory_cost(cfg: PQConfig, D: int, n_series: int) -> dict:
-    """Bytes for raw data vs PQ representation + auxiliary structures."""
+def memory_cost(cfg: PQConfig, D: int, n_series: int, *,
+                n_segments: int = 0, n_lists: int = 0,
+                hot_capacity: int = 0) -> dict:
+    """Bytes for raw data vs PQ representation + auxiliary structures.
+
+    With the segmented-index keywords, the estimate also covers the
+    streaming lifecycle layer (:mod:`repro.index`): per-entry id/tombstone/
+    assignment sidecars, per-segment inverted-list offset tables, and the
+    raw float32 hot-segment buffer — so ``compaction`` gains (fewer
+    segments, no dead padding) are visible in the same accounting that
+    §3.4 uses for the quantizer itself.
+    """
     S = cfg.subseq_len(D)
     M, K = cfg.n_sub, cfg.codebook_size
     code_bits = max(1, int(np.ceil(np.log2(K))))
@@ -301,7 +311,19 @@ def memory_cost(cfg: PQConfig, D: int, n_series: int) -> dict:
     codebook = 4 * M * K * S
     lut = 4 * M * K * K
     envelopes = 2 * 4 * M * K * S
-    return dict(raw_bytes=raw, code_bytes=codes, codebook_bytes=codebook,
-                lut_bytes=lut, envelope_bytes=envelopes,
-                aux_bytes=codebook + lut + envelopes,
-                compression=raw / max(codes, 1))
+    out = dict(raw_bytes=raw, code_bytes=codes, codebook_bytes=codebook,
+               lut_bytes=lut, envelope_bytes=envelopes,
+               aux_bytes=codebook + lut + envelopes,
+               compression=raw / max(codes, 1))
+    if n_segments or hot_capacity:
+        # sealed sidecars: int32 id + int32 coarse assignment + bool live
+        sidecar = (4 + 4 + 1) * n_series
+        # per-segment inverted-list tables: int32 start + len per list
+        lists = 2 * 4 * n_lists * n_segments
+        # hot segment: raw float32 buffer + id/live sidecars at capacity
+        hot = (4 * D + 4 + 1) * hot_capacity
+        out.update(sidecar_bytes=sidecar, list_bytes=lists, hot_bytes=hot,
+                   index_bytes=codes + sidecar + lists + hot,
+                   total_bytes=codes + sidecar + lists + hot
+                   + out["aux_bytes"])
+    return out

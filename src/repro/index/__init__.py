@@ -1,0 +1,32 @@
+"""Streaming segmented IVF-PQDTW index — the lifecycle layer.
+
+The paper's §4.1 IVF system (``repro.core.ivf``) builds one frozen index
+from one frozen array.  This package turns it into a long-lived structure:
+
+    insert   -> fresh series land in a fixed-capacity exact "hot" segment
+                (searched with banded DTW through ``core.dispatch``)
+    flush    -> a full hot segment is *sealed*: PQ-encoded against the
+                shared codebook and laid out as an inverted-list shard
+    delete   -> tombstone masks in hot and sealed segments
+    compact  -> sealed segments merge into one shard (dead rows dropped,
+                inverted lists re-balanced)
+    snapshot -> atomic tmp-dir/fsync/rename persistence (checkpoint
+                protocol), restore on any device topology
+
+Search fans a query batch out over the hot segment and every sealed
+segment, merging per-shard top-k with one final ``lax.top_k``; the planner
+(:mod:`repro.index.planner`) additionally shards the query batch across
+devices with ``shard_map``.
+"""
+
+from .segments import HotBuffer, SealedSegment
+from .streaming import IndexConfig, StreamingIndex
+from .snapshot import latest_snapshot, restore_snapshot, save_snapshot
+from .planner import search_sharded
+
+__all__ = [
+    "HotBuffer", "SealedSegment",
+    "IndexConfig", "StreamingIndex",
+    "save_snapshot", "restore_snapshot", "latest_snapshot",
+    "search_sharded",
+]

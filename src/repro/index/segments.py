@@ -1,0 +1,140 @@
+"""Segment containers for the streaming index.
+
+Two kinds of segment, one searchable contract:
+
+* :class:`HotBuffer` — host-side fixed-capacity staging area for raw
+  series.  Inserts are numpy writes into pre-allocated buffers; the search
+  path uploads the (small, constant-shape) buffers and runs exact banded
+  DTW against every live row.
+* :class:`SealedSegment` — an immutable device-resident inverted-list
+  shard of PQ codes sharing the index-wide codebook.  Registered as a
+  pytree with ``max_list`` as *static* metadata, so jitted search caches
+  on segment shape, not segment identity: every flush-born segment is
+  padded to the same ``capacity`` rows and reuses one compiled fine stage.
+
+Row padding convention: dead rows carry ``ids == -1``, ``live == False``
+and ``assign == n_lists`` (sorted past every real list, so no inverted
+list ever addresses them — the ``live`` mask is a second line of defense).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.ivf import build_lists
+
+__all__ = ["HotBuffer", "SealedSegment", "seal"]
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("codes", "ids", "live", "assign", "list_start",
+                      "list_len"),
+         meta_fields=("max_list",))
+@dataclasses.dataclass(frozen=True)
+class SealedSegment:
+    codes: jnp.ndarray        # (rows, M) int32 PQ codes, list-sorted
+    ids: jnp.ndarray          # (rows,) int32 external ids, -1 = padding
+    live: jnp.ndarray         # (rows,) bool, False = deleted or padding
+    assign: jnp.ndarray       # (rows,) int32 coarse list id, n_lists = pad
+    list_start: jnp.ndarray   # (n_lists,) int32
+    list_len: jnp.ndarray     # (n_lists,) int32
+    max_list: int             # static: candidate width of the fine stage
+
+    @property
+    def rows(self) -> int:
+        return self.codes.shape[0]
+
+    @property
+    def n_lists(self) -> int:
+        return self.list_start.shape[0]
+
+    def n_live(self) -> int:
+        return int(jnp.sum(self.live))
+
+    def tombstone(self, dead: np.ndarray) -> "SealedSegment":
+        """New segment with ``dead`` (host bool mask over rows) deleted."""
+        live = self.live & ~jnp.asarray(dead)
+        return dataclasses.replace(self, live=live)
+
+
+def seal(codes: np.ndarray, ids: np.ndarray, assign: np.ndarray,
+         n_lists: int, rows: int,
+         max_list: Optional[int] = None) -> SealedSegment:
+    """Lay ``(n, M)`` codes out as a list-sorted segment padded to ``rows``.
+
+    ``max_list`` is the static fine-stage width; it defaults to the true
+    longest list.  Flush-born segments pass ``rows == max_list == hot
+    capacity`` instead (same compiled search for every segment regardless
+    of list skew); compaction takes the default so the merged shard prunes
+    with its true longest list.
+    """
+    n = len(ids)
+    if n > rows:
+        raise ValueError(f"cannot seal {n} rows into a {rows}-row segment")
+    order, start, length, true_max = build_lists(assign, n_lists)
+    if max_list is None:
+        max_list = true_max
+    M = codes.shape[1]
+    codes_p = np.zeros((rows, M), np.int32)
+    ids_p = np.full((rows,), -1, np.int32)
+    live_p = np.zeros((rows,), bool)
+    assign_p = np.full((rows,), n_lists, np.int32)
+    codes_p[:n] = codes[order]
+    ids_p[:n] = ids[order]
+    live_p[:n] = True
+    assign_p[:n] = assign[order]
+    return SealedSegment(
+        codes=jnp.asarray(codes_p), ids=jnp.asarray(ids_p),
+        live=jnp.asarray(live_p), assign=jnp.asarray(assign_p),
+        list_start=jnp.asarray(start), list_len=jnp.asarray(length),
+        max_list=int(max_list))
+
+
+class HotBuffer:
+    """Fixed-capacity staging buffer for raw series (host-side, mutable)."""
+
+    def __init__(self, capacity: int, dim: int):
+        self.capacity = int(capacity)
+        self.dim = int(dim)
+        self.data = np.zeros((capacity, dim), np.float32)
+        self.ids = np.full((capacity,), -1, np.int32)
+        self.live = np.zeros((capacity,), bool)
+        self.count = 0                      # filled slots (live or dead)
+
+    @property
+    def space(self) -> int:
+        return self.capacity - self.count
+
+    def n_live(self) -> int:
+        return int(self.live.sum())
+
+    def append(self, X: np.ndarray, ids: np.ndarray) -> int:
+        """Write up to ``space`` rows; returns how many were taken."""
+        take = min(self.space, len(ids))
+        if take:
+            lo = self.count
+            self.data[lo:lo + take] = X[:take]
+            self.ids[lo:lo + take] = ids[:take]
+            self.live[lo:lo + take] = True
+            self.count += take
+        return take
+
+    def tombstone(self, dead_ids: np.ndarray) -> int:
+        hit = np.isin(self.ids, dead_ids) & self.live
+        self.live &= ~hit
+        return int(hit.sum())
+
+    def take_live(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Drain: return (live rows, their ids) and reset the buffer."""
+        rows = self.data[self.live].copy()
+        ids = self.ids[self.live].copy()
+        self.ids[:] = -1
+        self.live[:] = False
+        self.count = 0
+        return rows, ids

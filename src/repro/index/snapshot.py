@@ -1,0 +1,140 @@
+"""Snapshot persistence for the streaming index.
+
+Reuses the checkpoint layer's atomic-directory protocol
+(:func:`repro.checkpoint.ckpt.begin_atomic_dir` / ``write_manifest`` /
+``commit_atomic_dir``): arrays land as ``.npy`` leaves in a staging dir,
+the JSON manifest is fsync'd as the commit record, and a rename publishes
+the snapshot — a crash mid-write never corrupts the latest restorable
+state.  The manifest carries the full :class:`IndexConfig` (including the
+nested :class:`PQConfig`) plus per-segment static metadata, so restore
+needs no out-of-band configuration and works on any device topology.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint.ckpt import (MANIFEST, begin_atomic_dir, commit_atomic_dir,
+                               gc_numbered_dirs, latest_numbered_dir,
+                               write_manifest)
+from ..core.pq import PQCodebook, PQConfig
+from .segments import SealedSegment
+from .streaming import IndexConfig, StreamingIndex
+
+__all__ = ["save_snapshot", "restore_snapshot", "latest_snapshot"]
+
+_PREFIX = "snap_"
+_FORMAT = 1
+
+
+def _name(step: int) -> str:
+    return f"{_PREFIX}{step:010d}"
+
+
+def latest_snapshot(directory: str) -> Optional[int]:
+    """Newest committed (manifest-bearing) snapshot step, or None."""
+    return latest_numbered_dir(directory, _PREFIX)
+
+
+def save_snapshot(directory: str, index: StreamingIndex,
+                  step: Optional[int] = None, keep_last: int = 3) -> str:
+    """Atomically persist ``index`` under ``directory/snap_<step>``.
+
+    ``step`` defaults to one past the latest existing snapshot.  The hot
+    buffer is persisted raw (inserts survive a restart without a forced
+    flush).  Returns the committed path.
+    """
+    if step is None:
+        last = latest_snapshot(directory)
+        step = 0 if last is None else last + 1
+    tmp = begin_atomic_dir(directory, _name(step))
+
+    arrays: Dict[str, np.ndarray] = {
+        "coarse": index.coarse,
+        "cb_centroids": index.cb.centroids,
+        "cb_lut": index.cb.lut,
+        "cb_env_upper": index.cb.env_upper,
+        "cb_env_lower": index.cb.env_lower,
+        "hot_data": index.hot.data,
+        "hot_ids": index.hot.ids,
+        "hot_live": index.hot.live,
+    }
+    seg_meta = []
+    for s, sg in enumerate(index.segments):
+        for field in ("codes", "ids", "live", "assign", "list_start",
+                      "list_len"):
+            arrays[f"seg{s:04d}_{field}"] = getattr(sg, field)
+        seg_meta.append({"max_list": sg.max_list})
+    for name, arr in arrays.items():
+        np.save(os.path.join(tmp, f"{name}.npy"), np.asarray(arr))
+
+    cfg = dataclasses.asdict(index.cfg)
+    cfg["pq"] = dataclasses.asdict(index.cfg.pq)
+    write_manifest(tmp, {
+        "format": _FORMAT,
+        "step": step,
+        "config": cfg,
+        "dim": index.dim,
+        "next_id": index.next_id,
+        "hot_count": index.hot.count,
+        "segments": seg_meta,
+        "arrays": sorted(arrays),
+    })
+    final = commit_atomic_dir(tmp, directory, _name(step))
+    gc_numbered_dirs(directory, keep_last, _PREFIX)
+    return final
+
+
+def restore_snapshot(directory: str, step: Optional[int] = None
+                     ) -> StreamingIndex:
+    """Rebuild a :class:`StreamingIndex` from ``directory`` (latest snapshot
+    unless ``step`` is given); tombstones, hot rows and id allocation state
+    all round-trip."""
+    if step is None:
+        step = latest_snapshot(directory)
+        if step is None:
+            raise FileNotFoundError(f"no snapshots under {directory!r}")
+    d = os.path.join(directory, _name(step))
+    with open(os.path.join(d, MANIFEST)) as f:
+        manifest = json.load(f)
+    if manifest["format"] != _FORMAT:
+        raise ValueError(
+            f"snapshot format {manifest['format']} != expected {_FORMAT}")
+
+    def load(name: str) -> np.ndarray:
+        return np.load(os.path.join(d, f"{name}.npy"))
+
+    cfg_d = dict(manifest["config"])
+    cfg = IndexConfig(**{**cfg_d, "pq": PQConfig(**cfg_d["pq"])})
+    cb = PQCodebook(jnp.asarray(load("cb_centroids")),
+                    jnp.asarray(load("cb_lut")),
+                    jnp.asarray(load("cb_env_upper")),
+                    jnp.asarray(load("cb_env_lower")))
+    index = StreamingIndex.from_parts(cfg, jnp.asarray(load("coarse")), cb,
+                                      manifest["dim"])
+    index.next_id = manifest["next_id"]
+    index.hot.data[:] = load("hot_data")
+    index.hot.ids[:] = load("hot_ids")
+    index.hot.live[:] = load("hot_live")
+    index.hot.count = manifest["hot_count"]
+    index._resident.update(
+        index.hot.ids[index.hot.ids >= 0].tolist())
+    for s, meta in enumerate(manifest["segments"]):
+        host_ids = load(f"seg{s:04d}_ids")
+        host_live = load(f"seg{s:04d}_live")
+        index._add_segment(SealedSegment(
+            codes=jnp.asarray(load(f"seg{s:04d}_codes")),
+            ids=jnp.asarray(host_ids),
+            live=jnp.asarray(host_live),
+            assign=jnp.asarray(load(f"seg{s:04d}_assign")),
+            list_start=jnp.asarray(load(f"seg{s:04d}_list_start")),
+            list_len=jnp.asarray(load(f"seg{s:04d}_list_len")),
+            max_list=int(meta["max_list"])), host_ids=host_ids,
+            host_live=host_live)
+    return index

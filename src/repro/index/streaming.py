@@ -1,0 +1,384 @@
+"""StreamingIndex — LSM-style lifecycle over IVF-PQDTW shards.
+
+Write path (host-side, numpy): ``insert`` fills the fixed-capacity
+:class:`~repro.index.segments.HotBuffer`; a full buffer auto-``flush``\\ es
+into a :class:`~repro.index.segments.SealedSegment` — PQ codes against the
+*shared* codebook, list-sorted under the *shared* coarse quantizer.  Both
+quantizers are trained once (``bootstrap``) and never change afterwards,
+which is what makes segments mergeable: ``compact`` concatenates live rows
+and re-balances the inverted lists without touching a single code.
+
+Read path (device-side, jitted): one coarse-DTW launch + one query-LUT
+launch for the whole batch (shared by every segment), then a per-segment
+fine stage (:func:`repro.core.ivf.fine_rank`) and an exact banded-DTW scan
+of the hot buffer, merged with a final ``lax.top_k``.  All shapes are
+static: flush-born segments share one compiled fine stage, the hot scan is
+always ``(Nq, capacity)``, and tombstones are masks, not re-layouts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.dispatch import elastic_cdist
+from ..core.dtw import euclidean_sq
+from ..core.ivf import coarse_assign, fine_rank, validate_n_probe
+from ..core.kmeans import dba_kmeans
+from ..core.pq import (PQCodebook, PQConfig, encode, fit, memory_cost,
+                       query_lut_batch, segment)
+from .segments import HotBuffer, SealedSegment, seal
+
+__all__ = ["IndexConfig", "StreamingIndex"]
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexConfig:
+    """Lifecycle hyper-parameters around a :class:`PQConfig`."""
+    pq: PQConfig
+    n_lists: int = 8
+    hot_capacity: int = 128
+    coarse_iters: int = 8
+    coarse_window_frac: float = 0.1
+
+    def coarse_window(self, D: int) -> int:
+        return max(1, int(round(self.coarse_window_frac * D)))
+
+
+# ---------------------------------------------------------------------------
+# Pure search math (shared by StreamingIndex.search and the sharded planner)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("max_list", "n_probe", "k"))
+def _rank_segment(codes, ids, live, list_start, list_len, dc, qluts, *,
+                  max_list: int, n_probe: int, k: int):
+    """vmap'd fine stage over one sealed segment -> ``(Nq, k)`` d, ids.
+
+    Jitted per *shape*, not per segment: every flush-born segment (same
+    padded rows, same ``max_list`` = hot capacity) reuses one compiled
+    fine stage regardless of how many segments exist."""
+    fn = lambda dcr, ql: fine_rank(codes, ids, list_start, list_len,
+                                   max_list, dcr, ql, n_probe, k, live=live)
+    return jax.vmap(fn)(dc, qluts)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "k", "euclidean"))
+def _scan_hot(data, ids, live, Q, *, window: int, k: int, euclidean: bool):
+    """Exact scan of the hot buffer -> ``(Nq, k)`` d, ids.
+
+    Banded DTW under the PQDTW metric, squared Euclidean under the PQ_ED
+    baseline — matching the metric the sealed segments' LUTs encode, so
+    hot and sealed distances stay order-compatible in the merge."""
+    if euclidean:
+        d2 = euclidean_sq(Q, data)
+    else:
+        d2 = elastic_cdist(Q, data, window)
+    dh = jnp.sqrt(jnp.maximum(d2, 0.0))
+    dh = jnp.where(live[None, :], dh, jnp.inf)               # (Nq, cap)
+    neg, idx = jax.lax.top_k(-dh, k)
+    return -neg, jnp.where(jnp.isfinite(neg), ids[idx], -1)
+
+
+@functools.partial(jax.jit, static_argnames=("topk",))
+def _merge_topk(parts_d: Tuple[jnp.ndarray, ...],
+                parts_i: Tuple[jnp.ndarray, ...], *, topk: int):
+    all_d = jnp.concatenate(parts_d, axis=1)
+    all_i = jnp.concatenate(parts_i, axis=1)
+    missing = topk - all_d.shape[1]
+    if missing > 0:
+        Nq = all_d.shape[0]
+        all_d = jnp.concatenate(
+            [all_d, jnp.full((Nq, missing), jnp.inf)], 1)
+        all_i = jnp.concatenate(
+            [all_i, jnp.full((Nq, missing), -1, all_i.dtype)], 1)
+    neg, best = jax.lax.top_k(-all_d, topk)
+    return -neg, jnp.take_along_axis(all_i, best, axis=1)
+
+
+def search_impl(coarse: jnp.ndarray, cb: PQCodebook,
+                segs: Tuple[SealedSegment, ...],
+                hot: Optional[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]],
+                Q: jnp.ndarray, *, icfg: IndexConfig, n_probe: int,
+                topk: int, dim: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fan ``Q (Nq, D)`` out over every segment and merge top-k.
+
+    ``segs`` is a (possibly empty) tuple of sealed segments; ``hot`` is
+    ``(data (cap, D), ids (cap,), live (cap,))`` or None when the buffer is
+    empty.  Returns ``(distances, ids)`` of shape ``(Nq, topk)``, distance
+    ``inf`` / id ``-1`` where fewer than ``topk`` live rows exist.  Sealed
+    rows are ranked by asymmetric PQDTW, hot rows by exact banded DTW —
+    both in sqrt space, so the merge is order-compatible.
+
+    Deliberately NOT one enclosing jit: the pieces (coarse cdist, query
+    LUTs, per-segment fine stage, hot scan, final merge) are jitted
+    separately, so growing the segment count only recompiles the tiny
+    concat/top-k merge instead of the whole search graph — no query-latency
+    spike every time a flush adds a segment.
+    """
+    Q = jnp.asarray(Q, jnp.float32)
+    parts_d, parts_i = [], []
+
+    if segs:
+        w = icfg.coarse_window(dim)
+        dc = elastic_cdist(Q, coarse, w)                     # (Nq, n_lists)
+        qluts = query_lut_batch(segment(Q, icfg.pq), cb,
+                                icfg.pq.window(dim),
+                                icfg.pq.metric != "dtw")     # (Nq, M, K)
+        for sg in segs:
+            k = min(topk, n_probe * sg.max_list)
+            if k < 1:
+                continue
+            d, i = _rank_segment(sg.codes, sg.ids, sg.live, sg.list_start,
+                                 sg.list_len, dc, qluts,
+                                 max_list=sg.max_list, n_probe=n_probe,
+                                 k=k)
+            parts_d.append(d)
+            parts_i.append(i)
+
+    if hot is not None:
+        data, ids, live = hot
+        d, i = _scan_hot(data, ids, live, Q,
+                         window=icfg.coarse_window(dim),
+                         k=min(topk, data.shape[0]),
+                         euclidean=icfg.pq.metric != "dtw")
+        parts_d.append(d)
+        parts_i.append(i)
+
+    if not parts_d:
+        Nq = Q.shape[0]
+        return (jnp.full((Nq, topk), jnp.inf),
+                jnp.full((Nq, topk), -1, jnp.int32))
+
+    return _merge_topk(tuple(parts_d), tuple(parts_i), topk=topk)
+
+
+# ---------------------------------------------------------------------------
+# The lifecycle object
+# ---------------------------------------------------------------------------
+
+class StreamingIndex:
+    """Incrementally maintained IVF-PQDTW index (see module docstring).
+
+    Construct with :meth:`bootstrap` (trains the shared quantizers on a
+    sample) or :meth:`from_parts` (pre-trained quantizers / restore path).
+    """
+
+    def __init__(self, cfg: IndexConfig, coarse: jnp.ndarray,
+                 cb: PQCodebook, dim: int):
+        if coarse.shape[0] != cfg.n_lists:
+            raise ValueError(
+                f"coarse quantizer has {coarse.shape[0]} centroids, "
+                f"config says n_lists={cfg.n_lists}")
+        if cfg.hot_capacity < 1:
+            raise ValueError(
+                f"hot_capacity={cfg.hot_capacity} must be >= 1 (inserts "
+                f"stage in the hot buffer before sealing)")
+        self.cfg = cfg
+        self.coarse = jnp.asarray(coarse, jnp.float32)
+        self.cb = cb
+        self.dim = int(dim)
+        self.hot = HotBuffer(cfg.hot_capacity, dim)
+        self.segments: List[SealedSegment] = []
+        # host-side mirrors of each segment's id array (immutable) and live
+        # mask (updated alongside tombstone()), so the delete/accounting
+        # paths never download device arrays
+        self._seg_ids: List[np.ndarray] = []
+        self._seg_live: List[np.ndarray] = []
+        # every id physically resident anywhere (tombstoned rows included —
+        # they occupy slots until flush/compact drops them), for O(batch)
+        # collision checks on explicit-id inserts
+        self._resident: set = set()
+        # device copy of the hot buffer, rebuilt only after a mutation
+        self._hot_device: Optional[Tuple] = None
+        self.next_id = 0
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def bootstrap(cls, key: jax.Array, X_train: np.ndarray,
+                  cfg: IndexConfig) -> "StreamingIndex":
+        """Train the shared coarse + PQ quantizers on ``X_train`` and return
+        an *empty* index (the sample is not inserted)."""
+        X_train = jnp.asarray(X_train, jnp.float32)
+        D = X_train.shape[-1]
+        kc, kf = jax.random.split(key)
+        res = dba_kmeans(kc, X_train, cfg.n_lists, iters=cfg.coarse_iters,
+                         dba_iters=1, window=cfg.coarse_window(D))
+        cb = fit(kf, X_train, cfg.pq)
+        return cls(cfg, res.centroids, cb, D)
+
+    @classmethod
+    def from_parts(cls, cfg: IndexConfig, coarse: jnp.ndarray,
+                   cb: PQCodebook, dim: int) -> "StreamingIndex":
+        return cls(cfg, coarse, cb, dim)
+
+    # -- write path ---------------------------------------------------------
+
+    def insert(self, X: np.ndarray, ids: Optional[Sequence[int]] = None
+               ) -> np.ndarray:
+        """Add series ``X (n, D)``; returns their external ids.  Flushes
+        automatically whenever the hot buffer fills."""
+        X = np.asarray(X, np.float32)
+        if X.ndim != 2 or X.shape[1] != self.dim:
+            raise ValueError(
+                f"expected (n, {self.dim}) series, got {X.shape}")
+        n = X.shape[0]
+        if ids is None:
+            out = np.arange(self.next_id, self.next_id + n, dtype=np.int32)
+            self.next_id += n
+        else:
+            out = np.asarray(ids, np.int32)
+            if len(out) != n:
+                raise ValueError(f"{n} series but {len(out)} ids")
+            if n and int(out.min()) < 0:
+                raise ValueError(
+                    "external ids must be >= 0 (-1 is the reserved "
+                    "empty-slot / no-result sentinel)")
+            if len(np.unique(out)) != n:
+                raise ValueError("duplicate ids within one insert batch")
+            # one row per external id: reject ids still resident anywhere
+            # (tombstoned rows occupy slots until flush/compact drops them)
+            clash = self._resident.intersection(out.tolist())
+            if clash:
+                raise ValueError(
+                    f"ids already resident in the index: "
+                    f"{sorted(clash)[:8]}")
+            self.next_id = max(self.next_id, int(out.max(initial=-1)) + 1)
+        self._resident.update(out.tolist())
+        self._hot_device = None
+        i = 0
+        while i < n:
+            i += self.hot.append(X[i:], out[i:])
+            if self.hot.space == 0:
+                self.flush()
+        return out
+
+    def delete(self, ids: Sequence[int]) -> int:
+        """Tombstone by external id; returns how many rows were hit."""
+        dead = np.asarray(ids, np.int32)
+        hit = self.hot.tombstone(dead)
+        if hit:
+            self._hot_device = None
+        for s, sg in enumerate(self.segments):
+            mask = np.isin(self._seg_ids[s], dead) & self._seg_live[s]
+            if mask.any():
+                self.segments[s] = sg.tombstone(mask)
+                self._seg_live[s] = self._seg_live[s] & ~mask
+                hit += int(mask.sum())
+        return hit
+
+    def flush(self) -> None:
+        """Seal the hot buffer's live rows into a new sealed segment."""
+        dropped = self.hot.ids[(self.hot.ids >= 0) & ~self.hot.live]
+        rows, ids = self.hot.take_live()
+        self._resident.difference_update(dropped.tolist())
+        self._hot_device = None
+        if len(ids) == 0:
+            return
+        Xj = jnp.asarray(rows)
+        codes = np.asarray(encode(Xj, self.cb, self.cfg.pq))
+        assign = np.asarray(coarse_assign(
+            Xj, self.coarse, self.cfg.coarse_window(self.dim)))
+        cap = self.cfg.hot_capacity
+        self._add_segment(seal(codes, ids, assign, self.cfg.n_lists,
+                               rows=cap, max_list=cap))
+
+    def compact(self) -> None:
+        """Merge every sealed segment into one: tombstoned and padding rows
+        are dropped, inverted lists re-balanced, and the fine stage's
+        candidate width shrinks from the flush-time worst case (the full
+        segment capacity) back to the true longest merged list."""
+        if not self.segments:
+            return
+        codes, ids, assign = [], [], []
+        for s, sg in enumerate(self.segments):
+            live = self._seg_live[s]
+            dead = self._seg_ids[s][~live]
+            self._resident.difference_update(dead[dead >= 0].tolist())
+            codes.append(np.asarray(sg.codes)[live])
+            ids.append(self._seg_ids[s][live])
+            assign.append(np.asarray(sg.assign)[live])
+        codes = np.concatenate(codes)
+        ids = np.concatenate(ids)
+        assign = np.concatenate(assign)
+        self.segments, self._seg_ids, self._seg_live = [], [], []
+        if len(ids) == 0:
+            return
+        self._add_segment(seal(codes, ids, assign, self.cfg.n_lists,
+                               rows=len(ids)))
+
+    # -- read path ----------------------------------------------------------
+
+    def search(self, Q: np.ndarray, *, n_probe: int, topk: int = 1
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Top-``topk`` live neighbors of ``Q (Nq, D)`` -> (dist, ids)."""
+        Q = self._validate(Q, n_probe, topk)
+        return search_impl(self.coarse, self.cb, tuple(self.segments),
+                           self._hot_arrays(), Q,
+                           icfg=self.cfg, n_probe=n_probe, topk=topk,
+                           dim=self.dim)
+
+    def _validate(self, Q, n_probe: int, topk: int) -> jnp.ndarray:
+        Q = jnp.asarray(Q, jnp.float32)
+        if Q.ndim != 2 or Q.shape[1] != self.dim:
+            raise ValueError(
+                f"expected (n, {self.dim}) queries, got {Q.shape}")
+        validate_n_probe(n_probe, self.cfg.n_lists)
+        if topk < 1:
+            raise ValueError(f"topk={topk} must be >= 1")
+        return Q
+
+    def _add_segment(self, seg: SealedSegment,
+                     host_ids: Optional[np.ndarray] = None,
+                     host_live: Optional[np.ndarray] = None) -> None:
+        self.segments.append(seg)
+        self._seg_ids.append(np.asarray(seg.ids) if host_ids is None
+                             else np.asarray(host_ids))
+        self._seg_live.append(np.asarray(seg.live) if host_live is None
+                              else np.asarray(host_live))
+        ids = self._seg_ids[-1]
+        self._resident.update(ids[ids >= 0].tolist())
+
+    def _hot_arrays(self):
+        if self.hot.count == 0:
+            return None
+        if self._hot_device is None:      # invalidated on any hot mutation
+            self._hot_device = (jnp.asarray(self.hot.data),
+                                jnp.asarray(self.hot.ids),
+                                jnp.asarray(self.hot.live))
+        return self._hot_device
+
+    # -- accounting ---------------------------------------------------------
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.segments)
+
+    def n_live(self) -> int:
+        return self.hot.n_live() + sum(
+            int(live.sum()) for live in self._seg_live)
+
+    def live_ids(self) -> np.ndarray:
+        out = [self.hot.ids[self.hot.live]]
+        out += [ids[live] for ids, live in zip(self._seg_ids,
+                                               self._seg_live)]
+        return np.sort(np.concatenate(out))
+
+    def memory_cost(self) -> dict:
+        """§3.4 accounting extended with the lifecycle-layer overheads."""
+        rows = sum(sg.rows for sg in self.segments)
+        return memory_cost(self.cfg.pq, self.dim, rows,
+                           n_segments=self.n_segments,
+                           n_lists=self.cfg.n_lists,
+                           hot_capacity=self.cfg.hot_capacity)
+
+    def stats(self) -> dict:
+        return dict(n_segments=self.n_segments, n_live=self.n_live(),
+                    hot_fill=self.hot.count, next_id=self.next_id,
+                    sealed_rows=sum(sg.rows for sg in self.segments),
+                    max_lists=[sg.max_list for sg in self.segments])

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_host_mesh"]
+__all__ = ["make_production_mesh", "make_host_mesh", "make_search_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -21,3 +21,13 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """Degenerate 1x1 mesh for CPU tests/examples (same axis names)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_search_mesh(n_devices: int | None = None):
+    """1-D ``("search",)`` mesh for the index query planner: the padded
+    query batch is sharded across all (or the first ``n_devices``) chips,
+    with the index itself replicated.  Degenerates to a 1-device mesh on
+    CPU, where the planner's shard_map path is bit-identical to the plain
+    vmap path."""
+    n = n_devices if n_devices is not None else len(jax.devices())
+    return jax.make_mesh((n,), ("search",))

@@ -15,6 +15,8 @@ from repro.core.metrics import adjusted_rand_index, error_rate, rand_index
 from repro.core.pq import PQConfig
 from repro.data.timeseries import cbf, trace_like
 
+pytestmark = pytest.mark.slow    # end-to-end application accuracy: tier-2
+
 
 @pytest.fixture(scope="module")
 def cbf_split():

@@ -37,6 +37,7 @@ def _batch(cfg, key):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 class TestReducedSmoke:
     def test_train_step(self, arch):

@@ -50,6 +50,29 @@ class TestSaveRestore:
         with pytest.raises(AssertionError):
             restore(d, 1, {"only": jnp.zeros((2,))})
 
+    def test_crashed_overwrite_recovers_old_version(self, tmp_path):
+        """Simulated crash between the two renames of an overwrite: the
+        .old- aside is the only complete copy and must be rediscovered."""
+        d = str(tmp_path)
+        save(d, 5, _tree(1))
+        os.rename(os.path.join(d, "step_0000000005"),
+                  os.path.join(d, ".old-step_0000000005"))
+        assert latest_step(d) == 5           # recovery renames it back
+        back = restore(d, 5, _tree(0))
+        assert float(back["scalar"]) == 1.0
+
+    def test_resave_same_step_replaces_cleanly(self, tmp_path):
+        """Re-publishing an existing step must leave the new version (and
+        no .old-/.tmp- staging debris) — the crash-safe overwrite path."""
+        d = str(tmp_path)
+        save(d, 5, _tree(1))
+        save(d, 5, _tree(2))
+        back = restore(d, 5, _tree(0))
+        np.testing.assert_array_equal(np.asarray(back["nested"]["b"]),
+                                      np.arange(5))
+        assert float(back["scalar"]) == 2.0
+        assert os.listdir(d) == ["step_0000000005"]
+
 
 class TestAsyncWriter:
     def test_async_submit_wait(self, tmp_path):

@@ -1,0 +1,340 @@
+"""Streaming segmented index: lifecycle, equivalence to the monolithic
+IVF-PQDTW index, snapshot round-trips, sharded planner, accounting."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.core.dispatch import use_backend
+from repro.core.ivf import build_index, search_batch
+from repro.core.pq import PQConfig, memory_cost
+from repro.data.timeseries import cbf
+from repro.index import (IndexConfig, StreamingIndex, latest_snapshot,
+                         restore_snapshot, save_snapshot, search_sharded)
+
+
+def _config(n_lists=4, hot_capacity=12):
+    pq = PQConfig(n_sub=4, codebook_size=8, use_prealign=False,
+                  kmeans_iters=2, dba_iters=1)
+    return IndexConfig(pq=pq, n_lists=n_lists, hot_capacity=hot_capacity,
+                       coarse_iters=3)
+
+
+@pytest.fixture(scope="module")
+def data():
+    X, _ = cbf(n_per_class=12, length=48, seed=0)    # 36 series
+    Q, _ = cbf(n_per_class=2, length=48, seed=7)     # 6 queries
+    return X.astype(np.float32), Q.astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def booted(data):
+    X, _ = data
+    return StreamingIndex.bootstrap(jax.random.PRNGKey(0), X, _config())
+
+
+def _fresh(booted):
+    """Empty index sharing booted's trained quantizers (cheap per-test)."""
+    idx = StreamingIndex.from_parts(booted.cfg, booted.coarse, booted.cb,
+                                    booted.dim)
+    return idx
+
+
+class TestLifecycle:
+    def test_insert_autoflushes_into_segments(self, data, booted):
+        X, _ = data
+        idx = _fresh(booted)
+        ids = idx.insert(X[:30])
+        np.testing.assert_array_equal(ids, np.arange(30))
+        assert idx.n_segments == 2              # 2 x 12 sealed, 6 hot
+        assert idx.hot.count == 6
+        assert idx.n_live() == 30
+
+    def test_hot_only_search_is_exact_banded_dtw(self, data, booted,
+                                                 dtw_ref):
+        X, Q = data
+        idx = _fresh(booted)
+        idx.insert(X[:8])                       # stays entirely in hot
+        d, ids = idx.search(Q[:1], n_probe=1, topk=1)
+        w = idx.cfg.coarse_window(X.shape[1])
+        want = min(np.sqrt(dtw_ref(Q[0], X[j], w)) for j in range(8))
+        assert float(d[0, 0]) == pytest.approx(want, rel=1e-5)
+
+    def test_delete_tombstones_hot_and_sealed(self, data, booted):
+        X, Q = data
+        idx = _fresh(booted)
+        idx.insert(X[:20])                      # 12 sealed + 8 hot
+        hit = idx.delete([3, 15, 99])           # one sealed, one hot, one miss
+        assert hit == 2
+        assert idx.n_live() == 18
+        _, ids = idx.search(Q, n_probe=idx.cfg.n_lists, topk=18)
+        found = set(np.asarray(ids).ravel().tolist())
+        assert 3 not in found and 15 not in found
+
+    def test_compact_preserves_live_set(self, data, booted):
+        X, _ = data
+        idx = _fresh(booted)
+        idx.insert(X)
+        idx.flush()
+        idx.delete([1, 13, 25])
+        before = idx.live_ids()
+        idx.compact()
+        assert idx.n_segments == 1
+        np.testing.assert_array_equal(idx.live_ids(), before)
+        # dead padding and tombstones were physically dropped
+        assert idx.segments[0].rows == len(before)
+
+    def test_euclidean_metric_hot_and_sealed_merge_consistently(self, data):
+        """Under the PQ_ED baseline metric the hot scan must rank with
+        Euclidean distance (not DTW), so a row keeps its sqrt-space scale
+        when a flush moves it from hot to sealed."""
+        X, Q = data
+        pq = PQConfig(n_sub=4, codebook_size=8, metric="euclidean",
+                      use_prealign=False, kmeans_iters=2)
+        cfg = IndexConfig(pq=pq, n_lists=4, hot_capacity=12, coarse_iters=3)
+        idx = StreamingIndex.bootstrap(jax.random.PRNGKey(0), X, cfg)
+        idx.insert(X[:8])                      # hot only
+        d_hot, _ = idx.search(Q[:2], n_probe=4, topk=1)
+        want = np.sqrt(((Q[:2, None] - X[None, :8]) ** 2).sum(-1)).min(1)
+        np.testing.assert_allclose(np.asarray(d_hot)[:, 0], want,
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_tombstoned_id_reserved_until_dropped(self, data, booted):
+        X, _ = data
+        idx = _fresh(booted)
+        idx.insert(X[:12])                     # exactly one sealed segment
+        idx.delete([5])
+        with pytest.raises(ValueError, match="already resident"):
+            idx.insert(X[:1], ids=[5])         # still occupies a sealed slot
+        idx.compact()                          # physically dropped
+        idx.insert(X[:1], ids=[5])             # now reusable
+        assert 5 in idx.live_ids()
+
+    def test_empty_index_searches_clean(self, data, booted):
+        _, Q = data
+        idx = _fresh(booted)
+        d, ids = idx.search(Q, n_probe=1, topk=3)
+        assert np.isinf(np.asarray(d)).all()
+        assert (np.asarray(ids) == -1).all()
+
+    def test_validation_errors(self, data, booted):
+        X, Q = data
+        idx = _fresh(booted)
+        with pytest.raises(ValueError, match="n_probe"):
+            idx.search(Q, n_probe=idx.cfg.n_lists + 1)
+        with pytest.raises(ValueError, match="topk"):
+            idx.search(Q, n_probe=1, topk=0)
+        with pytest.raises(ValueError, match="series"):
+            idx.insert(np.zeros((2, 7), np.float32))
+        with pytest.raises(ValueError, match="queries"):
+            idx.search(Q[:, :10], n_probe=1)
+        with pytest.raises(ValueError, match="ids must be >= 0"):
+            idx.insert(X[:2], ids=[-1, 3])
+        with pytest.raises(ValueError, match="duplicate ids"):
+            idx.insert(X[:2], ids=[5, 5])
+        idx.insert(X[:14], ids=np.arange(14))    # fills hot -> one sealed
+        with pytest.raises(ValueError, match="already resident"):
+            idx.insert(X[:1], ids=[2])           # collides with sealed row
+        with pytest.raises(ValueError, match="already resident"):
+            idx.insert(X[:1], ids=[13])          # collides with hot row
+        with pytest.raises(ValueError, match="hot_capacity"):
+            StreamingIndex.from_parts(
+                dataclasses.replace(idx.cfg, hot_capacity=0),
+                idx.coarse, idx.cb, idx.dim)
+
+
+@pytest.mark.parametrize("backend", ["jax", "pallas_interpret"])
+def test_incremental_matches_from_scratch(data, booted, backend, tmp_path):
+    """Acceptance: inserts across >=3 segments + deletes + compaction +
+    snapshot/restore returns the same top-1 as a from-scratch build_index
+    over the equivalent live dataset (shared quantizers, full probe)."""
+    X, Q = data
+    with use_backend(backend):
+        jax.clear_caches()                       # force backend re-dispatch
+        idx = _fresh(booted)
+        idx.insert(X)                            # 36 rows -> 3 segments
+        assert idx.n_segments == 3
+        dead = [2, 9, 17, 30]
+        assert idx.delete(dead) == len(dead)
+        idx.compact()
+        save_snapshot(str(tmp_path), idx)
+        idx = restore_snapshot(str(tmp_path))
+
+        live = np.setdiff1d(np.arange(len(X)), dead)
+        ref = build_index(jax.random.PRNGKey(1), jnp.asarray(X[live]),
+                          idx.cfg.pq, n_lists=idx.cfg.n_lists,
+                          coarse=idx.coarse, cb=idx.cb)
+        d_ref, i_ref = search_batch(ref, jnp.asarray(Q), idx.cfg.pq,
+                                    n_probe=idx.cfg.n_lists, topk=1)
+        d, ids = idx.search(Q, n_probe=idx.cfg.n_lists, topk=1)
+        np.testing.assert_allclose(np.asarray(d)[:, 0],
+                                   np.asarray(d_ref)[:, 0],
+                                   rtol=1e-5, atol=1e-5)
+        # ref ids are positions into the live subset; map to external ids
+        np.testing.assert_array_equal(np.asarray(ids)[:, 0],
+                                      live[np.asarray(i_ref)[:, 0]])
+
+
+class TestSnapshot:
+    def test_roundtrip_identical_search(self, data, booted, tmp_path):
+        X, Q = data
+        idx = _fresh(booted)
+        idx.insert(X[:20])                      # sealed + live hot rows
+        idx.delete([4, 14])
+        save_snapshot(str(tmp_path), idx)
+        back = restore_snapshot(str(tmp_path))
+        assert back.next_id == idx.next_id
+        d0, i0 = idx.search(Q, n_probe=2, topk=5)
+        d1, i1 = back.search(Q, n_probe=2, topk=5)
+        np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+        np.testing.assert_allclose(np.asarray(d0), np.asarray(d1),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_tombstones_stay_deleted_after_restore(self, data, booted,
+                                                   tmp_path):
+        X, Q = data
+        idx = _fresh(booted)
+        idx.insert(X[:24])
+        idx.flush()
+        idx.delete([0, 7, 20])
+        idx.compact()
+        save_snapshot(str(tmp_path), idx)
+        back = restore_snapshot(str(tmp_path))
+        assert back.n_live() == 21
+        _, ids = back.search(Q, n_probe=back.cfg.n_lists, topk=21)
+        found = set(np.asarray(ids).ravel().tolist())
+        assert found.isdisjoint({0, 7, 20})
+
+    def test_latest_step_and_gc(self, data, booted, tmp_path):
+        X, _ = data
+        idx = _fresh(booted)
+        idx.insert(X[:6])
+        for _ in range(4):
+            save_snapshot(str(tmp_path), idx, keep_last=2)
+        assert latest_snapshot(str(tmp_path)) == 3
+        restore_snapshot(str(tmp_path), step=2)   # survivor of GC
+        with pytest.raises(FileNotFoundError):
+            restore_snapshot(str(tmp_path / "nowhere"))
+
+    @pytest.mark.slow
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(6, 36), st.sets(st.integers(0, 35), max_size=6),
+           st.booleans(), st.booleans())
+    def test_snapshot_roundtrip_property(self, data, booted,
+                                         n_ins, dead, do_flush, do_compact):
+        """Property sweep: random ingest/delete/flush/compact schedules
+        round-trip to bit-identical (distances, ids) search results, with
+        tombstoned entries staying deleted after restore."""
+        import shutil
+        import tempfile
+
+        X, Q = data
+        idx = _fresh(booted)
+        idx.insert(X[:n_ins])
+        idx.delete(sorted(dead))
+        if do_flush:
+            idx.flush()
+        if do_compact:
+            idx.compact()
+        sub = tempfile.mkdtemp(prefix="snap_prop_")
+        try:
+            save_snapshot(sub, idx)
+            back = restore_snapshot(sub)
+        finally:
+            shutil.rmtree(sub, ignore_errors=True)
+        k = min(4, max(1, idx.n_live()))
+        d0, i0 = idx.search(Q, n_probe=2, topk=k)
+        d1, i1 = back.search(Q, n_probe=2, topk=k)
+        np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+        np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+        np.testing.assert_array_equal(idx.live_ids(), back.live_ids())
+        assert not set(back.live_ids()).intersection(
+            d for d in dead if d < n_ins)
+
+
+class TestPlanner:
+    def test_sharded_matches_direct(self, data, booted):
+        X, Q = data
+        idx = _fresh(booted)
+        idx.insert(X[:20])
+        idx.delete([2, 13])
+        d0, i0 = idx.search(Q, n_probe=3, topk=4)
+        d1, i1 = search_sharded(idx, Q, n_probe=3, topk=4)
+        np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+        np.testing.assert_allclose(np.asarray(d0), np.asarray(d1),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_sharded_validates(self, data, booted):
+        _, Q = data
+        idx = _fresh(booted)
+        with pytest.raises(ValueError, match="n_probe"):
+            search_sharded(idx, Q, n_probe=99)
+
+    @pytest.mark.slow
+    def test_sharded_multi_device(self):
+        """The shard_map fan-out on 4 simulated host devices (query count
+        not divisible -> padded) matches the single-device path."""
+        import os
+        import subprocess
+        import sys
+
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        env = dict(os.environ,
+                   XLA_FLAGS="--xla_force_host_platform_device_count=4",
+                   JAX_PLATFORMS="cpu",
+                   PYTHONPATH=os.path.join(root, "src"))
+        code = """
+import numpy as np, jax
+assert len(jax.devices()) == 4
+from repro.core.pq import PQConfig
+from repro.index import IndexConfig, StreamingIndex, search_sharded
+from repro.data.timeseries import cbf
+X, _ = cbf(12, length=48, seed=0)
+Q, _ = cbf(2, length=48, seed=7)          # 6 queries -> padded to 8
+pq = PQConfig(n_sub=4, codebook_size=8, use_prealign=False,
+              kmeans_iters=2, dba_iters=1)
+idx = StreamingIndex.bootstrap(
+    jax.random.PRNGKey(0), X,
+    IndexConfig(pq=pq, n_lists=4, hot_capacity=12, coarse_iters=3))
+idx.insert(X[:30]); idx.delete([3, 17])
+d0, i0 = idx.search(Q, n_probe=3, topk=4)
+d1, i1 = search_sharded(idx, Q, n_probe=3, topk=4)
+np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+np.testing.assert_allclose(np.asarray(d0), np.asarray(d1), rtol=1e-6)
+"""
+        res = subprocess.run([sys.executable, "-c", code], env=env,
+                             capture_output=True, text=True, timeout=600)
+        assert res.returncode == 0, res.stderr[-2000:]
+
+
+class TestAccounting:
+    def test_memory_cost_gains_segmented_keys(self, data, booted):
+        X, _ = data
+        idx = _fresh(booted)
+        idx.insert(X)
+        m = idx.memory_cost()
+        for key in ("sidecar_bytes", "list_bytes", "hot_bytes",
+                    "index_bytes", "total_bytes"):
+            assert key in m and m[key] >= 0
+        assert m["total_bytes"] >= m["index_bytes"]
+        # plain (non-segmented) call keeps its old surface
+        plain = memory_cost(idx.cfg.pq, idx.dim, 100)
+        assert "total_bytes" not in plain and "compression" in plain
+        # hot-only index: no sealed segments -> no inverted-list tables
+        hot_only = _fresh(booted)
+        hot_only.insert(X[:4])
+        assert hot_only.memory_cost()["list_bytes"] == 0
+
+    def test_compaction_shrinks_accounting(self, data, booted):
+        X, _ = data
+        idx = _fresh(booted)
+        idx.insert(X)
+        idx.flush()
+        idx.delete([0, 1, 2, 3])
+        before = idx.memory_cost()["index_bytes"]
+        idx.compact()
+        assert idx.memory_cost()["index_bytes"] < before

@@ -67,3 +67,45 @@ class TestRecall:
         dd = np.asarray(d)
         assert (np.diff(dd) >= -1e-6).all()
         assert len(np.unique(np.asarray(ids))) == 5
+
+
+class TestValidation:
+    """Bad probe/topk budgets fail with a clear ValueError, not an XLA
+    shape error deep inside top_k."""
+
+    def test_n_probe_out_of_range_raises(self, setup):
+        _, Q, cfg, index = setup
+        for bad in (0, -1, index.n_lists + 1):
+            with pytest.raises(ValueError, match="n_probe"):
+                search_batch(index, jnp.asarray(Q), cfg, n_probe=bad)
+
+    def test_topk_exceeds_candidate_budget_raises(self, setup):
+        _, Q, cfg, index = setup
+        cap = 1 * index.max_list
+        with pytest.raises(ValueError, match="topk"):
+            search(index, jnp.asarray(Q[0]), cfg, n_probe=1, topk=cap + 1)
+        with pytest.raises(ValueError, match="topk"):
+            search_batch(index, jnp.asarray(Q), cfg, n_probe=2, topk=0)
+
+
+class TestPretrainedQuantizers:
+    def test_build_index_with_shared_quantizers_matches(self, setup):
+        """Re-building from the trained coarse/cb must reproduce the same
+        inverted-list layout (the streaming-index equivalence path)."""
+        X, _, cfg, index = setup
+        rebuilt = build_index(jax.random.PRNGKey(42), jnp.asarray(X), cfg,
+                              n_lists=index.n_lists, coarse=index.coarse,
+                              cb=index.cb)
+        np.testing.assert_array_equal(np.asarray(rebuilt.codes),
+                                      np.asarray(index.codes))
+        np.testing.assert_array_equal(np.asarray(rebuilt.ids),
+                                      np.asarray(index.ids))
+        np.testing.assert_array_equal(np.asarray(rebuilt.list_len),
+                                      np.asarray(index.list_len))
+        assert rebuilt.max_list == index.max_list
+
+    def test_build_index_coarse_shape_mismatch_raises(self, setup):
+        X, _, cfg, index = setup
+        with pytest.raises(ValueError, match="centroids"):
+            build_index(jax.random.PRNGKey(0), jnp.asarray(X), cfg,
+                        n_lists=index.n_lists + 1, coarse=index.coarse)

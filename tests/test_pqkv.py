@@ -159,6 +159,7 @@ class TestDecodeAttention:
                                    rtol=2e-2, atol=2e-2)
 
 
+@pytest.mark.slow
 class TestServeStep:
     def test_pq_serve_matches_exact_when_ring_covers(self):
         """End-to-end: W >= Smax makes PQ decode == exact decode."""

@@ -11,6 +11,8 @@ from repro.serve.cache import init_cache
 from repro.serve.decode import serve_step
 from repro.serve.prefill import prefill
 
+pytestmark = pytest.mark.slow    # whole-model prefill/decode: tier-2
+
 ARCHS = ["qwen2-72b", "gemma2-27b", "qwen3-moe-30b-a3b", "qwen2-vl-72b"]
 
 

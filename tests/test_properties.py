@@ -15,7 +15,9 @@ from repro.core.cluster import cut_k, linkage
 from repro.core.pq import PQConfig, PQCodebook, cdist_sym, encode_with_stats, fit
 from repro.train.optim import AdamWConfig, adamw_init, adamw_step, warmup_cosine
 
-SETTINGS = dict(max_examples=25, deadline=None)
+pytestmark = pytest.mark.slow    # hypothesis sweeps: tier-2
+
+SETTINGS = dict(max_examples=15, deadline=None)
 
 
 def _series(draw, n, length, lo=-4.0, hi=4.0):
