@@ -9,14 +9,26 @@ from typing import Callable, Dict, List
 
 import jax
 
-__all__ = ["timeit", "Bench", "OUT_DIR"]
+__all__ = ["timeit", "Bench", "OUT_DIR", "SMOKE", "set_smoke"]
 
 OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments/bench")
+
+# CI smoke mode (benchmarks/run.py --smoke): every suite runs its quick
+# sizes with a single repetition — the goal is "the benchmark still runs
+# and emits JSON", not stable numbers.
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
+
+
+def set_smoke(on: bool = True) -> None:
+    global SMOKE
+    SMOKE = on
 
 
 def timeit(fn: Callable, *args, repeats: int = 3, warmup: int = 1,
            **kwargs) -> Dict[str, float]:
     """Median wall time of ``fn(*args)`` with jit warmup; blocks on results."""
+    if SMOKE:
+        repeats, warmup = 1, min(warmup, 1)
     for _ in range(warmup):
         jax.block_until_ready(fn(*args, **kwargs))
     times = []

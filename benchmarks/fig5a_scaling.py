@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dtw import dtw_cdist
-from repro.core.pq import PQConfig, PQCodebook, cdist_sym, encode, fit
+from repro.core.pq import PQConfig, cdist_sym, encode, fit
 from repro.data.timeseries import random_walks
 
 from .common import Bench, timeit

@@ -1,36 +1,60 @@
-"""Fig 5c — cost of the MODWT pre-alignment step.
+"""Fig 5c — cost of the MODWT pre-alignment step, plus the fused-path sweep.
 
 The paper finds pre-alignment has a minor effect on runtime, driven mainly
 by the wavelet decomposition level; tail length is immaterial.  We sweep
-J (level) and t (tail fraction) and report the encode-path overhead vs the
+J (level) and t (tail fraction) and report the segmentation overhead vs the
 fixed-split baseline.
+
+On top of that, the encode-path sweep compares the three production routes
+end-to-end (exact full-scan encode in all cases, so the work compared is
+identical):
+
+    no_prealign   fixed segments + exact encode (the paper's ablation)
+    two_step      modwt.prealign -> HBM segment tensor -> exact encode
+    fused         one dispatch launch: the prealign_encode kernel performs
+                  MODWT, snap, re-interpolation and the DTW-1NN scan per
+                  batch tile without materializing segments
+
+each on both dispatch backends where it differs ("jax" reference vs
+"pallas_interpret" kernel bodies).  Results land in
+``experiments/bench/fig5c_prealign.json``; the repo-root copy committed as
+``BENCH_prealign.json`` tracks the headline numbers.
 """
 
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
+from repro.core import dispatch
 from repro.core.modwt import prealign, fixed_segments
-from repro.core.pq import PQConfig, encode, fit
+from repro.core.pq import PQConfig, encode, fit, uses_fused_prealign
 from repro.data.timeseries import trace_like
 
+from . import common
 from .common import Bench, timeit
 
 
 def run(quick: bool = True) -> Bench:
     b = Bench("fig5c_prealign")
     n = 30 if quick else 100
-    X, _ = trace_like(n, length=128 if quick else 256, seed=0)
+    length = 128 if quick else 256
+    if common.SMOKE:
+        n, length = 16, 64
+    X, _ = trace_like(n, length=length, seed=0)
     X = jnp.asarray(X)
     D = X.shape[1]
     M = 4
 
+    # -- segmentation-only sweep (paper fig 5c) -----------------------------
     base = timeit(lambda: fixed_segments(X, M), repeats=3)
     b.add(mode="fixed", level=0, tail_frac=0.0,
           segment_s=base["median_s"], overhead=1.0)
 
-    for J in ((1, 2, 3) if quick else (1, 2, 3, 4, 5)):
+    levels = (1, 2, 3) if quick else (1, 2, 3, 4, 5)
+    for J in (levels[:2] if common.SMOKE else levels):
         for tail_frac in (0.1, 0.2):
             tail = max(1, int(round(tail_frac * (D // M))))
             t = timeit(lambda: prealign(X, M, J, tail), repeats=3)
@@ -38,16 +62,31 @@ def run(quick: bool = True) -> Bench:
                   segment_s=t["median_s"],
                   overhead=t["median_s"] / max(base["median_s"], 1e-9))
 
-    # end-to-end: encode with vs without pre-alignment
+    # -- encode-path sweep: no-prealign vs two-step vs fused ----------------
     key = jax.random.PRNGKey(0)
-    for pre in (False, True):
-        cfg = PQConfig(n_sub=M, codebook_size=min(32, X.shape[0]),
-                       use_prealign=pre, kmeans_iters=3, dba_iters=1)
-        cb = fit(key, X, cfg)
-        t = timeit(lambda: encode(X, cb, cfg), repeats=2)
-        b.add(mode=f"encode_prealign={pre}", level=cfg.wavelet_level,
-              tail_frac=cfg.tail_frac, segment_s=t["median_s"],
-              overhead=0.0)
+    K = min(16 if common.SMOKE else 32, X.shape[0])
+    base_cfg = PQConfig(n_sub=M, codebook_size=K, kmeans_iters=3,
+                        dba_iters=1, exact_encode=True)
+    cfgs = {
+        "no_prealign": dataclasses.replace(base_cfg, use_prealign=False),
+        "two_step": dataclasses.replace(base_cfg, fused_encode=False),
+        "fused": base_cfg,
+    }
+    assert uses_fused_prealign(cfgs["fused"])
+    books = {}   # one codebook per segmentation geometry
+    for name, cfg in cfgs.items():
+        geom = cfg.subseq_len(D)
+        if geom not in books:
+            books[geom] = fit(key, X, cfg)
+        cb = books[geom]
+        for backend in ("jax", "pallas_interpret"):
+            with dispatch.use_backend(backend):
+                jax.clear_caches()
+                t = timeit(lambda: encode(X, cb, cfg), repeats=2)
+            b.add(mode=f"encode_{name}", backend=backend,
+                  level=cfg.wavelet_level, tail=cfg.tail(D),
+                  encode_s=t["median_s"],
+                  per_series_us=t["median_s"] / X.shape[0] * 1e6)
     b.save()
     return b
 

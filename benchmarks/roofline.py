@@ -10,7 +10,7 @@ from __future__ import annotations
 import glob
 import json
 import os
-from typing import Dict, List
+from typing import List
 
 from .common import Bench, OUT_DIR
 

@@ -6,9 +6,9 @@ from __future__ import annotations
 import argparse
 import time
 
-from . import (dtw_kernel_bench, fig5a_scaling, fig5b_params, fig5c_prealign,
-               index_scaling, ivf_scaling, memory_cost, pqkv_bench, roofline,
-               table1_accuracy)
+from . import (common, dtw_kernel_bench, fig5a_scaling, fig5b_params,
+               fig5c_prealign, index_scaling, ivf_scaling, memory_cost,
+               pqkv_bench, roofline, table1_accuracy)
 
 SUITES = {
     "dtw_kernel": dtw_kernel_bench.run,
@@ -28,8 +28,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (slow on CPU)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: quick sizes (further shrunk where a "
+                         "suite supports it), 1 repetition per point")
     ap.add_argument("--only", choices=tuple(SUITES), default=None)
     args = ap.parse_args()
+    if args.smoke and args.full:
+        ap.error("--smoke and --full are mutually exclusive")
+    if args.smoke:
+        common.set_smoke(True)
 
     names = (args.only,) if args.only else tuple(SUITES)
     for name in names:

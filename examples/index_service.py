@@ -31,13 +31,21 @@ def main():
     ap.add_argument("--chunk", type=int, default=24,
                     help="series inserted per round")
     ap.add_argument("--length", type=int, default=96, help="series length")
+    ap.add_argument("--prealign", action="store_true",
+                    help="MODWT pre-aligned ingestion (§3.5): every seal "
+                         "encodes through the fused prealign_encode kernel")
     args = ap.parse_args()
     D = args.length
 
     # --- bootstrap the shared quantizers on a historical sample ------------
+    # With --prealign, seal-time encoding snaps segment boundaries to MODWT
+    # change points before quantizing (exact_encode=True keeps the encode on
+    # the fused single-kernel dispatch path); queries are pre-aligned the
+    # same way inside search, so codes and query LUTs stay comparable.
     sample = random_walks(128, D, seed=0)
     cfg = IndexConfig(
-        pq=PQConfig(n_sub=4, codebook_size=32, use_prealign=False,
+        pq=PQConfig(n_sub=4, codebook_size=32,
+                    use_prealign=args.prealign, exact_encode=args.prealign,
                     kmeans_iters=3, dba_iters=1),
         n_lists=8, hot_capacity=64, coarse_iters=4)
     t0 = time.perf_counter()

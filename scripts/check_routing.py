@@ -1,0 +1,55 @@
+#!/usr/bin/env python3
+"""Fail CI if the dispatch layer silently fell off the expected backend.
+
+Usage: python scripts/check_routing.py ROUTING_DUMP.json [BACKEND]
+
+The dump is written by tests/conftest.py at pytest session end (set
+REPRO_ROUTING_DUMP) from the process-lifetime `repro.core.dispatch.totals`
+ledger. Every elastic op listed below must have dispatched through BACKEND
+(default: the REPRO_ELASTIC_BACKEND the tests ran under) at least once —
+a kernel import error or an accidental fallback to the pure-JAX route
+would otherwise let the suite pass without executing a single Pallas
+kernel body.
+"""
+
+import json
+import os
+import sys
+
+EXPECTED_OPS = (
+    "elastic_pairwise",
+    "elastic_cdist",
+    "adc_cdist",
+    "adc_lookup",
+    "prealign_encode",
+)
+
+
+def main() -> int:
+    if len(sys.argv) < 2:
+        print(__doc__)
+        return 2
+    path = sys.argv[1]
+    backend = (
+        sys.argv[2]
+        if len(sys.argv) > 2
+        else os.environ.get("REPRO_ELASTIC_BACKEND", "pallas_interpret")
+    )
+    with open(path) as f:
+        ledger = json.load(f)
+    print(f"routing ledger ({path}), asserting backend {backend!r}:")
+    for key in sorted(ledger):
+        print(f"  {key}: {ledger[key]}")
+    missing = [op for op in EXPECTED_OPS if not ledger.get(f"{op}:{backend}")]
+    if missing:
+        print(
+            f"FAIL: ops never dispatched through {backend!r}: "
+            f"{', '.join(missing)} — silent backend fallback?"
+        )
+        return 1
+    print(f"OK: all {len(EXPECTED_OPS)} elastic ops routed through {backend!r}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,10 +15,12 @@ Public API:
 
 from .pq import (PQConfig, PQCodebook, fit, encode, encode_with_stats,
                  cdist_sym, cdist_asym, cdist_sym_refined, segment,
-                 memory_cost, query_lut, query_lut_batch)
+                 memory_cost, query_lut, query_lut_batch,
+                 uses_fused_prealign)
 from .dtw import dtw, dtw_pair, dtw_batch, dtw_cdist
 from .dispatch import (elastic_pairwise, elastic_cdist, adc_cdist,
-                       adc_lookup, get_backend, set_backend, use_backend)
+                       adc_lookup, prealign_encode, get_backend,
+                       set_backend, use_backend)
 from .lb import keogh_envelope, lb_keogh, lb_kim, lb_cascade
 from .modwt import prealign, fixed_segments, modwt_scale
 from .dba import dba, dba_update, alignment_path
@@ -32,9 +34,9 @@ __all__ = [
     "PQConfig", "PQCodebook", "fit", "encode", "encode_with_stats",
     "cdist_sym", "cdist_asym", "cdist_sym_refined", "segment", "memory_cost",
     "query_lut", "query_lut_batch",
-    "dtw", "dtw_pair", "dtw_batch", "dtw_cdist",
+    "dtw", "dtw_pair", "dtw_batch", "dtw_cdist", "uses_fused_prealign",
     "elastic_pairwise", "elastic_cdist", "adc_cdist", "adc_lookup",
-    "get_backend", "set_backend", "use_backend",
+    "prealign_encode", "get_backend", "set_backend", "use_backend",
     "keogh_envelope", "lb_keogh", "lb_kim", "lb_cascade",
     "prealign", "fixed_segments", "modwt_scale",
     "dba", "dba_update", "alignment_path",

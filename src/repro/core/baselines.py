@@ -88,11 +88,8 @@ def sax_transform(X: np.ndarray, n_segments: int, alphabet: int = 4
     # PAA with possibly non-divisible L: average fractional-weight bins.
     idx = (np.arange(L) * n_segments) // L
     paa = np.zeros((N, n_segments))
-    counts = np.bincount(idx, minlength=n_segments).astype(np.float64)
-    np.add.at(paa, (slice(None), idx), 0)  # no-op keeps shape checker honest
     for s in range(n_segments):
         paa[:, s] = Xz[:, idx == s].mean(1)
-    del counts
     bp = np.array(GAUSS_BREAKPOINTS[alphabet])
     return np.searchsorted(bp, paa).astype(np.int8)
 

@@ -6,10 +6,12 @@ distances) funnels through the four entry points here instead of calling a
 specific implementation, so the Pallas kernels are the *default engine* on
 TPU rather than a dead benchmark artifact:
 
-    elastic_pairwise(A, B, window)   zipped pairs    -> (N,)
-    elastic_cdist(A, B, window)      all pairs       -> (N, M)
-    adc_cdist(codes_a, codes_b, lut) symmetric ADC   -> (Na, Nb)
-    adc_lookup(codes, qlut)          asymmetric scan -> (N,)
+    elastic_pairwise(A, B, window)   zipped pairs          -> (N,)
+    elastic_cdist(A, B, window)      all pairs             -> (N, M)
+    adc_cdist(codes_a, codes_b, lut) symmetric ADC         -> (Na, Nb)
+    adc_lookup(codes, qlut)          asymmetric scan       -> (N,)
+    prealign_encode(X, centroids)    fused MODWT prealign
+                                     + DTW-1NN encode      -> (N, M) codes
 
 Backends (resolved once per call site at trace time):
 
@@ -22,7 +24,10 @@ Selection order: :func:`set_backend` override > ``$REPRO_ELASTIC_BACKEND`` >
 ``"auto"``.  The :data:`stats` counters record which route every op took;
 they are incremented at *trace* time (a jitted caller that hits its cache
 does not re-count), which is exactly what tests need to assert that a code
-path really executes through the dispatch layer.
+path really executes through the dispatch layer.  :data:`totals` is the
+same ledger but process-lifetime — :func:`reset_stats` leaves it alone, so
+a CI run can dump it at session end and fail the build if an op silently
+fell back to the ``"jax"`` route (see ``scripts/check_routing.py``).
 """
 
 from __future__ import annotations
@@ -38,12 +43,15 @@ from ..kernels.dtw_band.ops import dtw_band, dtw_band_cdist
 from ..kernels.pq_adc.ops import adc_lookup as _adc_lookup_pallas
 from ..kernels.pq_adc.ops import adc_sym_cdist as _adc_sym_pallas
 from ..kernels.pq_adc.ref import adc_lookup_ref, adc_sym_cdist_ref
+from ..kernels.prealign_encode.ops import (
+    prealign_encode as _prealign_encode_pallas)
+from ..kernels.prealign_encode.ref import prealign_encode_ref
 from .dtw import dtw_batch, dtw_cdist
 
 __all__ = [
     "BACKENDS", "ENV_VAR", "get_backend", "set_backend", "use_backend",
     "elastic_pairwise", "elastic_cdist", "adc_cdist", "adc_lookup",
-    "stats", "reset_stats",
+    "prealign_encode", "stats", "totals", "reset_stats",
 ]
 
 ENV_VAR = "REPRO_ELASTIC_BACKEND"
@@ -53,6 +61,10 @@ _override: Optional[str] = None
 
 # (op, resolved backend) -> number of dispatches (trace-time, see module doc)
 stats: Dict[Tuple[str, str], int] = {}
+
+# same ledger, but never cleared by reset_stats: the process-lifetime record
+# a CI routing gate can assert on after the whole test session
+totals: Dict[Tuple[str, str], int] = {}
 
 
 def _check(name: str) -> str:
@@ -100,6 +112,7 @@ def reset_stats() -> None:
 
 def _count(op: str, route: str) -> None:
     stats[(op, route)] = stats.get((op, route), 0) + 1
+    totals[(op, route)] = totals.get((op, route), 0) + 1
 
 
 def _interpret_flag(backend: str) -> Optional[bool]:
@@ -152,3 +165,23 @@ def adc_lookup(codes: jnp.ndarray, qlut: jnp.ndarray) -> jnp.ndarray:
         return adc_lookup_ref(codes, qlut)
     return _adc_lookup_pallas(codes, qlut,
                               interpret=_interpret_flag(backend))
+
+
+def prealign_encode(X: jnp.ndarray, centroids: jnp.ndarray, *, level: int,
+                    tail: int, window: Optional[int] = None,
+                    block: int = 8) -> jnp.ndarray:
+    """Fused MODWT prealign + exact DTW-1NN encode: ``X (N, D)`` against
+    ``centroids (M, K, S)`` -> codes ``(N, M)`` int32.
+
+    The Pallas route performs the whole §3.5 pipeline (scale recursion,
+    change-point snap, segment re-interpolation, nearest-centroid scan) in
+    one pass per batch tile — the ``(N, M, S)`` segment tensor never
+    reaches HBM.  The ``"jax"`` route is the two-step reference.
+    """
+    backend = get_backend()
+    _count("prealign_encode", backend)
+    if backend == "jax":
+        return prealign_encode_ref(X, centroids, level, tail, window)
+    return _prealign_encode_pallas(X, centroids, level, tail, window,
+                                   block=block,
+                                   interpret=_interpret_flag(backend))

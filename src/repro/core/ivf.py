@@ -35,7 +35,24 @@ from .pq import (PQCodebook, PQConfig, _adc_gather, encode, fit,
                  query_lut_batch, segment)
 
 __all__ = ["IVFPQIndex", "build_index", "build_lists", "coarse_assign",
-           "fine_rank", "search", "search_batch", "validate_n_probe"]
+           "fine_rank", "search", "search_batch", "validate_n_probe",
+           "validate_codebook"]
+
+
+def validate_codebook(cb: PQCodebook, cfg: PQConfig, D: int) -> None:
+    """Reject a pre-trained codebook whose geometry disagrees with ``cfg``
+    for series of length ``D`` — e.g. a codebook trained without
+    pre-alignment paired with a ``use_prealign=True`` config (or with a
+    different ``snap_tail``).  Catches the mismatch at build/restore time
+    with a clear message instead of a shape error inside encode."""
+    want = cfg.subseq_len(D)
+    if cb.n_sub != cfg.n_sub or cb.subseq_len != want:
+        raise ValueError(
+            f"codebook geometry (n_sub={cb.n_sub}, subseq_len="
+            f"{cb.subseq_len}) does not match config (n_sub={cfg.n_sub}, "
+            f"subseq_len={want} for D={D}) — check the prealign settings "
+            f"(use_prealign/tail_frac/snap_tail) the codebook was trained "
+            f"with")
 
 
 class IVFPQIndex(NamedTuple):
@@ -106,6 +123,8 @@ def build_index(key: jax.Array, X: jnp.ndarray, cfg: PQConfig,
 
     if cb is None:
         cb = fit(kf, X, cfg)
+    else:
+        validate_codebook(cb, cfg, D)
     codes = np.asarray(encode(X, cb, cfg))
 
     order, start, length, max_list = build_lists(assign, n_lists)

@@ -10,7 +10,7 @@ costs only O(D/M) per bound evaluation.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

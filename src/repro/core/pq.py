@@ -29,14 +29,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from .dtw import euclidean_sq
-from .dispatch import adc_cdist, elastic_cdist, elastic_pairwise
+from .dispatch import (adc_cdist, elastic_cdist, elastic_pairwise,
+                       prealign_encode)
 from .lb import keogh_envelope, lb_keogh, lb_kim
 from .kmeans import dba_kmeans, euclidean_kmeans
 from .modwt import prealign, fixed_segments
 
 __all__ = ["PQConfig", "PQCodebook", "segment", "fit", "encode",
            "encode_with_stats", "query_lut", "query_lut_batch", "cdist_sym",
-           "cdist_asym", "cdist_sym_refined", "memory_cost"]
+           "cdist_asym", "cdist_sym_refined", "memory_cost",
+           "uses_fused_prealign"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,16 +51,22 @@ class PQConfig:
     use_prealign: bool = True   # MODWT pre-alignment (§3.5)
     wavelet_level: int = 3      # J
     tail_frac: float = 0.15     # t, fraction of D/M
+    snap_tail: Optional[int] = None  # explicit t in samples (overrides
+                                     # tail_frac; 0 = fixed splits)
     kmeans_iters: int = 8
     dba_iters: int = 2
     refine_frac: float = 0.125  # T/K for filter-then-refine encoding
     exact_encode: bool = False  # disable the LB filter
+    fused_encode: bool = True   # exact prealigned encodes take the fused
+                                # MODWT+encode dispatch path (one kernel)
 
     def subseq_len(self, D: int) -> int:
         base = D // self.n_sub
         return base + self.tail(D) if (self.use_prealign and self.metric == "dtw") else base
 
     def tail(self, D: int) -> int:
+        if self.snap_tail is not None:
+            return int(self.snap_tail)
         return max(1, int(round(self.tail_frac * (D // self.n_sub))))
 
     def window(self, D: int) -> Optional[int]:
@@ -188,6 +196,15 @@ def _encode_segs(segs: jnp.ndarray, cb: PQCodebook, window: Optional[int],
     return codes, best_d <= -neg[..., -1]
 
 
+def uses_fused_prealign(cfg: PQConfig) -> bool:
+    """True when :func:`encode` takes the fused prealign+encode dispatch
+    path: DTW metric, pre-alignment on, and an exact (full-scan) encode —
+    the LB filter-then-refine route still needs materialized segments and
+    envelopes, so it stays on the two-step."""
+    return (cfg.fused_encode and cfg.use_prealign and cfg.metric == "dtw"
+            and (cfg.exact_encode or cfg.refine_t() >= cfg.codebook_size))
+
+
 def encode(X: jnp.ndarray, cb: PQCodebook, cfg: PQConfig) -> jnp.ndarray:
     """Encode raw series ``X (N, D)`` to PQ codes ``(N, M)``."""
     codes, _ = encode_with_stats(X, cb, cfg)
@@ -198,8 +215,12 @@ def encode_with_stats(X: jnp.ndarray, cb: PQCodebook, cfg: PQConfig
                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Encode + per-code soundness flags (True = certified exact-NN code)."""
     X = jnp.asarray(X, jnp.float32)
-    segs = segment(X, cfg)
     D = X.shape[-1]
+    if uses_fused_prealign(cfg):
+        codes = prealign_encode(X, cb.centroids, level=cfg.wavelet_level,
+                                tail=cfg.tail(D), window=cfg.window(D))
+        return codes, jnp.ones(codes.shape, bool)   # full scan: always exact
+    segs = segment(X, cfg)
     return _encode_segs(segs, cb, cfg.window(D), cfg.refine_t(),
                         cfg.exact_encode, cfg.metric != "dtw")
 

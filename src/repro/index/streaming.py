@@ -28,7 +28,8 @@ import numpy as np
 
 from ..core.dispatch import elastic_cdist
 from ..core.dtw import euclidean_sq
-from ..core.ivf import coarse_assign, fine_rank, validate_n_probe
+from ..core.ivf import (coarse_assign, fine_rank, validate_codebook,
+                        validate_n_probe)
 from ..core.kmeans import dba_kmeans
 from ..core.pq import (PQCodebook, PQConfig, encode, fit, memory_cost,
                        query_lut_batch, segment)
@@ -178,6 +179,10 @@ class StreamingIndex:
             raise ValueError(
                 f"hot_capacity={cfg.hot_capacity} must be >= 1 (inserts "
                 f"stage in the hot buffer before sealing)")
+        # the prealign geometry (use_prealign/tail) must match the codebook:
+        # every seal re-encodes through it, so a drifted config would write
+        # segments of the wrong static length into immutable shards
+        validate_codebook(cb, cfg.pq, int(dim))
         self.cfg = cfg
         self.coarse = jnp.asarray(coarse, jnp.float32)
         self.cb = cb

@@ -52,6 +52,7 @@ __all__ = [
     "make_dtw_band_call",
     "make_dtw_band_cdist_call",
     "band_width",
+    "wavefront_compressed",
 ]
 
 _NEG_SAFE_INF = 3.0e38  # finite stand-in for +inf (avoids inf-inf NaNs)
@@ -111,30 +112,28 @@ def dtw_band_kernel(a_ref, b_ref, o_ref, *, length: int, window: int,
 # Band-compressed kernel
 # ---------------------------------------------------------------------------
 
-def dtw_band_compressed_kernel(a_ref, b_ref, o_ref, *, length: int,
-                               window: int, block: int, width: int,
-                               broadcast_b: bool = False):
-    """Kernel body: ``a_ref (block, L)`` and ``b_ref (block, L)`` (or
-    ``(1, L)`` with ``broadcast_b``) -> ``o_ref (block, 1)``.
+def wavefront_compressed(a: jnp.ndarray, b: jnp.ndarray, *, length: int,
+                         window: int, width: int) -> jnp.ndarray:
+    """Band-compressed anti-diagonal sweep over zipped pair *arrays*.
 
-    Registers are ``(block, width)`` — only the feasible band cells of each
-    anti-diagonal are materialized.
+    ``a (rows, L)`` vs ``b (rows, L)`` -> ``(rows, 1)`` squared banded DTW.
+    This is the in-register DP shared by :func:`dtw_band_compressed_kernel`
+    and the fused pre-align+encode kernel (which calls it on segment x
+    centroid pairs it has just built in VMEM) — everything stays
+    ``(rows, width)`` with ``width ~ window + 1``.
     """
     L, w, W = length, window, width
-    a = a_ref[...].astype(jnp.float32)
-    b = b_ref[...].astype(jnp.float32)
-    if broadcast_b:
-        b = jnp.broadcast_to(b, (block, L))
+    rows = a.shape[0]
 
     inf = jnp.float32(_NEG_SAFE_INF)
-    t = jax.lax.broadcasted_iota(jnp.int32, (block, W), 1)
+    t = jax.lax.broadcasted_iota(jnp.int32, (rows, W), 1)
 
     # Padded copies so the per-diagonal windows are plain dynamic slices:
     #   a cells:  a[lo + t]              -> slice of a_pad at lo
     #   b cells:  b[d - lo - t]
     #           = b_rev[L-1-d+lo + t]    -> slice of b_rev_pad at L-1-d+lo
     # (0 <= lo <= L-1 and 0 <= L-1-d+lo <= L-1 for every feasible diagonal.)
-    pad = jnp.zeros((block, W), jnp.float32)
+    pad = jnp.zeros((rows, W), jnp.float32)
     a_pad = jnp.concatenate([a, pad], axis=1)
     b_rev_pad = jnp.concatenate([jnp.flip(b, axis=1), pad], axis=1)
 
@@ -168,10 +167,27 @@ def dtw_band_compressed_kernel(a_ref, b_ref, o_ref, *, length: int,
         diag = jnp.minimum(diag, inf)
         return diag, prev1
 
-    init = (jnp.full((block, W), inf), jnp.full((block, W), inf))
+    init = (jnp.full((rows, W), inf), jnp.full((rows, W), inf))
     last, _ = jax.lax.fori_loop(0, 2 * L - 1, step, init)
     # Diagonal 2L-2 has lo = L-1: cell (L-1, L-1) sits in slot 0.
-    o_ref[...] = last[:, 0:1]
+    return last[:, 0:1]
+
+
+def dtw_band_compressed_kernel(a_ref, b_ref, o_ref, *, length: int,
+                               window: int, block: int, width: int,
+                               broadcast_b: bool = False):
+    """Kernel body: ``a_ref (block, L)`` and ``b_ref (block, L)`` (or
+    ``(1, L)`` with ``broadcast_b``) -> ``o_ref (block, 1)``.
+
+    Registers are ``(block, width)`` — only the feasible band cells of each
+    anti-diagonal are materialized.
+    """
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    if broadcast_b:
+        b = jnp.broadcast_to(b, (block, length))
+    o_ref[...] = wavefront_compressed(a, b, length=length, window=window,
+                                      width=width)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,48 @@
+"""Pure-JAX oracle for the fused prealign+encode kernel.
+
+Definitionally the two-step path the kernel fuses: ``modwt.prealign``
+segmentation followed by an exact DTW-1NN scan of every subspace codebook
+(the ``exact_encode`` route of ``pq.encode``, without the HBM round-trip
+removed by the kernel).  Used as the ``"jax"`` dispatch backend and as the
+equality reference in tests.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ...core.dtw import dtw_cdist
+from ...core.modwt import prealign
+
+__all__ = ["prealign_encode_ref", "check_geometry"]
+
+
+def check_geometry(D: int, centroids: jnp.ndarray, tail: int) -> None:
+    """Clear error when series length / codebook / tail disagree — instead
+    of an opaque shape mismatch deep inside the segment interpolation."""
+    M, _, S = centroids.shape
+    want = D // M + tail
+    if S != want:
+        raise ValueError(
+            f"prealign geometry mismatch: centroids have subseq_len={S} but "
+            f"series of length {D} with n_sub={M}, tail={tail} produce "
+            f"segments of length {want}")
+
+
+@functools.partial(jax.jit, static_argnames=("level", "tail", "window"))
+def prealign_encode_ref(X: jnp.ndarray, centroids: jnp.ndarray, level: int,
+                        tail: int, window: Optional[int] = None
+                        ) -> jnp.ndarray:
+    """``X (N, D)``, ``centroids (M, K, S)`` -> codes ``(N, M)`` int32."""
+    X = jnp.asarray(X, jnp.float32)
+    centroids = jnp.asarray(centroids, jnp.float32)
+    check_geometry(X.shape[-1], centroids, tail)
+    M = centroids.shape[0]
+    segs = prealign(X, M, level, tail)               # (N, M, S)
+    d = jnp.stack([dtw_cdist(segs[:, m], centroids[m], window)
+                   for m in range(M)], axis=1)       # (N, M, K)
+    return jnp.argmin(d, axis=-1).astype(jnp.int32)

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Iterable, Optional
+from typing import Dict, Optional
 
 __all__ = ["HW", "TPU_V5E", "collective_bytes", "roofline",
            "model_flops_per_step", "RooflineReport"]

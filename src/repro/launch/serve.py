@@ -27,8 +27,7 @@ from repro.serve.cache import init_cache
 from repro.serve.decode import prefill_cache_encdec, serve_step
 from repro.serve.pqkv import (PQKVConfig, compress_cache, pq_serve_step,
                               pqkv_memory)
-from repro.sharding.partition import (activation_sharding, dp_axes,
-                                      named_shardings, param_specs)
+from repro.sharding.partition import activation_sharding, dp_axes
 
 
 def greedy(logits: jnp.ndarray) -> jnp.ndarray:

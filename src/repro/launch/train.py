@@ -38,8 +38,8 @@ from repro.configs.registry import ARCH_IDS, get_config, get_reduced
 from repro.checkpoint.ckpt import AsyncCheckpointer, latest_step, restore
 from repro.data.tokens import TokenStream
 from repro.launch.mesh import make_host_mesh, make_production_mesh
-from repro.sharding.partition import (activation_sharding, batch_specs,
-                                      dp_axes, named_shardings, param_specs)
+from repro.sharding.partition import (activation_sharding, dp_axes,
+                                      named_shardings, param_specs)
 from repro.train.optim import AdamWConfig
 from repro.train.step import init_train_state, make_train_step
 

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from .config import ModelConfig
-from .layers import (AttnParams, MlpParams, _dot, apply_rope, attention,
+from .layers import (AttnParams, MlpParams, _dot, attention,
                      init_attn, init_mlp, mlp, rms_norm, rotary)
 from .lm import logits_from_hidden
 from ..sharding.partition import constrain_batch

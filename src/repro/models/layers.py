@@ -95,11 +95,9 @@ def mrope_positions(text_positions: jnp.ndarray, n_frontend: int,
     pos = text_positions
     idx = jnp.arange(S)
     is_patch = idx < n_frontend
-    h_grid = jnp.where(is_patch, idx // side, pos[0] if B else idx)
     t = jnp.where(is_patch[None, :], 0, pos)
     h = jnp.where(is_patch[None, :], (idx // side)[None, :], pos)
     w = jnp.where(is_patch[None, :], (idx % side)[None, :], pos)
-    del h_grid
     return jnp.stack([t, h, w])
 
 

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from .config import ModelConfig
-from .layers import (AttnParams, MlpParams, MoeParams, apply_rope, attention,
+from .layers import (AttnParams, MlpParams, MoeParams, attention,
                      init_attn, init_mlp, init_moe, mlp, moe, mrope_positions,
                      _mrope_tables, rms_norm, rotary, softcap)
 from .ssm import SsmParams, init_ssm, ssd_forward
@@ -174,7 +174,6 @@ def _embed(params: LmParams, cfg: ModelConfig, batch) -> jnp.ndarray:
     if cfg.local_global:                       # gemma scales embeddings
         x = x * jnp.bfloat16(cfg.d_model ** 0.5)
     if cfg.family == "vlm" and "patches" in batch:
-        P = batch["patches"].shape[1]
         proj = jnp.einsum("bpd,de->bpe", batch["patches"].astype(jnp.bfloat16),
                           params.patch_proj.astype(jnp.bfloat16),
                           preferred_element_type=jnp.float32

@@ -15,8 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from ..models.config import ModelConfig
-from ..models.layers import (attention_decode, mlp, moe, rms_norm, rotary,
-                             softcap)
+from ..models.layers import attention_decode, mlp, moe, rms_norm, rotary
 from ..models.lm import LmParams, logits_from_hidden
 from ..models.encdec import EncDecParams, cross_kv, encode_frames
 from ..models.ssm import ssd_decode_step

@@ -34,15 +34,15 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..core.kmeans import euclidean_kmeans
 from ..models.config import ModelConfig
-from ..models.layers import mlp, moe, rms_norm, rotary, apply_rope, softcap, _dot
-from ..sharding.partition import constrain_batch, constrain_dims
+from ..models.layers import mlp, moe, rms_norm, rotary, apply_rope, _dot
+from ..sharding.partition import constrain_dims
 
 __all__ = ["PQKVConfig", "PQKVCache", "fit_kv_books", "compress_cache",
            "init_pq_cache", "pq_attention_decode", "pq_serve_step",

@@ -8,7 +8,7 @@ peak activation memory is one microbatch regardless of global batch.
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -1,5 +1,26 @@
+import json
+import os
+
 import numpy as np
 import pytest
+
+
+def pytest_sessionfinish(session, exitstatus):
+    """Dump the process-lifetime dispatch routing ledger when asked.
+
+    CI sets ``REPRO_ROUTING_DUMP`` and, after the test run, feeds the file
+    to ``scripts/check_routing.py`` — which fails the build if any elastic
+    op silently fell back off the expected backend.  ``dispatch.totals``
+    (not ``stats``) is used because per-test fixtures reset ``stats``.
+    """
+    path = os.environ.get("REPRO_ROUTING_DUMP")
+    if not path:
+        return
+    from repro.core import dispatch
+    ledger = {f"{op}:{route}": n
+              for (op, route), n in sorted(dispatch.totals.items())}
+    with open(path, "w") as f:
+        json.dump(ledger, f, indent=1, sort_keys=True)
 
 
 def dtw_reference(a: np.ndarray, b: np.ndarray, window=None) -> float:

@@ -179,6 +179,62 @@ def test_incremental_matches_from_scratch(data, booted, backend, tmp_path):
                                       live[np.asarray(i_ref)[:, 0]])
 
 
+@pytest.mark.parametrize("backend", ["jax", "pallas_interpret"])
+def test_incremental_prealigned_matches_from_scratch(data, backend,
+                                                     tmp_path):
+    """Acceptance (pre-aligned path): with prealign=True every seal routes
+    through the fused prealign_encode dispatch op, and an incrementally
+    built index (3 segments + snapshot/restore) returns the same top-1 as
+    a from-scratch prealigned build_index; the prealign config (including
+    snap_tail) round-trips through the snapshot."""
+    from repro.core import dispatch
+    from repro.core.pq import uses_fused_prealign
+
+    X, Q = data
+    pq = PQConfig(n_sub=4, codebook_size=8, use_prealign=True,
+                  wavelet_level=2, snap_tail=3, exact_encode=True,
+                  kmeans_iters=2, dba_iters=1)
+    assert uses_fused_prealign(pq)
+    cfg = IndexConfig(pq=pq, n_lists=4, hot_capacity=12, coarse_iters=3)
+    with use_backend(backend):
+        jax.clear_caches()
+        dispatch.reset_stats()
+        booted = StreamingIndex.bootstrap(jax.random.PRNGKey(0), X, cfg)
+        idx = StreamingIndex.from_parts(cfg, booted.coarse, booted.cb,
+                                        booted.dim)
+        idx.insert(X)                            # 36 rows -> 3 sealed
+        assert idx.n_segments == 3
+        assert dispatch.stats.get(("prealign_encode", backend), 0) > 0
+        save_snapshot(str(tmp_path), idx)
+        idx = restore_snapshot(str(tmp_path))
+        assert idx.cfg == cfg                    # snap_tail etc. round-trip
+
+        ref = build_index(jax.random.PRNGKey(1), jnp.asarray(X), cfg.pq,
+                          n_lists=cfg.n_lists, coarse=idx.coarse, cb=idx.cb)
+        d_ref, i_ref = search_batch(ref, jnp.asarray(Q), cfg.pq,
+                                    n_probe=cfg.n_lists, topk=1)
+        d, ids = idx.search(Q, n_probe=cfg.n_lists, topk=1)
+        np.testing.assert_allclose(np.asarray(d)[:, 0],
+                                   np.asarray(d_ref)[:, 0],
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(ids)[:, 0],
+                                      np.asarray(i_ref)[:, 0])
+
+
+def test_mismatched_prealign_codebook_rejected(data, booted):
+    """A codebook trained without pre-alignment cannot back a prealigned
+    config: segment lengths differ, caught at construction time."""
+    import dataclasses as dc
+    cfg_pre = dc.replace(booted.cfg,
+                         pq=dc.replace(booted.cfg.pq, use_prealign=True))
+    with pytest.raises(ValueError, match="geometry"):
+        StreamingIndex.from_parts(cfg_pre, booted.coarse, booted.cb,
+                                  booted.dim)
+    with pytest.raises(ValueError, match="geometry"):
+        build_index(jax.random.PRNGKey(0), jnp.asarray(data[0]), cfg_pre.pq,
+                    n_lists=4, coarse=booted.coarse, cb=booted.cb)
+
+
 class TestSnapshot:
     def test_roundtrip_identical_search(self, data, booted, tmp_path):
         X, Q = data

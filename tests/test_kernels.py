@@ -12,6 +12,8 @@ from repro.kernels.pq_adc.ref import adc_lookup_ref, adc_sym_cdist_ref
 from repro.kernels.pq_attn.ops import (build_qlut, encode_keys,
                                        pq_attn_decode)
 from repro.kernels.pq_attn.ref import pq_attn_decode_ref, reconstruct_keys
+from repro.kernels.prealign_encode.ops import prealign_encode
+from repro.kernels.prealign_encode.ref import prealign_encode_ref
 
 
 # ---------------------------------------------------------------------------
@@ -215,6 +217,54 @@ def test_encode_keys_roundtrip():
 
 
 # ---------------------------------------------------------------------------
+# prealign_encode (fused MODWT prealign + DTW-1NN encode)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,L,M,K,level,tail", [(7, 32, 4, 5, 2, 2),
+                                                (12, 64, 4, 8, 3, 3),
+                                                (3, 48, 3, 6, 1, 0),
+                                                (5, 40, 2, 4, 3, 5),
+                                                (1, 24, 4, 3, 2, 1)])
+@pytest.mark.parametrize("window", [None, 2])
+def test_prealign_encode_fused_matches_ref(n, L, M, K, level, tail, window):
+    """Fused kernel codes == modwt.prealign + exact DTW-1NN reference."""
+    rng = np.random.default_rng(n * 101 + L + (0 if window is None else window))
+    S = L // M + tail
+    X = rng.standard_normal((n, L)).astype(np.float32)
+    C = rng.standard_normal((M, K, S)).astype(np.float32)
+    got = np.asarray(prealign_encode(X, C, level, tail, window, block=4,
+                                     interpret=True))
+    want = np.asarray(prealign_encode_ref(X, C, level, tail, window))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_prealign_encode_matches_two_step_library_path():
+    """Fused kernel == modwt.prealign + pq.encode (exact) on trained
+    centroids, and the geometry check rejects mismatched codebooks."""
+    import jax as _jax
+    from repro.core import pq as pqm
+    from repro.core.modwt import prealign as modwt_prealign
+    from repro.core.pq import PQConfig
+    rng = np.random.default_rng(0)
+    X = rng.standard_normal((10, 48)).astype(np.float32)
+    cfg = PQConfig(n_sub=4, codebook_size=4, use_prealign=True,
+                   wavelet_level=2, tail_frac=0.25, kmeans_iters=2,
+                   dba_iters=1, exact_encode=True, fused_encode=False)
+    cb = pqm.fit(_jax.random.PRNGKey(0), X, cfg)
+    two_step = np.asarray(pqm.encode(X, cb, cfg))       # prealign + encode
+    tail, w = cfg.tail(48), cfg.window(48)
+    fused = np.asarray(prealign_encode(X, cb.centroids, cfg.wavelet_level,
+                                       tail, w, interpret=True))
+    np.testing.assert_array_equal(fused, two_step)
+    # sanity: the segments the kernel never materializes match modwt
+    segs = np.asarray(modwt_prealign(X, cfg.n_sub, cfg.wavelet_level, tail))
+    assert segs.shape == (10, 4, cb.subseq_len)
+    with pytest.raises(ValueError, match="geometry"):
+        prealign_encode(X, cb.centroids, cfg.wavelet_level, tail + 1, w,
+                        interpret=True)
+
+
+# ---------------------------------------------------------------------------
 # dispatch layer
 # ---------------------------------------------------------------------------
 
@@ -371,6 +421,61 @@ def test_knn_exact_routes_through_dispatch(fresh_dispatch):
         got = np.asarray(nn_dtw_exact(X, labels, Q, window=3))
         assert _route_count("elastic_cdist") > 0
     assert (got == want).all()
+
+
+def test_prealign_encode_backends_agree(fresh_dispatch):
+    """dispatch.prealign_encode: identical codes on jax / pallas_interpret,
+    and the routing counters record both routes."""
+    rng = np.random.default_rng(21)
+    L, M, K, level, tail, window = 40, 4, 6, 2, 2, 3
+    X = rng.standard_normal((9, L)).astype(np.float32)
+    C = rng.standard_normal((M, K, L // M + tail)).astype(np.float32)
+    with dispatch.use_backend("jax"):
+        want = np.asarray(dispatch.prealign_encode(
+            X, C, level=level, tail=tail, window=window))
+    with dispatch.use_backend("pallas_interpret"):
+        got = np.asarray(dispatch.prealign_encode(
+            X, C, level=level, tail=tail, window=window))
+    np.testing.assert_array_equal(got, want)
+    assert _route_count("prealign_encode", "jax") == 1
+    assert _route_count("prealign_encode") == 1
+
+
+@pytest.mark.parametrize("backend", ["jax", "pallas_interpret"])
+def test_fused_encode_routes_through_dispatch(fresh_dispatch, backend):
+    """pq.encode with an exact prealigned config must take the fused
+    prealign_encode dispatch route and agree with the two-step path."""
+    import dataclasses
+    from repro.core.pq import PQConfig, encode, fit, uses_fused_prealign
+    X = _toy_corpus(n=14, d=32, seed=9)
+    cfg = dataclasses.replace(_toy_cfg(), use_prealign=True,
+                              wavelet_level=2, tail_frac=0.25,
+                              exact_encode=True)
+    assert uses_fused_prealign(cfg)
+    with dispatch.use_backend(backend):
+        jax.clear_caches()
+        cb = fit(jax.random.PRNGKey(3), X, cfg)
+        dispatch.reset_stats()
+        fused = np.asarray(encode(X, cb, cfg))
+        assert _route_count("prealign_encode", backend) == 1
+        two_step = np.asarray(encode(
+            X, cb, dataclasses.replace(cfg, fused_encode=False)))
+    np.testing.assert_array_equal(fused, two_step)
+
+
+def test_dispatch_totals_survive_reset(fresh_dispatch):
+    """`totals` is the process-lifetime ledger the CI routing gate reads:
+    reset_stats() must not clear it."""
+    rng = np.random.default_rng(1)
+    A = rng.standard_normal((4, 8)).astype(np.float32)
+    with dispatch.use_backend("pallas_interpret"):
+        dispatch.elastic_pairwise(A, A, 2)
+    before = dispatch.totals.get(("elastic_pairwise", "pallas_interpret"), 0)
+    assert before > 0
+    dispatch.reset_stats()
+    assert not dispatch.stats
+    assert dispatch.totals.get(("elastic_pairwise", "pallas_interpret"),
+                               0) == before
 
 
 def test_build_qlut_algebra():

@@ -3,6 +3,7 @@
 import numpy as np
 import pytest
 
+from _hyp import given, settings, st
 from repro.core.modwt import (modwt_scale, segment_points, snap_splits,
                               extract_segments, prealign, fixed_segments)
 
@@ -84,3 +85,62 @@ def test_fixed_segments_roundtrip():
     segs = np.asarray(fixed_segments(X, 3))
     assert segs.shape == (2, 3, 4)
     assert np.allclose(segs.reshape(2, 12), X)
+
+
+# ---------------------------------------------------------------------------
+# Pre-alignment edge-case properties (fused-path contract)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(-100.0, 100.0), st.integers(1, 4), st.integers(0, 6))
+def test_property_constant_series_keeps_fixed_splits(value, level, tail):
+    """A constant series has no sign changes, so every split stays at its
+    fixed position and the re-interpolated segments are constant too."""
+    L, M = 32, 4
+    x = np.full((L,), value, np.float32)
+    pts = np.asarray(segment_points(x, level))
+    assert not pts.any()
+    bounds = np.asarray(snap_splits(pts, M, tail))
+    np.testing.assert_array_equal(bounds, np.arange(M + 1) * (L // M))
+    out = np.asarray(prealign(x[None], M, level, tail))
+    assert out.shape == (1, M, L // M + tail)
+    np.testing.assert_allclose(out, value, rtol=1e-6, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 4),
+       st.sampled_from([(32, 4), (48, 3), (24, 2), (64, 8)]))
+def test_property_tail_zero_reduces_to_fixed_segments(seed, level, shape):
+    """snap_tail=0 means an empty snap window: pre-alignment degenerates to
+    the fixed equal-length chop (up to interpolation roundoff)."""
+    L, M = shape
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((3, L)).astype(np.float32)
+    got = np.asarray(prealign(X, M, level, tail=0))
+    want = np.asarray(fixed_segments(X, M))
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_config_snap_tail_zero_segments_like_fixed():
+    """PQConfig.snap_tail=0 flows through segment(): same shapes/values as
+    a no-prealign config."""
+    from repro.core.pq import PQConfig, segment
+    rng = np.random.default_rng(5)
+    X = rng.standard_normal((4, 48)).astype(np.float32)
+    cfg0 = PQConfig(n_sub=4, use_prealign=True, snap_tail=0)
+    cfg_off = PQConfig(n_sub=4, use_prealign=False)
+    assert cfg0.tail(48) == 0
+    assert cfg0.subseq_len(48) == cfg_off.subseq_len(48) == 12
+    np.testing.assert_allclose(np.asarray(segment(X, cfg0)),
+                               np.asarray(segment(X, cfg_off)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_config_snap_tail_overrides_tail_frac():
+    from repro.core.pq import PQConfig
+    cfg = PQConfig(n_sub=4, tail_frac=0.15, snap_tail=5)
+    assert cfg.tail(48) == 5
+    assert cfg.subseq_len(48) == 17
+    # None keeps the fractional default
+    assert PQConfig(n_sub=4, tail_frac=0.15).tail(48) == 2

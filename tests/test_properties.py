@@ -8,11 +8,11 @@ import pytest
 pytest.importorskip("hypothesis", reason="property tests need the dev-only hypothesis dependency")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.dtw import dtw_pair, dtw_cdist, euclidean_sq
+from repro.core.dtw import dtw_pair, euclidean_sq
 from repro.core.lb import keogh_envelope, lb_keogh, lb_kim
 from repro.core.metrics import adjusted_rand_index, rand_index
 from repro.core.cluster import cut_k, linkage
-from repro.core.pq import PQConfig, PQCodebook, cdist_sym, encode_with_stats, fit
+from repro.core.pq import PQConfig, cdist_sym, encode_with_stats, fit
 from repro.train.optim import AdamWConfig, adamw_init, adamw_step, warmup_cosine
 
 pytestmark = pytest.mark.slow    # hypothesis sweeps: tier-2
