@@ -1,0 +1,61 @@
+"""Filter-and-refine NN-DTW: batched LB-cascade vs the legacy host loop.
+
+Measures the rewrite of ``nn_dtw_pruned`` — one device-resident two-phase
+computation (bound all pairs, ``lax.while_loop`` threshold-tightening
+refines through the fused ``dispatch.lb_refine`` kernel) — against the
+superseded per-query host loop (``nn_dtw_pruned_host``: ascending-LB
+chunks with a device round-trip per chunk).  Both are exact, so the
+predictions must agree; the interesting numbers are wall clock and each
+variant's pruning fraction (the rate of (query, candidate) pairs the
+cascade excluded from exact refinement — a per-pair decision count, not
+a direct measure of compute skipped).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.knn import nn_dtw_pruned, nn_dtw_pruned_host
+
+from . import common
+from .common import Bench, timeit
+
+
+def _random_walks(n: int, length: int, seed: int) -> np.ndarray:
+    """Random walks: realistically autocorrelated, so the Keogh envelopes
+    are tight enough for the cascade to prune (white noise would not be)."""
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.standard_normal((n, length)), axis=1).astype(
+        np.float32)
+
+
+def run(quick: bool = True) -> None:
+    bench = Bench("lb_cascade")
+    # (N database series, L length, Nq queries); the (2048, 256) points are
+    # the acceptance size for the batched rewrite — the host loop scales
+    # linearly in Nq while the batched search amortizes its bound phase,
+    # so both a small and a serving-sized query batch are reported.
+    sizes = [(512, 128, 8), (2048, 256, 16), (2048, 256, 64)]
+    if common.SMOKE:
+        sizes = [(256, 64, 4)]
+    elif not quick:
+        sizes.append((8192, 256, 16))
+    for n, length, n_q in sizes:
+        X = _random_walks(n, length, 0)
+        Q = _random_walks(n_q, length, 1)
+        labels = np.arange(n) % 8
+        window = max(1, length // 10)
+        preds_new, pruned_new = nn_dtw_pruned(X, labels, Q, window)
+        preds_old, pruned_old = nn_dtw_pruned_host(X, labels, Q, window)
+        t_new = timeit(nn_dtw_pruned, X, labels, Q, window)
+        t_old = timeit(nn_dtw_pruned_host, X, labels, Q, window)
+        bench.add(N=n, L=length, Nq=n_q, window=window,
+                  batched_s=t_new["median_s"], host_s=t_old["median_s"],
+                  speedup=t_old["median_s"] / t_new["median_s"],
+                  pruned_batched=pruned_new, pruned_host=pruned_old,
+                  preds_equal=bool((preds_new == preds_old).all()))
+    print("->", bench.save())
+
+
+if __name__ == "__main__":
+    run()

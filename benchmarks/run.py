@@ -7,8 +7,8 @@ import argparse
 import time
 
 from . import (common, dtw_kernel_bench, fig5a_scaling, fig5b_params,
-               fig5c_prealign, index_scaling, ivf_scaling, memory_cost,
-               pqkv_bench, roofline, table1_accuracy)
+               fig5c_prealign, index_scaling, ivf_scaling, lb_cascade,
+               memory_cost, pqkv_bench, roofline, table1_accuracy)
 
 SUITES = {
     "dtw_kernel": dtw_kernel_bench.run,
@@ -19,6 +19,7 @@ SUITES = {
     "memory": memory_cost.run,
     "ivf": ivf_scaling.run,
     "index": index_scaling.run,
+    "lb_cascade": lb_cascade.run,
     "pqkv": pqkv_bench.run,
     "roofline": roofline.run,
 }

@@ -22,6 +22,7 @@ EXPECTED_OPS = (
     "adc_cdist",
     "adc_lookup",
     "prealign_encode",
+    "lb_refine",
 )
 
 

@@ -5,6 +5,7 @@ Public API:
                   fallback; $REPRO_ELASTIC_BACKEND / set_backend override)
     dtw         — wavefront (banded) DTW primitives
     lb          — Keogh envelopes + lower bounds
+    lb_search   — batched LB-cascade filter-and-refine top-k search
     modwt       — MODWT pre-alignment (§3.5)
     dba/kmeans  — DBA barycenters and DBA k-means codebook learning
     pq          — PQConfig / fit / encode / symmetric & asymmetric distances
@@ -19,14 +20,15 @@ from .pq import (PQConfig, PQCodebook, fit, encode, encode_with_stats,
                  uses_fused_prealign)
 from .dtw import dtw, dtw_pair, dtw_batch, dtw_cdist
 from .dispatch import (elastic_pairwise, elastic_cdist, adc_cdist,
-                       adc_lookup, prealign_encode, get_backend,
+                       adc_lookup, prealign_encode, lb_refine, get_backend,
                        set_backend, use_backend)
-from .lb import keogh_envelope, lb_keogh, lb_kim, lb_cascade
+from .lb import keogh_envelope, lb_keogh, lb_kim, lb_cascade, lb_lut
+from .lb_search import filtered_topk
 from .modwt import prealign, fixed_segments, modwt_scale
 from .dba import dba, dba_update, alignment_path
 from .kmeans import dba_kmeans, euclidean_kmeans
 from .knn import (knn_classify_sym, knn_classify_asym, nn_dtw_exact,
-                  nn_dtw_pruned)
+                  nn_dtw_pruned, nn_dtw_pruned_host)
 from .cluster import linkage, cut_k, hierarchical_labels
 from .metrics import rand_index, adjusted_rand_index, error_rate
 
@@ -36,12 +38,15 @@ __all__ = [
     "query_lut", "query_lut_batch",
     "dtw", "dtw_pair", "dtw_batch", "dtw_cdist", "uses_fused_prealign",
     "elastic_pairwise", "elastic_cdist", "adc_cdist", "adc_lookup",
-    "prealign_encode", "get_backend", "set_backend", "use_backend",
-    "keogh_envelope", "lb_keogh", "lb_kim", "lb_cascade",
+    "prealign_encode", "lb_refine", "get_backend", "set_backend",
+    "use_backend",
+    "keogh_envelope", "lb_keogh", "lb_kim", "lb_cascade", "lb_lut",
+    "filtered_topk",
     "prealign", "fixed_segments", "modwt_scale",
     "dba", "dba_update", "alignment_path",
     "dba_kmeans", "euclidean_kmeans",
     "knn_classify_sym", "knn_classify_asym", "nn_dtw_exact", "nn_dtw_pruned",
+    "nn_dtw_pruned_host",
     "linkage", "cut_k", "hierarchical_labels",
     "rand_index", "adjusted_rand_index", "error_rate",
 ]

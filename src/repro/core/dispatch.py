@@ -2,7 +2,8 @@
 
 Every DTW / ADC consumer in the library (PQ encoding, query LUTs, DBA
 k-means assignment, IVF coarse search, exact NN-DTW, symmetric code
-distances) funnels through the four entry points here instead of calling a
+distances, LB-filtered search) funnels through the entry points here
+instead of calling a
 specific implementation, so the Pallas kernels are the *default engine* on
 TPU rather than a dead benchmark artifact:
 
@@ -12,6 +13,8 @@ TPU rather than a dead benchmark artifact:
     adc_lookup(codes, qlut)          asymmetric scan       -> (N,)
     prealign_encode(X, centroids)    fused MODWT prealign
                                      + DTW-1NN encode      -> (N, M) codes
+    lb_refine(A, B, up, lo, thresh)  fused LB cascade +
+                                     conditional DTW refine -> (N,), (N,)
 
 Backends (resolved once per call site at trace time):
 
@@ -40,6 +43,8 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels.dtw_band.ops import dtw_band, dtw_band_cdist
+from ..kernels.lb_cascade.ops import lb_refine as _lb_refine_pallas
+from ..kernels.lb_cascade.ref import lb_refine_jax
 from ..kernels.pq_adc.ops import adc_lookup as _adc_lookup_pallas
 from ..kernels.pq_adc.ops import adc_sym_cdist as _adc_sym_pallas
 from ..kernels.pq_adc.ref import adc_lookup_ref, adc_sym_cdist_ref
@@ -51,7 +56,7 @@ from .dtw import dtw_batch, dtw_cdist
 __all__ = [
     "BACKENDS", "ENV_VAR", "get_backend", "set_backend", "use_backend",
     "elastic_pairwise", "elastic_cdist", "adc_cdist", "adc_lookup",
-    "prealign_encode", "stats", "totals", "reset_stats",
+    "prealign_encode", "lb_refine", "stats", "totals", "reset_stats",
 ]
 
 ENV_VAR = "REPRO_ELASTIC_BACKEND"
@@ -185,3 +190,25 @@ def prealign_encode(X: jnp.ndarray, centroids: jnp.ndarray, *, level: int,
     return _prealign_encode_pallas(X, centroids, level, tail, window,
                                    block=block,
                                    interpret=_interpret_flag(backend))
+
+
+def lb_refine(A: jnp.ndarray, B: jnp.ndarray, upper: jnp.ndarray,
+              lower: jnp.ndarray, thresh: jnp.ndarray,
+              window: Optional[int] = None, *,
+              block: int = 8) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused cascade bound + conditional banded-DTW refine over zipped
+    pairs: ``A (N, L)`` queries, ``B (N, L)`` candidates, ``upper``/
+    ``lower (N, L)`` Keogh envelopes of ``A``, ``thresh (N,)``.
+
+    Returns ``(d (N,), refined (N,) bool)``: ``d`` is the exact squared
+    banded DTW where ``max(LB_Kim, LB_Keogh) < thresh`` and the (valid)
+    lower bound elsewhere.  On the Pallas route a pair tile whose bounds
+    all exceed their thresholds skips the wavefront sweep entirely.
+    """
+    backend = get_backend()
+    _count("lb_refine", backend)
+    if backend == "jax":
+        return lb_refine_jax(A, B, upper, lower, thresh, window)
+    return _lb_refine_pallas(A, B, upper, lower, thresh, window,
+                             block=block,
+                             interpret=_interpret_flag(backend))

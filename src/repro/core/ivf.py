@@ -31,6 +31,7 @@ import numpy as np
 
 from .dispatch import elastic_cdist
 from .kmeans import dba_kmeans
+from .lb import lb_lut
 from .pq import (PQCodebook, PQConfig, _adc_gather, encode, fit,
                  query_lut_batch, segment)
 
@@ -63,6 +64,10 @@ class IVFPQIndex(NamedTuple):
     list_start: jnp.ndarray   # (n_lists,) offset of each list in codes/ids
     list_len: jnp.ndarray     # (n_lists,)
     max_list: int             # python int: longest list (static shapes)
+    coarse_window: int        # python int: Sakoe-Chiba band the inverted
+                              # lists were assigned with — the search-time
+                              # default, so probe ranking matches the
+                              # build-time metric
 
     @property
     def n_lists(self) -> int:
@@ -135,7 +140,8 @@ def build_index(key: jax.Array, X: jnp.ndarray, cfg: PQConfig,
         ids=jnp.asarray(order.astype(np.int32)),
         list_start=jnp.asarray(start),
         list_len=jnp.asarray(length),
-        max_list=max_list)
+        max_list=max_list,
+        coarse_window=w)
 
 
 def _candidates(list_start: jnp.ndarray, list_len: jnp.ndarray,
@@ -157,7 +163,9 @@ def _candidates(list_start: jnp.ndarray, list_len: jnp.ndarray,
 def fine_rank(codes: jnp.ndarray, ids: jnp.ndarray,
               list_start: jnp.ndarray, list_len: jnp.ndarray, max_list: int,
               dc: jnp.ndarray, qlut: jnp.ndarray, n_probe: int, topk: int,
-              live: Optional[jnp.ndarray] = None
+              live: Optional[jnp.ndarray] = None,
+              lb_qlut: Optional[jnp.ndarray] = None,
+              lb_budget: Optional[int] = None
               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Rank one list-sorted shard against a single query.
 
@@ -165,12 +173,26 @@ def fine_rank(codes: jnp.ndarray, ids: jnp.ndarray,
     ``live`` is an optional ``(N,)`` tombstone mask (False = deleted).
     Returns ``(distances (topk,), ids (topk,))`` with ``inf`` / ``-1``
     filling invalid slots, so shard results can be merged by a plain top-k.
+
+    ``lb_qlut (M, K)`` (see :func:`repro.core.lb.lb_lut`) enables the
+    cascaded LB pre-filter: candidates are first ranked by their cheap
+    lower-bound ADC sum and only the ``lb_budget`` most promising proceed
+    to the exact ADC gather.  The bound never exceeds the true asymmetric
+    distance, so with ``lb_budget == cap`` results are identical to the
+    unfiltered path; smaller budgets trade recall for gather work.
     """
     _, probes = jax.lax.top_k(-dc, n_probe)
     slots, valid = _candidates(list_start, list_len, max_list, probes)
     if live is not None:
         valid = valid & live[slots]
     cand_codes = codes[slots]                               # (cap, M)
+    if lb_qlut is not None and lb_budget is not None \
+            and lb_budget < slots.shape[0]:
+        lb_d = jnp.where(valid, _adc_gather(lb_qlut, cand_codes), jnp.inf)
+        _, keep = jax.lax.top_k(-lb_d, lb_budget)
+        slots = slots[keep]
+        valid = valid[keep]
+        cand_codes = cand_codes[keep]
     d = jnp.where(valid, _adc_gather(qlut, cand_codes), jnp.inf)
     neg, best = jax.lax.top_k(-d, topk)
     out_ids = jnp.where(jnp.isfinite(neg), ids[slots[best]], -1)
@@ -178,10 +200,13 @@ def fine_rank(codes: jnp.ndarray, ids: jnp.ndarray,
 
 
 def _fine_stage(index: IVFPQIndex, dc: jnp.ndarray, qlut: jnp.ndarray,
-                n_probe: int, topk: int
+                n_probe: int, topk: int,
+                lb_qlut: Optional[jnp.ndarray] = None,
+                lb_budget: Optional[int] = None
                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     return fine_rank(index.codes, index.ids, index.list_start,
-                     index.list_len, index.max_list, dc, qlut, n_probe, topk)
+                     index.list_len, index.max_list, dc, qlut, n_probe, topk,
+                     lb_qlut=lb_qlut, lb_budget=lb_budget)
 
 
 def validate_n_probe(n_probe: int, n_lists: int) -> None:
@@ -193,7 +218,7 @@ def validate_n_probe(n_probe: int, n_lists: int) -> None:
 
 
 def _validate_probe(n_lists: int, max_list: int, n_probe: int,
-                    topk: int) -> None:
+                    topk: int, lb_budget: Optional[int] = None) -> None:
     """Static-shape sanity for the probe/rank stage — a clear ``ValueError``
     instead of an XLA shape error deep inside ``top_k``."""
     validate_n_probe(n_probe, n_lists)
@@ -203,11 +228,16 @@ def _validate_probe(n_lists: int, max_list: int, n_probe: int,
             f"topk={topk} out of range: must satisfy 1 <= topk <= "
             f"n_probe*max_list={cap} (n_probe={n_probe}, "
             f"max_list={max_list}); raise n_probe or shrink topk")
+    if lb_budget is not None and not topk <= lb_budget <= cap:
+        raise ValueError(
+            f"lb_budget={lb_budget} out of range: must satisfy topk="
+            f"{topk} <= lb_budget <= n_probe*max_list={cap}")
 
 
 def search(index: IVFPQIndex, q: jnp.ndarray, cfg: PQConfig, *,
            n_probe: int, topk: int = 1,
-           coarse_window: Optional[int] = None
+           coarse_window: Optional[int] = None,
+           lb_budget: Optional[int] = None
            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Single query ``q (D,)`` -> (distances (topk,), ids (topk,)).
 
@@ -215,27 +245,41 @@ def search(index: IVFPQIndex, q: jnp.ndarray, cfg: PQConfig, *,
     PQDTW over the probed lists' candidates only.
     """
     d, ids = search_batch(index, q[None, :], cfg, n_probe=n_probe,
-                          topk=topk, coarse_window=coarse_window)
+                          topk=topk, coarse_window=coarse_window,
+                          lb_budget=lb_budget)
     return d[0], ids[0]
 
 
 def search_batch(index: IVFPQIndex, Q: jnp.ndarray, cfg: PQConfig, *,
                  n_probe: int, topk: int = 1,
-                 coarse_window: Optional[int] = None):
+                 coarse_window: Optional[int] = None,
+                 lb_budget: Optional[int] = None):
     """Batched search over queries ``Q (Nq, D)``.
 
     The coarse DTW stage and the asymmetric query tables are computed for
     the whole batch in two dispatch-layer launches (Pallas kernels on TPU);
     only the cheap probe/gather/top-k tail is vmapped.
+
+    ``coarse_window`` defaults to ``index.coarse_window`` — the band the
+    inverted lists were assigned with at build time — so probe ranking
+    always matches the list-assignment metric unless explicitly overridden.
+    ``lb_budget`` enables the cascaded LB pre-filter in the fine stage
+    (see :func:`fine_rank`): candidates beyond the budget are discarded on
+    their envelope lower bound before the exact ADC gather.
     """
-    _validate_probe(index.n_lists, index.max_list, n_probe, topk)
+    _validate_probe(index.n_lists, index.max_list, n_probe, topk, lb_budget)
     Q = jnp.asarray(Q, jnp.float32)
     D = Q.shape[-1]
-    w = coarse_window if coarse_window is not None else max(
-        1, int(round(0.1 * D)))
+    w = coarse_window if coarse_window is not None else index.coarse_window
     dc = elastic_cdist(Q, index.coarse, w)                  # (Nq, n_lists)
     q_segs = segment(Q, cfg)                                # (Nq, M, S)
     qluts = query_lut_batch(q_segs, index.cb, cfg.window(D),
                             cfg.metric != "dtw")            # (Nq, M, K)
+    if lb_budget is not None and lb_budget < n_probe * index.max_list:
+        lb_luts = lb_lut(q_segs, index.cb.centroids, index.cb.env_upper,
+                         index.cb.env_lower)                # (Nq, M, K)
+        fn = lambda dcr, ql, lbl: _fine_stage(index, dcr, ql, n_probe,
+                                              topk, lbl, lb_budget)
+        return jax.vmap(fn)(dc, qluts, lb_luts)
     fn = lambda dcr, ql: _fine_stage(index, dcr, ql, n_probe, topk)
     return jax.vmap(fn)(dc, qluts)

@@ -1,0 +1,141 @@
+"""Batched LB-cascade filter-and-refine top-k search.
+
+The paper's cascading lower bounds (§3.2) — and the database-scale pruning
+of "Exact Indexing for Massive Time Series Databases under Time Warping
+Distance" — expressed as a fully device-resident two-phase computation
+with static shapes:
+
+  Phase 1 (bound): evaluate ``max(LB_Kim, reversed LB_Keogh)`` for every
+  (query, candidate) pair at once — cheap vectorized VPU math, no DTW.
+  A matching *upper* bound seeds the thresholds: squared Euclidean
+  distance dominates squared (banded) DTW pointwise — the identity path
+  is always inside the band — so the k-th smallest ED per query (one MXU
+  matmul) upper-bounds the k-th smallest DTW, and the very first refine
+  wave already discards most pairs instead of burning a full budget on
+  establishing thresholds.
+
+  Phase 2 (refine): a ``lax.while_loop`` threshold-tightening pass.  Each
+  iteration gathers a static *global* batch of the lowest-bound
+  unprocessed (query, candidate) pairs — ``lax.top_k`` over the flattened
+  bound matrix, so straggler queries soak up exactly as many refine slots
+  as they still need — and sends the zipped pairs through
+  :func:`repro.core.dispatch.lb_refine`.  The fused kernel re-checks each
+  pair's bound against the query's *current* k-th best verified distance
+  (tightened since the candidates were ranked) and runs the banded-DTW
+  wavefront only for tiles with survivors.  The loop exits when every
+  query's smallest unprocessed bound is at or above its k-th best verified
+  distance, which certifies the verified top-k as exact.
+
+Exactness: a candidate is discarded unrefined only when its lower bound is
+>= the threshold in force, and the threshold is always a *verified* exact
+distance — so every true top-k member is refined before the loop can exit.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .dispatch import lb_refine
+from .dtw import euclidean_sq
+from .lb import keogh_envelope, lb_keogh, lb_kim
+
+__all__ = ["filtered_topk"]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "k", "budget", "max_iters"))
+def filtered_topk(Q: jnp.ndarray, X: jnp.ndarray, window: Optional[int],
+                  k: int, budget: Optional[int] = None,
+                  valid: Optional[jnp.ndarray] = None,
+                  max_iters: Optional[int] = None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Exact banded-DTW top-k of ``Q (Nq, L)`` against ``X (N, L)``.
+
+    ``valid`` is an optional ``(N,)`` mask (False rows are never returned).
+    Returns ``(d (Nq, k) squared DTW, idx (Nq, k) int32, n_refined)``:
+    distances ascending per query with ``inf`` / ``-1`` filling slots
+    beyond the number of valid candidates, and ``n_refined`` the total
+    count of exact DTW evaluations (for pruning statistics).  Requires
+    ``1 <= k <= N``.
+    """
+    Q = jnp.asarray(Q, jnp.float32)
+    X = jnp.asarray(X, jnp.float32)
+    Nq, L = Q.shape
+    N = X.shape[0]
+    if not 1 <= k <= N:
+        raise ValueError(f"k={k} out of range: must satisfy 1 <= k <= {N}")
+    # Per-wave budget: thresholds tighten after every wave, so small waves
+    # (a few pairs per query) converge in a handful of launches and waste
+    # the least refine work; the cap below bounds the worst (pruning-free)
+    # case to the equivalent of one exhaustive sweep.
+    per_q = max(k, 4) if budget is None else max(k, int(budget))
+    R = min(Nq * N, Nq * per_q)             # global refine batch per launch
+    iters_cap = (-(-(Nq * N) // R) + 1 if max_iters is None
+                 else int(max_iters))
+
+    # Envelopes around the queries ("reversed" role: one envelope, N bounds
+    # each), clamped so an unbanded search still gets a valid full-width
+    # envelope.
+    w_env = L - 1 if window is None else min(int(window), L - 1)
+    up, lo = keogh_envelope(Q, w_env)
+
+    lbs = jnp.maximum(lb_kim(Q[:, None, :], X[None, :, :]),
+                      lb_keogh(X[None, :, :], up[:, None, :],
+                               lo[:, None, :]))              # (Nq, N)
+    d_ub = euclidean_sq(Q, X)                                # >= squared DTW
+    if valid is not None:
+        lbs = jnp.where(valid[None, :], lbs, jnp.inf)
+        d_ub = jnp.where(valid[None, :], d_ub, jnp.inf)
+    # strict upper margin: exact ties (e.g. a query that IS a database row)
+    # must still refine, so the seed sits just above the k-th smallest ED
+    seed = -jax.lax.top_k(-d_ub, k)[0][:, -1] * 1.0001 + 1e-6
+
+    def threshold(d_exact):
+        kth = -jax.lax.top_k(-d_exact, k)[0][:, -1]          # (Nq,)
+        return jnp.minimum(kth, seed)
+
+    # the per-query threshold rides in the loop state (recomputed once at
+    # the end of each wave) so cond/body don't re-run the (Nq, N) top_k
+    def cond(state):
+        it, lb_rem, _, thresh, _ = state
+        active = jnp.min(lb_rem, axis=1) < thresh
+        return (it < iters_cap) & jnp.any(active)
+
+    def body(state):
+        it, lb_rem, d_exact, thresh, n_ref = state
+        # Global work-conserving selection: the R smallest *still-useful*
+        # bounds across the whole (query, candidate) matrix.  A bound at
+        # or above its query's threshold keys to +inf — it can never beat
+        # the final top-k (thresholds only tighten), so if it is picked as
+        # filler it is simply discarded unrefined.
+        key = jnp.where(lb_rem < thresh[:, None], lb_rem, jnp.inf)
+        _, flat = jax.lax.top_k(-key.reshape(-1), R)
+        q_idx = flat // N
+        c_idx = flat % N
+        th = thresh[q_idx]
+        d, refined = lb_refine(Q[q_idx], X[c_idx], up[q_idx], lo[q_idx],
+                               th, window)
+        # the kernel recomputes bounds from the raw series, so mask out
+        # deleted rows and pairs a previous iteration already handled
+        # (picked again only as filler once finite keys run out)
+        fresh = jnp.isfinite(lb_rem[q_idx, c_idx])
+        if valid is not None:
+            fresh = fresh & valid[c_idx]
+        refined = refined & fresh
+        d_exact = d_exact.at[q_idx, c_idx].min(
+            jnp.where(refined, d, jnp.inf))
+        lb_rem = lb_rem.at[q_idx, c_idx].set(jnp.inf)
+        return (it + 1, lb_rem, d_exact, threshold(d_exact),
+                n_ref + jnp.sum(refined))
+
+    state = (jnp.int32(0), lbs, jnp.full((Nq, N), jnp.inf), seed,
+             jnp.zeros((), jnp.int32))
+    _, _, d_exact, _, n_ref = jax.lax.while_loop(cond, body, state)
+
+    neg, idx = jax.lax.top_k(-d_exact, k)
+    idx = jnp.where(jnp.isfinite(neg), idx, -1).astype(jnp.int32)
+    return -neg, idx, n_ref

@@ -10,8 +10,9 @@ and re-balances the inverted lists without touching a single code.
 
 Read path (device-side, jitted): one coarse-DTW launch + one query-LUT
 launch for the whole batch (shared by every segment), then a per-segment
-fine stage (:func:`repro.core.ivf.fine_rank`) and an exact banded-DTW scan
-of the hot buffer, merged with a final ``lax.top_k``.  All shapes are
+fine stage (:func:`repro.core.ivf.fine_rank`) and an exact LB-cascade
+filter-and-refine scan of the hot buffer, merged with a final
+``lax.top_k``.  All shapes are
 static: flush-born segments share one compiled fine stage, the hot scan is
 always ``(Nq, capacity)``, and tombstones are masks, not re-layouts.
 """
@@ -30,6 +31,7 @@ from ..core.dispatch import elastic_cdist
 from ..core.dtw import euclidean_sq
 from ..core.ivf import (coarse_assign, fine_rank, validate_codebook,
                         validate_n_probe)
+from ..core.lb_search import filtered_topk
 from ..core.kmeans import dba_kmeans
 from ..core.pq import (PQCodebook, PQConfig, encode, fit, memory_cost,
                        query_lut_batch, segment)
@@ -74,15 +76,20 @@ def _scan_hot(data, ids, live, Q, *, window: int, k: int, euclidean: bool):
 
     Banded DTW under the PQDTW metric, squared Euclidean under the PQ_ED
     baseline — matching the metric the sealed segments' LUTs encode, so
-    hot and sealed distances stay order-compatible in the merge."""
+    hot and sealed distances stay order-compatible in the merge.  The DTW
+    path runs the LB-cascade filter-and-refine top-k
+    (:func:`repro.core.lb_search.filtered_topk`): every (query, hot row)
+    pair is bounded cheaply and only candidates the cascade cannot exclude
+    reach the exact banded-DTW wavefront — same distances, fewer DTWs."""
     if euclidean:
         d2 = euclidean_sq(Q, data)
-    else:
-        d2 = elastic_cdist(Q, data, window)
+        dh = jnp.sqrt(jnp.maximum(d2, 0.0))
+        dh = jnp.where(live[None, :], dh, jnp.inf)           # (Nq, cap)
+        neg, idx = jax.lax.top_k(-dh, k)
+        return -neg, jnp.where(jnp.isfinite(neg), ids[idx], -1)
+    d2, idx, _ = filtered_topk(Q, data, window, k, valid=live)
     dh = jnp.sqrt(jnp.maximum(d2, 0.0))
-    dh = jnp.where(live[None, :], dh, jnp.inf)               # (Nq, cap)
-    neg, idx = jax.lax.top_k(-dh, k)
-    return -neg, jnp.where(jnp.isfinite(neg), ids[idx], -1)
+    return dh, jnp.where(idx >= 0, ids[jnp.maximum(idx, 0)], -1)
 
 
 @functools.partial(jax.jit, static_argnames=("topk",))

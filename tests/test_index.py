@@ -235,6 +235,43 @@ def test_mismatched_prealign_codebook_rejected(data, booted):
                     n_lists=4, coarse=booted.coarse, cb=booted.cb)
 
 
+def test_hot_scan_routes_lb_refine(data, booted):
+    """The hot-segment scan runs through the LB-cascade filter-and-refine
+    dispatch op (no dense DTW cdist over the buffer)."""
+    from repro.core import dispatch
+    X, Q = data
+    with use_backend("pallas_interpret"):
+        jax.clear_caches()
+        dispatch.reset_stats()
+        idx = _fresh(booted)
+        idx.insert(X[:8])                        # hot only
+        d, ids = idx.search(Q[:2], n_probe=1, topk=2)
+        assert dispatch.stats.get(("lb_refine", "pallas_interpret"), 0) > 0
+    assert np.isfinite(np.asarray(d)).all()
+
+
+def test_snapshot_roundtrips_coarse_window(data, tmp_path):
+    """A non-default ``coarse_window_frac`` survives the snapshot, so the
+    restored index keeps ranking probes with the band its lists were
+    assigned under."""
+    X, Q = data
+    pq = PQConfig(n_sub=4, codebook_size=8, use_prealign=False,
+                  kmeans_iters=2, dba_iters=1)
+    cfg = IndexConfig(pq=pq, n_lists=4, hot_capacity=12, coarse_iters=3,
+                      coarse_window_frac=0.35)
+    idx = StreamingIndex.bootstrap(jax.random.PRNGKey(0), X, cfg)
+    idx.insert(X[:20])
+    save_snapshot(str(tmp_path), idx)
+    back = restore_snapshot(str(tmp_path))
+    assert back.cfg == cfg
+    assert back.cfg.coarse_window(X.shape[1]) == max(
+        1, int(round(0.35 * X.shape[1])))
+    d0, i0 = idx.search(Q, n_probe=2, topk=3)
+    d1, i1 = back.search(Q, n_probe=2, topk=3)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(d1))
+
+
 class TestSnapshot:
     def test_roundtrip_identical_search(self, data, booted, tmp_path):
         X, Q = data

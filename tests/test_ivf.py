@@ -88,6 +88,75 @@ class TestValidation:
             search_batch(index, jnp.asarray(Q), cfg, n_probe=2, topk=0)
 
 
+class TestCoarseWindow:
+    """The band the lists were assigned with is stored on the index and is
+    the search-time default (regression: search used to hardcode 0.1*D
+    regardless of ``coarse_window_frac``)."""
+
+    def test_coarse_window_stored(self, setup):
+        X, _, cfg, index = setup
+        D = X.shape[1]
+        assert index.coarse_window == max(1, int(round(0.1 * D)))
+        wide = build_index(jax.random.PRNGKey(3), jnp.asarray(X), cfg,
+                           n_lists=4, coarse_iters=2,
+                           coarse_window_frac=0.4)
+        assert wide.coarse_window == max(1, int(round(0.4 * D)))
+
+    def test_search_defaults_to_build_window(self, setup):
+        X, Q, cfg, _ = setup
+        index = build_index(jax.random.PRNGKey(3), jnp.asarray(X), cfg,
+                            n_lists=4, coarse_iters=2,
+                            coarse_window_frac=0.4)
+        d0, i0 = search_batch(index, jnp.asarray(Q), cfg, n_probe=2, topk=3)
+        d1, i1 = search_batch(index, jnp.asarray(Q), cfg, n_probe=2, topk=3,
+                              coarse_window=index.coarse_window)
+        np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+        np.testing.assert_allclose(np.asarray(d0), np.asarray(d1))
+
+
+class TestLBPrefilter:
+    """Cascaded lower-bound pre-filter ahead of the exact ADC gather."""
+
+    def test_full_budget_identical(self, setup):
+        X, Q, cfg, index = setup
+        cap = 3 * index.max_list
+        d0, i0 = search_batch(index, jnp.asarray(Q), cfg, n_probe=3, topk=4)
+        d1, i1 = search_batch(index, jnp.asarray(Q), cfg, n_probe=3, topk=4,
+                              lb_budget=cap)
+        np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+        np.testing.assert_allclose(np.asarray(d0), np.asarray(d1))
+
+    def test_lb_lut_lower_bounds_query_lut(self, setup):
+        from repro.core.lb import lb_lut
+        from repro.core.pq import query_lut_batch, segment
+        X, Q, cfg, index = setup
+        D = Q.shape[1]
+        q_segs = segment(jnp.asarray(Q), cfg)
+        qluts = np.asarray(query_lut_batch(q_segs, index.cb, cfg.window(D),
+                                           cfg.metric != "dtw"))
+        lbs = np.asarray(lb_lut(q_segs, index.cb.centroids,
+                                index.cb.env_upper, index.cb.env_lower))
+        assert (lbs <= qluts + 1e-4).all()
+
+    def test_small_budget_still_returns_topk(self, setup):
+        X, Q, cfg, index = setup
+        d, ids = search_batch(index, jnp.asarray(Q), cfg, n_probe=3, topk=2,
+                              lb_budget=8)
+        dd = np.asarray(d)
+        assert (np.diff(dd, axis=1) >= -1e-6).all()
+        assert (np.asarray(ids) >= 0).all()
+
+    def test_budget_validation(self, setup):
+        X, Q, cfg, index = setup
+        cap = 2 * index.max_list
+        with pytest.raises(ValueError, match="lb_budget"):
+            search_batch(index, jnp.asarray(Q), cfg, n_probe=2, topk=3,
+                         lb_budget=2)
+        with pytest.raises(ValueError, match="lb_budget"):
+            search_batch(index, jnp.asarray(Q), cfg, n_probe=2, topk=3,
+                         lb_budget=cap + 1)
+
+
 class TestPretrainedQuantizers:
     def test_build_index_with_shared_quantizers_matches(self, setup):
         """Re-building from the trained coarse/cb must reproduce the same

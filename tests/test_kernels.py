@@ -265,6 +265,68 @@ def test_prealign_encode_matches_two_step_library_path():
 
 
 # ---------------------------------------------------------------------------
+# lb_cascade (fused LB filter + conditional banded-DTW refine)
+# ---------------------------------------------------------------------------
+
+from repro.core.lb import keogh_envelope
+from repro.kernels.lb_cascade.ops import lb_refine as lb_refine_kernel
+from repro.kernels.lb_cascade.ref import cascade_bound_ref, lb_refine_ref
+
+
+def _lb_setup(n, L, window, seed):
+    rng = np.random.default_rng(seed)
+    A = np.cumsum(rng.standard_normal((n, L)), 1).astype(np.float32)
+    B = np.cumsum(rng.standard_normal((n, L)), 1).astype(np.float32)
+    w_env = L - 1 if window is None else min(window, L - 1)
+    up, lo = keogh_envelope(A, w_env)
+    return A, B, np.asarray(up), np.asarray(lo)
+
+
+@pytest.mark.parametrize("n,L", [(1, 8), (7, 16), (13, 32), (32, 24)])
+@pytest.mark.parametrize("window", [None, 2, 5])
+def test_lb_cascade_matches_ref(n, L, window):
+    """Mixed thresholds: some tiles refine, some are fully pruned."""
+    A, B, up, lo = _lb_setup(n, L, window, n * 37 + L)
+    lb = np.asarray(cascade_bound_ref(A, B, up, lo))
+    thresh = np.full(n, np.median(lb) if n > 1 else lb[0] + 1.0, np.float32)
+    got_d, got_f = lb_refine_kernel(A, B, up, lo, thresh, window, block=4,
+                                    interpret=True)
+    want_d, want_f = lb_refine_ref(A, B, up, lo, thresh, window)
+    np.testing.assert_array_equal(np.asarray(got_f), np.asarray(want_f))
+    np.testing.assert_allclose(np.asarray(got_d), np.asarray(want_d),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_lb_cascade_threshold_extremes():
+    """+inf threshold refines everything (== exact banded DTW); -inf
+    refines nothing (returns the cascade bound)."""
+    A, B, up, lo = _lb_setup(9, 20, 3, 5)
+    inf = np.full(9, np.inf, np.float32)
+    d, f = lb_refine_kernel(A, B, up, lo, inf, 3, interpret=True)
+    np.testing.assert_allclose(np.asarray(d),
+                               np.asarray(dtw_band_ref(A, B, 3)),
+                               rtol=1e-5, atol=1e-5)
+    assert np.asarray(f).all()
+    d, f = lb_refine_kernel(A, B, up, lo, -inf, 3, interpret=True)
+    np.testing.assert_allclose(np.asarray(d),
+                               np.asarray(cascade_bound_ref(A, B, up, lo)),
+                               rtol=1e-5, atol=1e-5)
+    assert not np.asarray(f).any()
+
+
+def test_lb_cascade_odd_batch_padding():
+    """Pair count not divisible by block round-trips through padding (the
+    padded rows run with a -inf threshold and are sliced off)."""
+    A, B, up, lo = _lb_setup(7, 12, 2, 11)
+    thresh = np.full(7, np.inf, np.float32)
+    d, f = lb_refine_kernel(A, B, up, lo, thresh, 2, block=8, interpret=True)
+    assert d.shape == (7,) and f.shape == (7,)
+    np.testing.assert_allclose(np.asarray(d),
+                               np.asarray(dtw_band_ref(A, B, 2)),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
 # dispatch layer
 # ---------------------------------------------------------------------------
 
@@ -461,6 +523,40 @@ def test_fused_encode_routes_through_dispatch(fresh_dispatch, backend):
         two_step = np.asarray(encode(
             X, cb, dataclasses.replace(cfg, fused_encode=False)))
     np.testing.assert_array_equal(fused, two_step)
+
+
+def test_dispatch_lb_refine_backends_agree(fresh_dispatch):
+    A, B, up, lo = _lb_setup(11, 16, 3, 2)
+    lb = np.asarray(cascade_bound_ref(A, B, up, lo))
+    thresh = np.full(11, float(np.median(lb)), np.float32)
+    with dispatch.use_backend("jax"):
+        want_d, want_f = dispatch.lb_refine(A, B, up, lo, thresh, 3)
+    with dispatch.use_backend("pallas_interpret"):
+        got_d, got_f = dispatch.lb_refine(A, B, up, lo, thresh, 3)
+    np.testing.assert_array_equal(np.asarray(got_f), np.asarray(want_f))
+    np.testing.assert_allclose(np.asarray(got_d), np.asarray(want_d),
+                               rtol=1e-5, atol=1e-4)
+    assert _route_count("lb_refine", "jax") == 1
+    assert _route_count("lb_refine") == 1
+
+
+@pytest.mark.parametrize("backend", ["jax", "pallas_interpret"])
+def test_filtered_topk_routes_through_dispatch(fresh_dispatch, backend):
+    """The batched filter-and-refine search must run its refines through
+    dispatch.lb_refine and return the exact banded-DTW top-k."""
+    from repro.core.lb_search import filtered_topk
+    rng = np.random.default_rng(3)
+    X = np.cumsum(rng.standard_normal((40, 24)), 1).astype(np.float32)
+    Q = np.cumsum(rng.standard_normal((5, 24)), 1).astype(np.float32)
+    with dispatch.use_backend(backend):
+        jax.clear_caches()
+        dispatch.reset_stats()
+        d, idx, n_ref = filtered_topk(Q, X, 3, 2)
+        assert _route_count("lb_refine", backend) > 0
+        dense = np.asarray(dispatch.elastic_cdist(Q, X, 3))
+    want = np.sort(dense, axis=1)[:, :2]
+    np.testing.assert_allclose(np.asarray(d), want, rtol=1e-5, atol=1e-5)
+    assert 0 < int(n_ref) <= Q.shape[0] * X.shape[0]
 
 
 def test_dispatch_totals_survive_reset(fresh_dispatch):

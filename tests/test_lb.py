@@ -1,10 +1,12 @@
 """Lower bounds must never exceed true (squared, banded) DTW."""
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from _hyp import given, settings, st
 
+from repro.core import dispatch
 from repro.core.dtw import dtw_pair
 from repro.core.lb import keogh_envelope, lb_keogh, lb_kim, lb_cascade
 
@@ -61,3 +63,97 @@ def test_cascade_le_banded_dtw():
     bounds = np.asarray(lb_cascade(jnp.asarray(q), C, up, lo))
     for k in range(16):
         assert bounds[k] <= float(dtw_pair(q, C[k], window=w)) + 1e-4
+
+
+# ---------------------------------------------------------------------------
+# rolling-extrema envelope (O(L log w) doubling vs the shift-stack oracle)
+# ---------------------------------------------------------------------------
+
+def _envelope_oracle(x: np.ndarray, w: int):
+    """The old O(L * window) shift-stack construction, kept as the oracle."""
+    L = x.shape[-1]
+    his, los = [], []
+    for s in range(-w, w + 1):
+        rolled = np.roll(x, s, axis=-1)
+        i = np.arange(L)
+        valid = (i - s >= 0) & (i - s < L)
+        his.append(np.where(valid, rolled, -np.inf))
+        los.append(np.where(valid, rolled, np.inf))
+    return np.max(his, axis=0), np.min(los, axis=0)
+
+
+@pytest.mark.parametrize("L", [1, 2, 3, 7, 16, 33, 64])
+@pytest.mark.parametrize("rel_w", [0, 1, 2, "L-1", "L", "2L"])
+def test_envelope_matches_shift_stack_oracle(L, rel_w):
+    w = {"L-1": L - 1, "L": L, "2L": 2 * L}.get(rel_w, rel_w)
+    if isinstance(w, int) and w < 0:
+        pytest.skip("negative window")
+    rng = np.random.default_rng(L * 19 + 1)
+    x = rng.standard_normal((4, L)).astype(np.float32)
+    want_up, want_lo = _envelope_oracle(x, int(w))
+    up, lo = keogh_envelope(x, int(w))
+    np.testing.assert_allclose(np.asarray(up), want_up)
+    np.testing.assert_allclose(np.asarray(lo), want_lo)
+
+
+def test_envelope_long_series_full_window():
+    """Regression: ``window >= L`` on a long series must not materialize an
+    O(L^2) shift stack (the old construction needed ~(2L+1, L) floats —
+    gigabytes at this length).  With a full-width window every truncated
+    window spans the whole series, so the envelope is flat."""
+    L = 1 << 15                                    # 32768
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(L).astype(np.float32)
+    up, lo = keogh_envelope(x, window=L)           # old nn_dtw_pruned default
+    assert np.allclose(np.asarray(up), x.max())
+    assert np.allclose(np.asarray(lo), x.min())
+
+
+# ---------------------------------------------------------------------------
+# fused-kernel filter bound + batched search equivalence
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(4, 32), st.integers(1, 6), st.integers(0, 10_000))
+def test_lb_refine_filter_is_lower_bound(L, w, seed):
+    """The fused kernel's unrefined outputs are valid lower bounds and its
+    refined outputs are the exact squared banded DTW, on both backends."""
+    rng = np.random.default_rng(seed)
+    n = 6
+    A = rng.standard_normal((n, L)).astype(np.float32)
+    B = rng.standard_normal((n, L)).astype(np.float32)
+    w = min(w, L - 1)
+    up, lo = keogh_envelope(A, window=w)
+    true = np.array([float(dtw_pair(A[i], B[i], window=w))
+                     for i in range(n)])
+    thresh = np.asarray(rng.uniform(0, true.max() + 1.0, n), np.float32)
+    for backend in ("jax", "pallas_interpret"):
+        with dispatch.use_backend(backend):
+            d, refined = dispatch.lb_refine(A, B, np.asarray(up),
+                                            np.asarray(lo), thresh, w)
+        d, refined = np.asarray(d), np.asarray(refined)
+        assert (d <= true + 1e-3).all()               # always a lower bound
+        np.testing.assert_allclose(d[refined], true[refined], rtol=1e-4,
+                                   atol=1e-4)         # refined => exact
+
+
+@pytest.mark.parametrize("backend", ["jax", "pallas_interpret"])
+def test_nn_dtw_pruned_matches_legacy_and_exact(backend):
+    """Batched rewrite == legacy host loop == exact NN-DTW predictions."""
+    from repro.core.knn import (nn_dtw_exact, nn_dtw_pruned,
+                                nn_dtw_pruned_host)
+    rng = np.random.default_rng(4)
+    X = np.cumsum(rng.standard_normal((48, 40)), 1).astype(np.float32)
+    Q = np.cumsum(rng.standard_normal((9, 40)), 1).astype(np.float32)
+    labels = rng.integers(0, 4, 48)
+    for window in (None, 4):
+        with dispatch.use_backend(backend):
+            jax.clear_caches()
+            exact = np.asarray(nn_dtw_exact(
+                jnp.asarray(X), jnp.asarray(labels), jnp.asarray(Q),
+                window=window))
+            new, frac_new = nn_dtw_pruned(X, labels, Q, window=window)
+            old, frac_old = nn_dtw_pruned_host(X, labels, Q, window=window)
+        np.testing.assert_array_equal(new, exact)
+        np.testing.assert_array_equal(old, exact)
+        assert 0.0 <= frac_new <= 1.0 and 0.0 <= frac_old <= 1.0
