@@ -1,27 +1,69 @@
-"""Shared benchmark harness: timing, result records, CSV/JSON output."""
+"""Shared benchmark harness: timing, result records, JSON output.
+
+This module is the SINGLE writer of benchmark JSON.  Every suite collects
+rows into a :class:`Bench` and calls :meth:`Bench.save`:
+
+* the full record always lands in the canonical directory ``OUT_DIR``
+  (``experiments/bench/<name>.json`` — CI uploads this as an artifact);
+* passing ``headline=...`` additionally writes the committed repo-root
+  summary ``BENCH_<root_name or name>.json`` (headline metadata + the same
+  rows) through the same code path — no suite opens files by hand, so the
+  two locations can never drift apart.
+"""
 
 from __future__ import annotations
 
 import json
 import os
 import time
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Optional
 
 import jax
 
-__all__ = ["timeit", "Bench", "OUT_DIR", "SMOKE", "set_smoke"]
+__all__ = ["timeit", "Bench", "OUT_DIR", "ROOT_DIR", "SMOKE", "set_smoke",
+           "MEASURE", "set_measure", "measure_config_fields",
+           "backend_headline"]
 
 OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments/bench")
+# Where the committed BENCH_* headline summaries live (the repo root).
+ROOT_DIR = os.environ.get("REPRO_BENCH_ROOT", ".")
 
 # CI smoke mode (benchmarks/run.py --smoke): every suite runs its quick
 # sizes with a single repetition — the goal is "the benchmark still runs
 # and emits JSON", not stable numbers.
 SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
 
+# Elastic measure the measure-aware suites run under (benchmarks/run.py
+# --measure; "name" or "name:param=value").
+MEASURE = os.environ.get("REPRO_BENCH_MEASURE", "dtw")
+
 
 def set_smoke(on: bool = True) -> None:
     global SMOKE
     SMOKE = on
+
+
+def set_measure(name: str) -> None:
+    global MEASURE
+    MEASURE = name
+
+
+def measure_config_fields() -> Dict[str, object]:
+    """PQConfig fields selecting :data:`MEASURE` (name + params parsed
+    from the ``name:param=value`` form)."""
+    from repro.core import measures
+    spec = measures.resolve(MEASURE)
+    return {"metric": spec.name, "measure_params": spec.params}
+
+
+def backend_headline() -> Dict[str, object]:
+    """Standard headline fields every root BENCH summary carries."""
+    from repro.core import dispatch
+    from repro.kernels.common import default_interpret
+    return {"backend": jax.default_backend(),
+            "elastic_backend": dispatch.get_backend(),
+            "pallas_interpret": bool(default_interpret()),
+            "smoke": SMOKE}
 
 
 def timeit(fn: Callable, *args, repeats: int = 3, warmup: int = 1,
@@ -42,10 +84,16 @@ def timeit(fn: Callable, *args, repeats: int = 3, warmup: int = 1,
 
 
 class Bench:
-    """Collects rows, prints a table, persists JSON."""
+    """Collects rows, prints a table, persists JSON (see module docstring).
 
-    def __init__(self, name: str):
+    ``root_name`` overrides the committed summary's filename stem when it
+    differs from the suite name (e.g. suite ``fig5c_prealign`` ->
+    ``BENCH_prealign.json``).
+    """
+
+    def __init__(self, name: str, root_name: Optional[str] = None):
         self.name = name
+        self.root_name = root_name or name
         self.rows: List[dict] = []
 
     def add(self, **row):
@@ -53,11 +101,22 @@ class Bench:
         print("  " + " ".join(f"{k}={_fmt(v)}" for k, v in row.items()),
               flush=True)
 
-    def save(self) -> str:
+    def save(self, headline: Optional[dict] = None) -> str:
+        """Write the canonical full record; with ``headline``, also the
+        committed repo-root ``BENCH_*`` summary.  Returns the canonical
+        path.  Smoke runs never touch the root summaries — 1-repetition
+        numbers must not clobber the committed baselines."""
         os.makedirs(OUT_DIR, exist_ok=True)
         path = os.path.join(OUT_DIR, f"{self.name}.json")
         with open(path, "w") as f:
             json.dump({"name": self.name, "rows": self.rows}, f, indent=1)
+        if headline is not None and not SMOKE:
+            os.makedirs(ROOT_DIR, exist_ok=True)
+            root = os.path.join(ROOT_DIR, f"BENCH_{self.root_name}.json")
+            with open(root, "w") as f:
+                json.dump({"name": self.name, **backend_headline(),
+                           **headline, "rows": self.rows}, f, indent=1)
+            print(f"  saved {path} and {root}")
         return path
 
 

@@ -1,24 +1,27 @@
-"""Banded-DTW kernel throughput: pure-JAX scan vs full-width Pallas vs
-band-compressed Pallas, at several ``(L, window, batch)`` points.
+"""Banded elastic-kernel throughput: pure-JAX scan vs full-width Pallas vs
+band-compressed Pallas, at several ``(L, window, batch)`` points — plus a
+per-measure sweep of the measure-generic band-compressed wavefront.
 
 The band-compressed wavefront keeps the sequential depth at ``2L-1`` but
 shrinks every step from ``L`` lanes to ``~window+1`` lanes, so at the
 paper's default ``window_frac = 0.1`` it should approach a ``~L/(w+1)``-x
-reduction in per-step VPU work over the full-width sweep.
+reduction in per-step VPU work over the full-width sweep.  The measure
+sweep runs the same kernel under every registered elastic measure (the
+recurrence step is the only thing that changes) and checks the DTW path's
+throughput is unaffected by the measure-generic refactor.
 
 Results go to ``experiments/bench/dtw_kernel.json`` (the shared Bench dir)
 AND to a top-level ``BENCH_dtw_kernel.json`` summary with the headline
-band-vs-full speedups.  Run with ``python -m benchmarks.dtw_kernel_bench``
+band-vs-full speedups — both written by ``benchmarks.common.Bench`` (the
+single JSON writer).  Run with ``python -m benchmarks.dtw_kernel_bench``
 or via ``python -m benchmarks.run --only dtw_kernel``.
 """
 
 from __future__ import annotations
 
-import json
-
-import jax
 import numpy as np
 
+from repro.core import measures
 from repro.core.dtw import dtw_batch
 from repro.kernels.common import default_interpret
 from repro.kernels.dtw_band.ops import dtw_band
@@ -33,6 +36,10 @@ def _points(quick: bool):
     if quick:
         return ((128, 64), (256, 64), (512, 32))
     return ((128, 256), (256, 256), (512, 128), (1024, 64), (2048, 32))
+
+
+def _measure_points(quick: bool):
+    return ((128, 64),) if quick else ((256, 128), (512, 64))
 
 
 def run(quick: bool = True) -> Bench:
@@ -74,20 +81,38 @@ def run(quick: bool = True) -> Bench:
                             band_vs_full_speedup=band_vs_full,
                             band_vs_jax_speedup=band_vs_jax))
 
-    path = b.save()
+    # -- per-measure sweep of the measure-generic band-compressed kernel ----
+    measure_rows = []
+    for meas in measures.available():
+        spec = measures.get_measure(meas)
+        for L, batch in _measure_points(quick):
+            w = max(1, int(round(WINDOW_FRAC * L)))
+            A = rng.standard_normal((batch, L)).astype(np.float32)
+            B = rng.standard_normal((batch, L)).astype(np.float32)
+            fn_jax = lambda: dtw_batch(A, B, w, spec)
+            fn_band = lambda: dtw_band(A, B, w, interpret=interpret,
+                                       measure=spec)
+            np.testing.assert_allclose(np.asarray(fn_band()),
+                                       np.asarray(fn_jax()),
+                                       rtol=1e-4, atol=1e-4)
+            t_jax = timeit(fn_jax, repeats=3)["median_s"]
+            t_band = timeit(fn_band, repeats=3)["median_s"]
+            row = dict(measure=spec.label, L=L, batch=batch, window=w,
+                       jax_scan_s=t_jax, pallas_band_s=t_band,
+                       pairs_per_s_band=batch / t_band)
+            b.add(**row)
+            measure_rows.append(row)
+
     headline = {
         "window_frac": WINDOW_FRAC,
-        "backend": jax.default_backend(),
-        "pallas_interpret": interpret,
-        "rows": summary,
+        "dtw_rows": summary,
+        "measure_rows": measure_rows,
         "min_band_vs_full_speedup": min(r["band_vs_full_speedup"]
                                         for r in summary),
     }
-    with open("BENCH_dtw_kernel.json", "w") as f:
-        json.dump(headline, f, indent=1)
-    print(f"  saved {path} and BENCH_dtw_kernel.json "
-          f"(min band-vs-full speedup "
-          f"{headline['min_band_vs_full_speedup']:.2f}x)")
+    b.save(headline)
+    print(f"  min band-vs-full speedup "
+          f"{headline['min_band_vs_full_speedup']:.2f}x")
     return b
 
 

@@ -17,8 +17,9 @@ identical):
 
 each on both dispatch backends where it differs ("jax" reference vs
 "pallas_interpret" kernel bodies).  Results land in
-``experiments/bench/fig5c_prealign.json``; the repo-root copy committed as
-``BENCH_prealign.json`` tracks the headline numbers.
+``experiments/bench/fig5c_prealign.json`` plus the committed repo-root
+summary ``BENCH_prealign.json`` — both written by
+``benchmarks.common.Bench`` (the single JSON writer).
 """
 
 from __future__ import annotations
@@ -38,7 +39,7 @@ from .common import Bench, timeit
 
 
 def run(quick: bool = True) -> Bench:
-    b = Bench("fig5c_prealign")
+    b = Bench("fig5c_prealign", root_name="prealign")
     n = 30 if quick else 100
     length = 128 if quick else 256
     if common.SMOKE:
@@ -87,7 +88,7 @@ def run(quick: bool = True) -> Bench:
                   level=cfg.wavelet_level, tail=cfg.tail(D),
                   encode_s=t["median_s"],
                   per_series_us=t["median_s"] / X.shape[0] * 1e6)
-    b.save()
+    b.save(headline={"n": int(X.shape[0]), "length": int(D)})
     return b
 
 

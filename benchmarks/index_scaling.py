@@ -12,6 +12,7 @@ from repro.core.pq import PQConfig
 from repro.data.timeseries import random_walks
 from repro.index import IndexConfig, StreamingIndex
 
+from . import common
 from .common import Bench, timeit
 
 
@@ -19,6 +20,7 @@ def _make_index(D: int, n_lists: int, hot_capacity: int,
                 train_n: int) -> StreamingIndex:
     cfg = IndexConfig(
         pq=PQConfig(n_sub=4, codebook_size=32, use_prealign=False,
+                    **common.measure_config_fields(),
                     kmeans_iters=3, dba_iters=1),
         n_lists=n_lists, hot_capacity=hot_capacity, coarse_iters=4)
     sample = random_walks(train_n, D, seed=0)
@@ -58,7 +60,12 @@ def run(quick: bool = True) -> Bench:
     b.add(op="compact", merged_rows=index.segments[0].rows,
           max_list=index.segments[0].max_list, compact_s=t_cmp,
           post_compact_latency_s=t["median_s"])
-    b.save()
+    b.save(headline={
+        "quick": quick, "measure": common.MEASURE,
+        "config": dict(D=D, n_lists=n_lists, hot_capacity=cap),
+        "insert_throughput_per_s": next(
+            (r["throughput_per_s"] for r in b.rows if r["op"] == "insert"),
+            None)})
     return b
 
 

@@ -11,6 +11,7 @@ from repro.core.ivf import build_index, search_batch
 from repro.core.pq import PQConfig, cdist_asym
 from repro.data.timeseries import random_walks
 
+from . import common
 from .common import Bench, timeit
 
 
@@ -20,6 +21,7 @@ def run(quick: bool = True) -> Bench:
     Q = jnp.asarray(random_walks(16, D, seed=7))
     X = jnp.asarray(random_walks(N, D, seed=1))
     cfg = PQConfig(n_sub=4, codebook_size=32, use_prealign=False,
+                   **common.measure_config_fields(),
                    kmeans_iters=3, dba_iters=1)
     index = build_index(jax.random.PRNGKey(0), X, cfg, n_lists=n_lists,
                         coarse_iters=4)
@@ -38,7 +40,8 @@ def run(quick: bool = True) -> Bench:
         b.add(n_probe=n_probe, recall_at_1=recall,
               candidates_frac=round(cand_frac, 3),
               search_s=t["median_s"], exhaustive_s=t_ex["median_s"])
-    b.save()
+    b.save(headline={"quick": quick, "measure": common.MEASURE,
+                     "config": dict(N=N, D=D, n_lists=n_lists)})
     return b
 
 

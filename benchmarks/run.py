@@ -33,11 +33,19 @@ def main() -> None:
                     help="CI smoke: quick sizes (further shrunk where a "
                          "suite supports it), 1 repetition per point")
     ap.add_argument("--only", choices=tuple(SUITES), default=None)
+    ap.add_argument("--measure", default=None,
+                    help="elastic measure for the measure-aware suites "
+                         "(lb_cascade, ivf, index): a registry name or "
+                         "'name:param=value', e.g. msm or erp:g=0.5")
     args = ap.parse_args()
     if args.smoke and args.full:
         ap.error("--smoke and --full are mutually exclusive")
     if args.smoke:
         common.set_smoke(True)
+    if args.measure:
+        from repro.core import measures as _measures
+        _measures.resolve(args.measure)   # fail fast on unknown names
+        common.set_measure(args.measure)
 
     names = (args.only,) if args.only else tuple(SUITES)
     for name in names:

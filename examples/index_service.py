@@ -34,8 +34,14 @@ def main():
     ap.add_argument("--prealign", action="store_true",
                     help="MODWT pre-aligned ingestion (§3.5): every seal "
                          "encodes through the fused prealign_encode kernel")
+    ap.add_argument("--measure", default="dtw",
+                    help="elastic measure for every stage (coarse routing, "
+                         "PQ codebooks, hot-segment scan): a registry name, "
+                         "optionally with params ('msm:c=0.5')")
     args = ap.parse_args()
     D = args.length
+    from repro.core import measures
+    spec = measures.resolve(args.measure)
 
     # --- bootstrap the shared quantizers on a historical sample ------------
     # With --prealign, seal-time encoding snaps segment boundaries to MODWT
@@ -45,12 +51,14 @@ def main():
     sample = random_walks(128, D, seed=0)
     cfg = IndexConfig(
         pq=PQConfig(n_sub=4, codebook_size=32,
+                    metric=spec.name, measure_params=spec.params,
                     use_prealign=args.prealign, exact_encode=args.prealign,
                     kmeans_iters=3, dba_iters=1),
         n_lists=8, hot_capacity=64, coarse_iters=4)
     t0 = time.perf_counter()
     index = StreamingIndex.bootstrap(jax.random.PRNGKey(0), sample, cfg)
     print(f"bootstrap: n_lists={cfg.n_lists} hot_capacity={cfg.hot_capacity}"
+          f" measure={spec.label}"
           f" ({time.perf_counter() - t0:.2f}s)")
 
     # --- serve the stream ---------------------------------------------------

@@ -10,10 +10,17 @@ ledger. Every elastic op listed below must have dispatched through BACKEND
 a kernel import error or an accidental fallback to the pure-JAX route
 would otherwise let the suite pass without executing a single Pallas
 kernel body.
+
+Measure-parameterized ops are additionally ledgered as "op[measure]";
+for MEASURED_OPS the gate also requires at least one NON-DTW measure to
+have dispatched through BACKEND, so the measure-generic kernel bodies
+(wdtw/erp/msm recurrence steps) are provably exercised, not just the DTW
+default.
 """
 
 import json
 import os
+import re
 import sys
 
 EXPECTED_OPS = (
@@ -23,6 +30,15 @@ EXPECTED_OPS = (
     "adc_lookup",
     "prealign_encode",
     "lb_refine",
+)
+
+# ops whose recurrence is measure-parameterized: each needs a non-DTW
+# dispatch on the asserted backend (lb_refine stays DTW-only by its
+# capability gate, so it is not listed here)
+MEASURED_OPS = (
+    "elastic_pairwise",
+    "elastic_cdist",
+    "prealign_encode",
 )
 
 
@@ -48,7 +64,25 @@ def main() -> int:
             f"{', '.join(missing)} — silent backend fallback?"
         )
         return 1
-    print(f"OK: all {len(EXPECTED_OPS)} elastic ops routed through {backend!r}")
+    missing_measure = []
+    for op in MEASURED_OPS:
+        pat = re.compile(
+            rf"^{re.escape(op)}\[(?!dtw\])[^\]]+\]:{re.escape(backend)}$"
+        )
+        if not any(pat.match(k) and ledger[k] for k in ledger):
+            missing_measure.append(op)
+    if missing_measure:
+        print(
+            f"FAIL: measure-parameterized ops never ran a non-DTW measure "
+            f"through {backend!r}: {', '.join(missing_measure)} — the "
+            "measure-generic kernel bodies are untested"
+        )
+        return 1
+    print(
+        f"OK: all {len(EXPECTED_OPS)} elastic ops routed through "
+        f"{backend!r} (incl. a non-DTW measure for "
+        f"{len(MEASURED_OPS)} measured ops)"
+    )
     return 0
 
 

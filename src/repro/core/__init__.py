@@ -3,7 +3,8 @@
 Public API:
     dispatch    — unified elastic-kernel dispatch (Pallas on TPU, pure-JAX
                   fallback; $REPRO_ELASTIC_BACKEND / set_backend override)
-    dtw         — wavefront (banded) DTW primitives
+    measures    — pluggable elastic-measure registry (dtw/wdtw/erp/msm)
+    dtw         — wavefront (banded) elastic-distance primitives
     lb          — Keogh envelopes + lower bounds
     lb_search   — batched LB-cascade filter-and-refine top-k search
     modwt       — MODWT pre-alignment (§3.5)
@@ -21,14 +22,17 @@ from .pq import (PQConfig, PQCodebook, fit, encode, encode_with_stats,
 from .dtw import dtw, dtw_pair, dtw_batch, dtw_cdist
 from .dispatch import (elastic_pairwise, elastic_cdist, adc_cdist,
                        adc_lookup, prealign_encode, lb_refine, get_backend,
-                       set_backend, use_backend)
+                       set_backend, use_backend, effective_window)
+from .measures import (MeasureSpec, register_measure, get_measure,
+                       resolve as resolve_measure, available as
+                       available_measures, registry_rows)
 from .lb import keogh_envelope, lb_keogh, lb_kim, lb_cascade, lb_lut
 from .lb_search import filtered_topk
 from .modwt import prealign, fixed_segments, modwt_scale
 from .dba import dba, dba_update, alignment_path
 from .kmeans import dba_kmeans, euclidean_kmeans
 from .knn import (knn_classify_sym, knn_classify_asym, nn_dtw_exact,
-                  nn_dtw_pruned, nn_dtw_pruned_host)
+                  nn_dtw_pruned)
 from .cluster import linkage, cut_k, hierarchical_labels
 from .metrics import rand_index, adjusted_rand_index, error_rate
 
@@ -39,14 +43,15 @@ __all__ = [
     "dtw", "dtw_pair", "dtw_batch", "dtw_cdist", "uses_fused_prealign",
     "elastic_pairwise", "elastic_cdist", "adc_cdist", "adc_lookup",
     "prealign_encode", "lb_refine", "get_backend", "set_backend",
-    "use_backend",
+    "use_backend", "effective_window",
+    "MeasureSpec", "register_measure", "get_measure", "resolve_measure",
+    "available_measures", "registry_rows",
     "keogh_envelope", "lb_keogh", "lb_kim", "lb_cascade", "lb_lut",
     "filtered_topk",
     "prealign", "fixed_segments", "modwt_scale",
     "dba", "dba_update", "alignment_path",
     "dba_kmeans", "euclidean_kmeans",
     "knn_classify_sym", "knn_classify_asym", "nn_dtw_exact", "nn_dtw_pruned",
-    "nn_dtw_pruned_host",
     "linkage", "cut_k", "hierarchical_labels",
     "rand_index", "adjusted_rand_index", "error_rate",
 ]

@@ -1,7 +1,7 @@
 """Unified execution-engine dispatch for every elastic-distance hot path.
 
-Every DTW / ADC consumer in the library (PQ encoding, query LUTs, DBA
-k-means assignment, IVF coarse search, exact NN-DTW, symmetric code
+Every elastic / ADC consumer in the library (PQ encoding, query LUTs, DBA
+k-means assignment, IVF coarse search, exact NN search, symmetric code
 distances, LB-filtered search) funnels through the entry points here
 instead of calling a
 specific implementation, so the Pallas kernels are the *default engine* on
@@ -12,9 +12,23 @@ TPU rather than a dead benchmark artifact:
     adc_cdist(codes_a, codes_b, lut) symmetric ADC         -> (Na, Nb)
     adc_lookup(codes, qlut)          asymmetric scan       -> (N,)
     prealign_encode(X, centroids)    fused MODWT prealign
-                                     + DTW-1NN encode      -> (N, M) codes
+                                     + elastic-1NN encode  -> (N, M) codes
     lb_refine(A, B, up, lo, thresh)  fused LB cascade +
                                      conditional DTW refine -> (N,), (N,)
+
+Measures: the elastic entry points take a ``measure`` argument (name,
+``"name:param=value"`` string, or :class:`repro.core.measures.MeasureSpec`;
+``None`` = DTW) that is threaded as a *static* parameter down to the shared
+wavefront recurrence — one implementation per op regardless of measure.
+``lb_refine`` additionally validates that the measure supports the Keogh
+cascade (only capability-gated callers should reach it).
+
+Window contract (shared by knn / lb / lb_search / ivf / kernels):
+``window=None`` means *unbanded*, which is exactly a Sakoe-Chiba band of
+``L - 1`` — shifts beyond the series length are infeasible, so
+:func:`effective_window` clamps every materialized window to
+``[0, L - 1]``.  Use it whenever a concrete integer window is needed
+(envelope construction, band geometry); never materialize ``L`` itself.
 
 Backends (resolved once per call site at trace time):
 
@@ -27,10 +41,17 @@ Selection order: :func:`set_backend` override > ``$REPRO_ELASTIC_BACKEND`` >
 ``"auto"``.  The :data:`stats` counters record which route every op took;
 they are incremented at *trace* time (a jitted caller that hits its cache
 does not re-count), which is exactly what tests need to assert that a code
-path really executes through the dispatch layer.  :data:`totals` is the
+path really executes through the dispatch layer.  Measure-parameterized
+ops are double-counted: once under the bare op name and once under
+``"op[measure]"``, so the routing ledger shows per-measure coverage.
+:data:`totals` is the
 same ledger but process-lifetime — :func:`reset_stats` leaves it alone, so
 a CI run can dump it at session end and fail the build if an op silently
 fell back to the ``"jax"`` route (see ``scripts/check_routing.py``).
+
+The kernel modules are imported lazily (first dispatch) so that they may
+themselves import :mod:`repro.core` submodules — e.g. the measure registry
+— without creating an import cycle through this module.
 """
 
 from __future__ import annotations
@@ -42,21 +63,15 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..kernels.dtw_band.ops import dtw_band, dtw_band_cdist
-from ..kernels.lb_cascade.ops import lb_refine as _lb_refine_pallas
-from ..kernels.lb_cascade.ref import lb_refine_jax
-from ..kernels.pq_adc.ops import adc_lookup as _adc_lookup_pallas
-from ..kernels.pq_adc.ops import adc_sym_cdist as _adc_sym_pallas
-from ..kernels.pq_adc.ref import adc_lookup_ref, adc_sym_cdist_ref
-from ..kernels.prealign_encode.ops import (
-    prealign_encode as _prealign_encode_pallas)
-from ..kernels.prealign_encode.ref import prealign_encode_ref
+from . import measures
 from .dtw import dtw_batch, dtw_cdist
+from .measures import MeasureArg, MeasureSpec
 
 __all__ = [
     "BACKENDS", "ENV_VAR", "get_backend", "set_backend", "use_backend",
     "elastic_pairwise", "elastic_cdist", "adc_cdist", "adc_lookup",
     "prealign_encode", "lb_refine", "stats", "totals", "reset_stats",
+    "effective_window",
 ]
 
 ENV_VAR = "REPRO_ELASTIC_BACKEND"
@@ -64,12 +79,21 @@ BACKENDS = ("auto", "pallas", "pallas_interpret", "jax")
 
 _override: Optional[str] = None
 
-# (op, resolved backend) -> number of dispatches (trace-time, see module doc)
+# (op, resolved backend) -> number of dispatches (trace-time, see module
+# doc); measure-parameterized ops are also ledgered as "op[measure]"
 stats: Dict[Tuple[str, str], int] = {}
 
 # same ledger, but never cleared by reset_stats: the process-lifetime record
 # a CI routing gate can assert on after the whole test session
 totals: Dict[Tuple[str, str], int] = {}
+
+
+def effective_window(length: int, window: Optional[int]) -> int:
+    """The library-wide ``window=None`` contract (see module docstring):
+    ``None`` -> unbanded -> ``length - 1``; everything clamped to
+    ``[0, length - 1]``."""
+    w = length - 1 if window is None else int(window)
+    return max(0, min(w, length - 1))
 
 
 def _check(name: str) -> str:
@@ -115,9 +139,14 @@ def reset_stats() -> None:
     stats.clear()
 
 
-def _count(op: str, route: str) -> None:
-    stats[(op, route)] = stats.get((op, route), 0) + 1
-    totals[(op, route)] = totals.get((op, route), 0) + 1
+def _count(op: str, route: str,
+           measure: Optional[MeasureSpec] = None) -> None:
+    keys = [(op, route)]
+    if measure is not None:
+        keys.append((f"{op}[{measure.name}]", route))
+    for key in keys:
+        stats[key] = stats.get(key, 0) + 1
+        totals[key] = totals.get(key, 0) + 1
 
 
 def _interpret_flag(backend: str) -> Optional[bool]:
@@ -128,32 +157,42 @@ def _interpret_flag(backend: str) -> Optional[bool]:
 
 def elastic_pairwise(A: jnp.ndarray, B: jnp.ndarray,
                      window: Optional[int] = None, *,
-                     block: int = 8) -> jnp.ndarray:
-    """Squared elastic distance over zipped pairs: ``(N, L) x (N, L) -> (N,)``."""
+                     block: int = 8,
+                     measure: MeasureArg = None) -> jnp.ndarray:
+    """Elastic cost over zipped pairs: ``(N, L) x (N, L) -> (N,)``."""
+    from ..kernels.dtw_band.ops import dtw_band
+    spec = measures.resolve(measure)
     backend = get_backend()
-    _count("elastic_pairwise", backend)
+    _count("elastic_pairwise", backend, spec)
     if backend == "jax":
-        return dtw_batch(A, B, window)
+        return dtw_batch(A, B, window, spec)
     return dtw_band(A, B, window, block=block,
-                    interpret=_interpret_flag(backend))
+                    interpret=_interpret_flag(backend), measure=spec)
 
 
 def elastic_cdist(A: jnp.ndarray, B: jnp.ndarray,
                   window: Optional[int] = None, *,
-                  block: int = 8) -> jnp.ndarray:
-    """All-pairs squared elastic distance: ``(N, L) x (M, L) -> (N, M)``."""
+                  block: int = 8,
+                  measure: MeasureArg = None) -> jnp.ndarray:
+    """All-pairs elastic cost: ``(N, L) x (M, L) -> (N, M)``."""
+    from ..kernels.dtw_band.ops import dtw_band_cdist
+    spec = measures.resolve(measure)
     backend = get_backend()
-    _count("elastic_cdist", backend)
+    _count("elastic_cdist", backend, spec)
     if backend == "jax":
-        return dtw_cdist(A, B, window)
+        return dtw_cdist(A, B, window, measure=spec)
     return dtw_band_cdist(A, B, window, block=block,
-                          interpret=_interpret_flag(backend))
+                          interpret=_interpret_flag(backend), measure=spec)
 
 
 def adc_cdist(codes_a: jnp.ndarray, codes_b: jnp.ndarray,
               lut: jnp.ndarray) -> jnp.ndarray:
     """Symmetric PQ distance matrix ``sqrt(sum_m LUT[m, a^m, b^m])``:
-    one-hot MXU contractions on the Pallas route, plain gathers on "jax"."""
+    one-hot MXU contractions on the Pallas route, plain gathers on "jax".
+    Measure-generic by construction — the LUT already encodes whichever
+    measure built it (paper §3.3)."""
+    from ..kernels.pq_adc.ops import adc_sym_cdist as _adc_sym_pallas
+    from ..kernels.pq_adc.ref import adc_sym_cdist_ref
     backend = get_backend()
     _count("adc_cdist", backend)
     if backend == "jax":
@@ -164,6 +203,8 @@ def adc_cdist(codes_a: jnp.ndarray, codes_b: jnp.ndarray,
 
 def adc_lookup(codes: jnp.ndarray, qlut: jnp.ndarray) -> jnp.ndarray:
     """Asymmetric ADC scan: ``codes (N, M)``, ``qlut (M, K)`` -> ``(N,)``."""
+    from ..kernels.pq_adc.ops import adc_lookup as _adc_lookup_pallas
+    from ..kernels.pq_adc.ref import adc_lookup_ref
     backend = get_backend()
     _count("adc_lookup", backend)
     if backend == "jax":
@@ -174,41 +215,64 @@ def adc_lookup(codes: jnp.ndarray, qlut: jnp.ndarray) -> jnp.ndarray:
 
 def prealign_encode(X: jnp.ndarray, centroids: jnp.ndarray, *, level: int,
                     tail: int, window: Optional[int] = None,
-                    block: int = 8) -> jnp.ndarray:
-    """Fused MODWT prealign + exact DTW-1NN encode: ``X (N, D)`` against
+                    block: int = 8,
+                    measure: MeasureArg = None) -> jnp.ndarray:
+    """Fused MODWT prealign + exact elastic-1NN encode: ``X (N, D)`` against
     ``centroids (M, K, S)`` -> codes ``(N, M)`` int32.
 
     The Pallas route performs the whole §3.5 pipeline (scale recursion,
     change-point snap, segment re-interpolation, nearest-centroid scan) in
     one pass per batch tile — the ``(N, M, S)`` segment tensor never
-    reaches HBM.  The ``"jax"`` route is the two-step reference.
+    reaches HBM.  The ``"jax"`` route is the two-step reference.  The
+    1-NN scan runs under ``measure`` (DTW by default).
     """
+    from ..kernels.prealign_encode.ops import (
+        prealign_encode as _prealign_encode_pallas)
+    from ..kernels.prealign_encode.ref import prealign_encode_ref
+    spec = measures.resolve(measure)
     backend = get_backend()
-    _count("prealign_encode", backend)
+    _count("prealign_encode", backend, spec)
     if backend == "jax":
-        return prealign_encode_ref(X, centroids, level, tail, window)
+        return prealign_encode_ref(X, centroids, level, tail, window,
+                                   measure=spec)
     return _prealign_encode_pallas(X, centroids, level, tail, window,
                                    block=block,
-                                   interpret=_interpret_flag(backend))
+                                   interpret=_interpret_flag(backend),
+                                   measure=spec)
 
 
 def lb_refine(A: jnp.ndarray, B: jnp.ndarray, upper: jnp.ndarray,
               lower: jnp.ndarray, thresh: jnp.ndarray,
               window: Optional[int] = None, *,
-              block: int = 8) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Fused cascade bound + conditional banded-DTW refine over zipped
+              block: int = 8,
+              measure: MeasureArg = None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused cascade bound + conditional banded refine over zipped
     pairs: ``A (N, L)`` queries, ``B (N, L)`` candidates, ``upper``/
     ``lower (N, L)`` Keogh envelopes of ``A``, ``thresh (N,)``.
 
-    Returns ``(d (N,), refined (N,) bool)``: ``d`` is the exact squared
-    banded DTW where ``max(LB_Kim, LB_Keogh) < thresh`` and the (valid)
+    Returns ``(d (N,), refined (N,) bool)``: ``d`` is the exact banded
+    elastic cost where ``max(LB_Kim, LB_Keogh) < thresh`` and the (valid)
     lower bound elsewhere.  On the Pallas route a pair tile whose bounds
     all exceed their thresholds skips the wavefront sweep entirely.
+
+    Only sound for measures with ``has_keogh_lb`` (a hard error otherwise
+    — capability-gated callers such as ``lb_search.filtered_topk`` fall
+    back to the exact dense path before reaching here).
     """
+    from ..kernels.lb_cascade.ops import lb_refine as _lb_refine_pallas
+    from ..kernels.lb_cascade.ref import lb_refine_jax
+    spec = measures.resolve(measure)
+    if not spec.has_keogh_lb:
+        raise ValueError(
+            f"measure {spec.name!r} has no sound Keogh/Kim lower bound; "
+            "lb_refine would prune incorrectly — use the exact dense path")
     backend = get_backend()
-    _count("lb_refine", backend)
+    _count("lb_refine", backend, spec)
     if backend == "jax":
-        return lb_refine_jax(A, B, upper, lower, thresh, window)
+        return lb_refine_jax(A, B, upper, lower, thresh, window,
+                             measure=spec)
     return _lb_refine_pallas(A, B, upper, lower, thresh, window,
                              block=block,
-                             interpret=_interpret_flag(backend))
+                             interpret=_interpret_flag(backend),
+                             measure=spec)

@@ -1,8 +1,11 @@
-"""Dynamic Time Warping in JAX — anti-diagonal wavefront formulation.
+"""Elastic alignment distances in JAX — anti-diagonal wavefront formulation.
 
-The classic DP recurrence
+The classic DP recurrence (DTW shown; every registered measure shares the
+shape, only the per-move costs differ — see :mod:`repro.core.measures`)
 
-    dtw[i, j] = (a_i - b_j)^2 + min(dtw[i-1, j-1], dtw[i, j-1], dtw[i-1, j])
+    T[i, j] = min(T[i-1, j-1] + diag_cost,
+                  T[i-1, j  ] + vert_cost,
+                  T[i,   j-1] + horiz_cost)
 
 has a row-wise prefix dependency, which serializes on vector hardware.  We
 instead sweep the DP table anti-diagonal by anti-diagonal: every cell on
@@ -11,8 +14,15 @@ diagonal is one vector operation (VPU lanes = cells) and a length-``2L-1``
 ``lax.scan`` carries two diagonal registers.  A Sakoe-Chiba band ``|i-j| <= w``
 is a static mask, keeping every shape fixed.
 
-All distances here are *squared* DTW costs (the paper aggregates squared
-subspace distances); take ``jnp.sqrt`` at the end if a metric value is needed.
+The measure spec is a *static* argument: its per-move cost step is inlined
+at trace time, so DTW (the default) compiles to exactly the pre-registry
+graph, while ERP additionally threads its virtual first row/column (prefix
+sums of gap costs) through the same sweep.
+
+DTW/WDTW distances are *squared* costs (the paper aggregates squared
+subspace distances); ERP/MSM use absolute differences — the norm under
+which they are metrics.  Take ``jnp.sqrt`` of DTW costs at the end if a
+metric-scaled value is needed.
 """
 
 from __future__ import annotations
@@ -22,6 +32,9 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+from . import measures
+from .measures import MeasureArg
 
 __all__ = [
     "dtw",
@@ -36,37 +49,70 @@ _INF = jnp.float32(jnp.inf)
 
 
 def _diag_sweep(a: jnp.ndarray, b: jnp.ndarray, window: Optional[int],
-                return_table: bool):
+                return_table: bool, measure: MeasureArg = None):
     """Shared wavefront sweep.  ``a``/``b`` are rank-1, equal length L.
 
-    Returns the final squared DTW cost, and (optionally) the full stack of
-    diagonals ``(2L-1, L)`` where ``table[d, i] == dtw[i, d-i]`` — used by the
-    DBA backtracking pass.
+    Returns the final elastic cost under ``measure`` (default DTW), and
+    (optionally) the full stack of diagonals ``(2L-1, L)`` where
+    ``table[d, i] == T[i, d-i]`` — used by the DBA backtracking pass
+    (DTW only).
     """
+    spec = measures.resolve(measure)
     L = a.shape[0]
     w = L if window is None else int(window)
     idx = jnp.arange(L)
 
     # b gathered along a diagonal: cell (i, d-i) needs b[d - i].
-    # Pad b so that out-of-range gathers read +inf-cost positions.
+    # Pad b so that out-of-range gathers read masked positions.
     b_pad = jnp.concatenate([b, jnp.zeros((L,), b.dtype)])
+    # a_{i-1} with a sentinel at i = 0 (never used: the vertical move into
+    # row 0 reads an inf / border predecessor there)
+    xp = jnp.concatenate([a[:1], a[:-1]]) if spec.uses_neighbors else None
+
+    if spec.uses_gap_border:
+        # virtual first column/row: T[i, -1] = ga[i], T[-1, j] = gb[j]
+        ga = jnp.cumsum(measures.gap_costs(spec, a))
+        gb = jnp.cumsum(measures.gap_costs(spec, b))
+        ga_prev = jnp.concatenate([jnp.zeros((1,), ga.dtype), ga[:-1]])
+        gb_prev = jnp.concatenate([jnp.zeros((1,), gb.dtype), gb[:-1]])
+        gb_pad = jnp.concatenate([gb, jnp.zeros((L,), gb.dtype)])
+        gb_prev_pad = jnp.concatenate([gb_prev, jnp.zeros((L,), gb.dtype)])
 
     def step(carry, d):
         prev1, prev2 = carry  # diagonals d-1 and d-2, indexed by i
         j = d - idx
+        jc = jnp.clip(j, 0, 2 * L - 1)
         valid = (j >= 0) & (j < L) & (jnp.abs(idx - j) <= w)
-        cost = (a - b_pad[jnp.clip(j, 0, 2 * L - 1)]) ** 2
+        y = b_pad[jc]
+        yp = b_pad[jnp.clip(j - 1, 0, 2 * L - 1)] if spec.uses_neighbors \
+            else None
+        dd = jnp.abs(idx - j) if spec.uses_position else None
+        c_d, c_v, c_h = measures.move_costs(spec, a, y, xp, yp, dd, L)
 
         # Predecessors (indexed by i on their own diagonals):
-        #   dtw[i-1, j-1] -> prev2 shifted down by one in i
-        #   dtw[i,   j-1] -> prev1 at i
-        #   dtw[i-1, j  ] -> prev1 shifted down by one in i
-        shift1 = jnp.concatenate([jnp.full((1,), _INF), prev1[:-1]])
-        shift2 = jnp.concatenate([jnp.full((1,), _INF), prev2[:-1]])
-        best_prev = jnp.minimum(jnp.minimum(shift2, prev1), shift1)
-        # Base case: cell (0, 0) has no predecessor.
-        best_prev = jnp.where((idx == 0) & (d == 0), 0.0, best_prev)
-        diag = jnp.where(valid, cost + best_prev, _INF)
+        #   T[i-1, j-1] -> prev2 shifted down by one in i   (diag)
+        #   T[i-1, j  ] -> prev1 shifted down by one in i   (vert)
+        #   T[i,   j-1] -> prev1 at i                       (horiz)
+        pred_v = jnp.concatenate([jnp.full((1,), _INF), prev1[:-1]])
+        pred_d = jnp.concatenate([jnp.full((1,), _INF), prev2[:-1]])
+        pred_h = prev1
+        is_i0 = idx == 0
+        is_j0 = j == 0
+        if spec.uses_gap_border:
+            pred_d = jnp.where(is_i0, gb_prev_pad[jc],
+                               jnp.where(is_j0, ga_prev[idx], pred_d))
+            pred_d = jnp.where(is_i0 & is_j0, 0.0, pred_d)
+            pred_v = jnp.where(is_i0, gb_pad[jc], pred_v)
+            pred_h = jnp.where(is_j0, ga[idx], pred_h)
+        else:
+            # Base case: cell (0, 0) starts from 0 via the diagonal move.
+            pred_d = jnp.where(is_i0 & is_j0, 0.0, pred_d)
+        if c_v is c_d and c_h is c_d:   # shared-cost family (DTW, WDTW)
+            cell = c_d + jnp.minimum(jnp.minimum(pred_d, pred_h), pred_v)
+        else:
+            cell = jnp.minimum(jnp.minimum(pred_d + c_d, pred_v + c_v),
+                               pred_h + c_h)
+        diag = jnp.where(valid, cell, _INF)
         out = diag if return_table else None
         return (diag, prev1), out
 
@@ -77,11 +123,13 @@ def _diag_sweep(a: jnp.ndarray, b: jnp.ndarray, window: Optional[int],
 
 
 def dtw_pair(a: jnp.ndarray, b: jnp.ndarray,
-             window: Optional[int] = None) -> jnp.ndarray:
-    """Squared DTW cost between two equal-length 1-D series."""
+             window: Optional[int] = None,
+             measure: MeasureArg = None) -> jnp.ndarray:
+    """Elastic cost between two equal-length 1-D series (squared DTW by
+    default; any registered measure via ``measure``)."""
     a = jnp.asarray(a, jnp.float32)
     b = jnp.asarray(b, jnp.float32)
-    final, _ = _diag_sweep(a, b, window, return_table=False)
+    final, _ = _diag_sweep(a, b, window, return_table=False, measure=measure)
     return final
 
 
@@ -93,7 +141,9 @@ def dtw_full_table(a: jnp.ndarray, b: jnp.ndarray,
                    window: Optional[int] = None) -> jnp.ndarray:
     """Full DP table in diagonal layout: ``table[i + j, i] == dtw[i, j]``.
 
-    Used by DBA to backtrack the optimal alignment path.
+    Used by DBA to backtrack the optimal alignment path.  DTW only: DBA's
+    move semantics (every move is a match) do not transfer to gap/edit
+    measures.
     """
     a = jnp.asarray(a, jnp.float32)
     b = jnp.asarray(b, jnp.float32)
@@ -101,23 +151,27 @@ def dtw_full_table(a: jnp.ndarray, b: jnp.ndarray,
     return table
 
 
-@functools.partial(jax.jit, static_argnames=("window",))
+@functools.partial(jax.jit, static_argnames=("window", "measure"))
 def dtw_batch(A: jnp.ndarray, B: jnp.ndarray,
-              window: Optional[int] = None) -> jnp.ndarray:
-    """Pairwise squared DTW over zipped batches: ``A (N, L)``, ``B (N, L)``."""
-    return jax.vmap(lambda a, b: dtw_pair(a, b, window))(A, B)
+              window: Optional[int] = None,
+              measure: MeasureArg = None) -> jnp.ndarray:
+    """Pairwise elastic cost over zipped batches: ``A (N, L)``, ``B (N, L)``."""
+    spec = measures.resolve(measure)
+    return jax.vmap(lambda a, b: dtw_pair(a, b, window, spec))(A, B)
 
 
-@functools.partial(jax.jit, static_argnames=("window", "block"))
+@functools.partial(jax.jit, static_argnames=("window", "block", "measure"))
 def dtw_cdist(A: jnp.ndarray, B: jnp.ndarray,
-              window: Optional[int] = None, block: int = 4096) -> jnp.ndarray:
-    """All-pairs squared DTW: ``A (N, L)``, ``B (M, L)`` -> ``(N, M)``.
+              window: Optional[int] = None, block: int = 4096,
+              measure: MeasureArg = None) -> jnp.ndarray:
+    """All-pairs elastic cost: ``A (N, L)``, ``B (M, L)`` -> ``(N, M)``.
 
     Flattens the cross-product and sweeps it in fixed-size blocks; the pair
     indices are derived arithmetically (``idx // M``, ``idx % M``) inside
     each block, so peak memory is bounded by ``block`` — nothing of size
     N*M is ever materialized.
     """
+    spec = measures.resolve(measure)
     N, L = A.shape
     M = B.shape[0]
     total = N * M
@@ -127,7 +181,7 @@ def dtw_cdist(A: jnp.ndarray, B: jnp.ndarray,
         idx = jnp.minimum(k * block + jnp.arange(block), total - 1)
         aa = A[idx // M]
         bb = B[idx % M]
-        d = jax.vmap(lambda x, y: dtw_pair(x, y, window))(aa, bb)
+        d = jax.vmap(lambda x, y: dtw_pair(x, y, window, spec))(aa, bb)
         return carry, d
 
     _, out = jax.lax.scan(blk, 0, jnp.arange(nblk))

@@ -32,6 +32,7 @@ import numpy as np
 from .dispatch import elastic_cdist
 from .kmeans import dba_kmeans
 from .lb import lb_lut
+from .measures import MeasureArg
 from .pq import (PQCodebook, PQConfig, _adc_gather, encode, fit,
                  query_lut_batch, segment)
 
@@ -75,11 +76,13 @@ class IVFPQIndex(NamedTuple):
 
 
 def coarse_assign(X: jnp.ndarray, coarse: jnp.ndarray,
-                  window: Optional[int]) -> jnp.ndarray:
+                  window: Optional[int],
+                  measure: MeasureArg = None) -> jnp.ndarray:
     """Route series ``X (N, D)`` to their nearest coarse centroid (banded
-    DTW through the dispatch layer) -> ``(N,)`` int32 list ids."""
-    return jnp.argmin(elastic_cdist(X, coarse, window), axis=1).astype(
-        jnp.int32)
+    elastic distance through the dispatch layer) -> ``(N,)`` int32 list
+    ids."""
+    return jnp.argmin(elastic_cdist(X, coarse, window, measure=measure),
+                      axis=1).astype(jnp.int32)
 
 
 def build_lists(assign: np.ndarray, n_lists: int
@@ -114,9 +117,10 @@ def build_index(key: jax.Array, X: jnp.ndarray, cfg: PQConfig,
     N, D = X.shape
     kc, kf = jax.random.split(key)
     w = max(1, int(round(coarse_window_frac * D)))
+    spec = cfg.measure()
     if coarse is None:
         res = dba_kmeans(kc, X, n_lists, iters=coarse_iters, dba_iters=1,
-                         window=w)
+                         window=w, measure=spec)
         coarse_cents, assign = res.centroids, np.asarray(res.assignment)
     else:
         coarse_cents = jnp.asarray(coarse, jnp.float32)
@@ -124,7 +128,7 @@ def build_index(key: jax.Array, X: jnp.ndarray, cfg: PQConfig,
             raise ValueError(
                 f"pre-trained coarse quantizer has {coarse_cents.shape[0]} "
                 f"centroids but n_lists={n_lists}")
-        assign = np.asarray(coarse_assign(X, coarse_cents, w))
+        assign = np.asarray(coarse_assign(X, coarse_cents, w, spec))
 
     if cb is None:
         cb = fit(kf, X, cfg)
@@ -265,16 +269,24 @@ def search_batch(index: IVFPQIndex, Q: jnp.ndarray, cfg: PQConfig, *,
     always matches the list-assignment metric unless explicitly overridden.
     ``lb_budget`` enables the cascaded LB pre-filter in the fine stage
     (see :func:`fine_rank`): candidates beyond the budget are discarded on
-    their envelope lower bound before the exact ADC gather.
+    their envelope lower bound before the exact ADC gather.  The budget is
+    capability-gated: for measures without a sound Keogh cascade it is
+    ignored (exact full gather) instead of pruning unsoundly.
     """
     _validate_probe(index.n_lists, index.max_list, n_probe, topk, lb_budget)
     Q = jnp.asarray(Q, jnp.float32)
     D = Q.shape[-1]
+    spec = cfg.measure()
     w = coarse_window if coarse_window is not None else index.coarse_window
-    dc = elastic_cdist(Q, index.coarse, w)                  # (Nq, n_lists)
+    dc = elastic_cdist(Q, index.coarse, w, measure=spec)    # (Nq, n_lists)
     q_segs = segment(Q, cfg)                                # (Nq, M, S)
     qluts = query_lut_batch(q_segs, index.cb, cfg.window(D),
-                            cfg.metric != "dtw")            # (Nq, M, K)
+                            not cfg.is_elastic, spec)       # (Nq, M, K)
+    if lb_budget is not None and spec is not None and not spec.has_keogh_lb:
+        # The envelope bound table is only a lower bound for measures with
+        # a sound Keogh cascade; fall back to the exact full gather rather
+        # than an unsound prune.
+        lb_budget = None
     if lb_budget is not None and lb_budget < n_probe * index.max_list:
         lb_luts = lb_lut(q_segs, index.cb.centroids, index.cb.env_upper,
                          index.cb.env_lower)                # (Nq, M, K)

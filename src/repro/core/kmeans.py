@@ -1,10 +1,14 @@
 """DBA k-means — the codebook learner of the paper's training phase.
 
-Assignment uses batched wavefront DTW through the elastic dispatch layer
-(`dispatch.elastic_cdist` — Pallas kernel on TPU); the update step runs one
+Assignment uses the batched wavefront through the elastic dispatch layer
+(`dispatch.elastic_cdist` — Pallas kernel on TPU) under any registered
+elastic measure; the update step runs one
 or more DBA iterations per round, where each series contributes only to its
 assigned centroid (scatter-add by cluster id, so the cost per round is N
-backtracks, not N*K).
+backtracks, not N*K).  The DBA barycenter update itself always averages
+along *DTW* alignment paths — for non-DTW measures it is the standard
+averaging heuristic (centroids are representatives; assignment and every
+LUT/search distance use the configured measure).
 
 A Euclidean variant (`euclidean_kmeans`) backs the PQ_ED baseline.
 """
@@ -20,6 +24,7 @@ import jax.numpy as jnp
 from .dispatch import elastic_cdist
 from .dtw import euclidean_sq
 from .dba import alignment_path
+from .measures import MeasureArg
 
 __all__ = ["KMeansResult", "dba_kmeans", "euclidean_kmeans"]
 
@@ -58,21 +63,24 @@ def _dba_assigned_update(C: jnp.ndarray, X: jnp.ndarray, assign: jnp.ndarray,
 
 
 def dba_kmeans(key: jax.Array, X: jnp.ndarray, k: int, iters: int = 10,
-               dba_iters: int = 2, window: Optional[int] = None) -> KMeansResult:
+               dba_iters: int = 2, window: Optional[int] = None,
+               measure: MeasureArg = None) -> KMeansResult:
     """DBA k-means over ``X (N, L)`` with ``k`` clusters.
 
     Python-level outer loop (iters is small) over jitted assignment/update
-    steps; fully deterministic given ``key``.
+    steps; fully deterministic given ``key``.  ``measure`` selects the
+    assignment/inertia distance (DTW by default); the DBA update remains
+    DTW-alignment averaging (see module docstring).
     """
     X = jnp.asarray(X, jnp.float32)
     C = _init_centroids(key, X, k)
     assign = jnp.zeros((X.shape[0],), jnp.int32)
     for _ in range(iters):
-        d = elastic_cdist(X, C, window)       # (N, K) squared DTW
+        d = elastic_cdist(X, C, window, measure=measure)   # (N, K)
         assign = jnp.argmin(d, axis=1)
         for _ in range(dba_iters):
             C = _dba_assigned_update(C, X, assign, window)
-    d = elastic_cdist(X, C, window)
+    d = elastic_cdist(X, C, window, measure=measure)
     assign = jnp.argmin(d, axis=1)
     inertia = jnp.sum(jnp.min(d, axis=1))
     return KMeansResult(C, assign, inertia)

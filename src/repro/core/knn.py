@@ -13,13 +13,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .dispatch import elastic_cdist, elastic_pairwise
+from .dispatch import effective_window, elastic_cdist, elastic_pairwise
 from .lb import keogh_envelope, lb_keogh
 from .lb_search import filtered_topk
+from .measures import MeasureArg
 from .pq import PQCodebook, PQConfig, cdist_asym, cdist_sym, encode
 
 __all__ = ["knn_classify_sym", "knn_classify_asym", "nn_dtw_exact",
-           "nn_dtw_pruned", "nn_dtw_pruned_host"]
+           "nn_dtw_pruned"]
 
 
 def knn_classify_sym(train_codes: jnp.ndarray, train_labels: jnp.ndarray,
@@ -40,16 +41,19 @@ def knn_classify_asym(train_codes: jnp.ndarray, train_labels: jnp.ndarray,
 
 
 def nn_dtw_exact(X: jnp.ndarray, labels: jnp.ndarray, Q: jnp.ndarray,
-                 window: Optional[int] = None) -> jnp.ndarray:
-    """Exact (banded) NN-DTW, fully vectorized — the accuracy reference."""
+                 window: Optional[int] = None,
+                 measure: MeasureArg = None) -> jnp.ndarray:
+    """Exact (banded) elastic 1-NN, fully vectorized — the accuracy
+    reference (DTW under the default measure)."""
     d = elastic_cdist(jnp.asarray(Q, jnp.float32),
-                      jnp.asarray(X, jnp.float32), window)
+                      jnp.asarray(X, jnp.float32), window, measure=measure)
     return labels[jnp.argmin(d, axis=1)]
 
 
 def nn_dtw_pruned(X: np.ndarray, labels: np.ndarray, Q: np.ndarray,
                   window: Optional[int] = None, *,
-                  budget: Optional[int] = None
+                  budget: Optional[int] = None,
+                  measure: MeasureArg = None
                   ) -> Tuple[np.ndarray, float]:
     """LB-cascade filter-and-refine NN-DTW — fully batched on device.
 
@@ -67,7 +71,8 @@ def nn_dtw_pruned(X: np.ndarray, labels: np.ndarray, Q: np.ndarray,
     """
     X = jnp.asarray(X, jnp.float32)
     Q = jnp.asarray(Q, jnp.float32)
-    _, idx, n_dtw = filtered_topk(Q, X, window, 1, budget=budget)
+    _, idx, n_dtw = filtered_topk(Q, X, window, 1, budget=budget,
+                                  measure=measure)
     preds = np.asarray(labels)[np.asarray(idx)[:, 0]]
     pruned = 1.0 - int(n_dtw) / float(Q.shape[0] * X.shape[0])
     return preds, pruned
@@ -76,15 +81,17 @@ def nn_dtw_pruned(X: np.ndarray, labels: np.ndarray, Q: np.ndarray,
 def nn_dtw_pruned_host(X: np.ndarray, labels: np.ndarray, Q: np.ndarray,
                        window: Optional[int] = None
                        ) -> Tuple[np.ndarray, float]:
-    """Legacy host-loop LB_Keogh filter-and-refine NN-DTW.
+    """TEST/BENCHMARK ORACLE — not public API (excluded from the package
+    re-exports; PR 4 proved it equivalent to :func:`nn_dtw_pruned`).
 
-    Superseded by the batched :func:`nn_dtw_pruned`; kept as the
-    equivalence/benchmark baseline.  Per query, candidates are refined in
+    Legacy host-loop LB_Keogh filter-and-refine NN-DTW, DTW-only.  Kept
+    solely as the independent equivalence baseline for tests and
+    ``benchmarks/lb_cascade.py``.  Per query, candidates are refined in
     ascending-LB chunks with early exit between chunks.
     """
     X = np.asarray(X, np.float32)
     Q = np.asarray(Q, np.float32)
-    w = window if window is not None else X.shape[1]
+    w = effective_window(X.shape[1], window)
     up, lo = keogh_envelope(jnp.asarray(Q), int(w))
     lbs = np.asarray(jax.vmap(lambda u, l: lb_keogh(jnp.asarray(X), u, l))(
         up, lo))                                           # (Nq, N)

@@ -29,6 +29,13 @@ with static shapes:
 Exactness: a candidate is discarded unrefined only when its lower bound is
 >= the threshold in force, and the threshold is always a *verified* exact
 distance — so every true top-k member is refined before the loop can exit.
+
+Measures: the whole two-phase machinery is only *sound* for measures whose
+capability flags say so (``has_keogh_lb`` for phase 1/2 pruning,
+``euclid_is_upper_bound`` for the threshold seed).  For any other
+registered measure — wdtw, erp, msm — :func:`filtered_topk` transparently
+falls back to the exact dense path: one ``dispatch.elastic_cdist`` launch
+plus a top-k, identical results, no unsound prune.
 """
 
 from __future__ import annotations
@@ -39,28 +46,50 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .dispatch import lb_refine
+from . import measures
+from .dispatch import effective_window, elastic_cdist, lb_refine
 from .dtw import euclidean_sq
 from .lb import keogh_envelope, lb_keogh, lb_kim
+from .measures import MeasureArg
 
 __all__ = ["filtered_topk"]
 
 
+def _dense_topk(Q: jnp.ndarray, X: jnp.ndarray, window: Optional[int],
+                k: int, valid: Optional[jnp.ndarray],
+                spec) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Exact dense fallback: one all-pairs launch + top-k (the sound path
+    for measures without a Keogh cascade / Euclidean upper bound)."""
+    d = elastic_cdist(Q, X, window, measure=spec)
+    if valid is not None:
+        d = jnp.where(valid[None, :], d, jnp.inf)
+        n_ref = Q.shape[0] * jnp.sum(valid).astype(jnp.int32)
+    else:
+        n_ref = jnp.int32(Q.shape[0] * X.shape[0])
+    neg, idx = jax.lax.top_k(-d, k)
+    idx = jnp.where(jnp.isfinite(neg), idx, -1).astype(jnp.int32)
+    return -neg, idx, n_ref
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("window", "k", "budget", "max_iters"))
+                   static_argnames=("window", "k", "budget", "max_iters",
+                                    "measure"))
 def filtered_topk(Q: jnp.ndarray, X: jnp.ndarray, window: Optional[int],
                   k: int, budget: Optional[int] = None,
                   valid: Optional[jnp.ndarray] = None,
-                  max_iters: Optional[int] = None
+                  max_iters: Optional[int] = None,
+                  measure: MeasureArg = None
                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Exact banded-DTW top-k of ``Q (Nq, L)`` against ``X (N, L)``.
+    """Exact banded elastic top-k of ``Q (Nq, L)`` against ``X (N, L)``.
 
     ``valid`` is an optional ``(N,)`` mask (False rows are never returned).
-    Returns ``(d (Nq, k) squared DTW, idx (Nq, k) int32, n_refined)``:
+    Returns ``(d (Nq, k), idx (Nq, k) int32, n_refined)``:
     distances ascending per query with ``inf`` / ``-1`` filling slots
     beyond the number of valid candidates, and ``n_refined`` the total
-    count of exact DTW evaluations (for pruning statistics).  Requires
-    ``1 <= k <= N``.
+    count of exact elastic evaluations (for pruning statistics).  Requires
+    ``1 <= k <= N``.  Measures without the pruning capabilities take the
+    exact dense fallback (same results; ``n_refined`` counts every valid
+    pair).
     """
     Q = jnp.asarray(Q, jnp.float32)
     X = jnp.asarray(X, jnp.float32)
@@ -68,6 +97,9 @@ def filtered_topk(Q: jnp.ndarray, X: jnp.ndarray, window: Optional[int],
     N = X.shape[0]
     if not 1 <= k <= N:
         raise ValueError(f"k={k} out of range: must satisfy 1 <= k <= {N}")
+    spec = measures.resolve(measure)
+    if not spec.can_prune:
+        return _dense_topk(Q, X, window, k, valid, spec)
     # Per-wave budget: thresholds tighten after every wave, so small waves
     # (a few pairs per query) converge in a handful of launches and waste
     # the least refine work; the cap below bounds the worst (pruning-free)
@@ -78,9 +110,10 @@ def filtered_topk(Q: jnp.ndarray, X: jnp.ndarray, window: Optional[int],
                  else int(max_iters))
 
     # Envelopes around the queries ("reversed" role: one envelope, N bounds
-    # each), clamped so an unbanded search still gets a valid full-width
+    # each), on the library-wide window=None contract (see dispatch
+    # docstring) so an unbanded search still gets a valid full-width
     # envelope.
-    w_env = L - 1 if window is None else min(int(window), L - 1)
+    w_env = effective_window(L, window)
     up, lo = keogh_envelope(Q, w_env)
 
     lbs = jnp.maximum(lb_kim(Q[:, None, :], X[None, :, :]),
@@ -118,7 +151,7 @@ def filtered_topk(Q: jnp.ndarray, X: jnp.ndarray, window: Optional[int],
         c_idx = flat % N
         th = thresh[q_idx]
         d, refined = lb_refine(Q[q_idx], X[c_idx], up[q_idx], lo[q_idx],
-                               th, window)
+                               th, window, measure=spec)
         # the kernel recomputes bounds from the raw series, so mask out
         # deleted rows and pairs a previous iteration already handled
         # (picked again only as filler once finite keys run out)

@@ -1,0 +1,314 @@
+"""Pluggable elastic-measure registry — the measure-generic engine core.
+
+The paper positions PQ as "a highly efficient replacement for elastic
+measures" in general, and the DMKD comparison of Wang et al. (PAPERS.md)
+shows no single elastic measure dominates across datasets.  The only
+measure-specific part of the whole engine is the DP *recurrence step*:
+every cell ``(i, j)`` of the alignment table is
+
+    T[i, j] = min(T[i-1, j-1] + diag_cost,
+                  T[i-1, j  ] + vert_cost,     # consume a_i
+                  T[i,   j-1] + horiz_cost)    # consume b_j
+
+with measure-specific per-move costs (DTW charges the same matching cost
+for all three moves; ERP charges gap penalties off-diagonal; MSM charges
+split/merge costs).  This module owns those per-move costs plus the
+capability flags the rest of the engine keys pruning decisions on; the
+shared anti-diagonal sweeps (:func:`repro.core.dtw._diag_sweep` and
+:func:`repro.kernels.dtw_band.kernel.wavefront_compressed`) consume a
+:class:`MeasureSpec` as a *static* parameter, so one implementation serves
+every measure on every backend.
+
+Shipped measures
+----------------
+
+``dtw``
+    Classic DTW over *squared* pointwise costs (the repo-wide convention).
+    Has a sound reversed-LB_Keogh/LB_Kim cascade and squared Euclidean is
+    a pointwise upper bound, so every pruning path applies.
+
+``wdtw`` (``g``: logistic steepness, default 0.05)
+    Jeong et al.'s weighted DTW: the matching cost is scaled by a logistic
+    weight of the phase difference ``|i - j|``.  The weight here is
+    normalized to ``2 / (1 + exp(-g * (|i-j| - L/2)))`` so the flat limit
+    ``g = 0`` recovers plain DTW *exactly* (weight 1 everywhere).  Weights
+    below 1 near the diagonal make LB_Keogh unsound, so no cascade; with
+    ``g >= 0`` the identity-path weight is <= 1, so squared Euclidean
+    still upper-bounds the distance.
+
+``erp`` (``g``: gap reference value, default 0.0)
+    Chen & Ng's Edit distance with Real Penalty over absolute differences
+    (the norm that makes it a metric): off-diagonal moves pay the distance
+    of the consumed point to the constant gap value ``g``, and the virtual
+    first row/column are prefix sums of gap costs.
+
+``msm`` (``c``: split/merge cost, default 0.5)
+    Stefan et al.'s Move-Split-Merge over absolute differences (a metric):
+    diagonal moves pay the move cost ``|a_i - b_j|``; vertical/horizontal
+    moves pay the split/merge cost ``c`` when the consumed point lies
+    between its two anchors and ``c`` plus the distance to the nearest
+    anchor otherwise.
+
+Registering a new measure is one :func:`register_measure` call: provide
+the per-move cost step (and a gap-cost fn for ERP-style virtual borders)
+and the spec flows through kernels, dispatch, PQ, search and the
+streaming index without touching any of them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple, Union
+
+import jax.numpy as jnp
+
+__all__ = [
+    "MeasureSpec", "MeasureArg", "register_measure", "get_measure",
+    "resolve", "available", "registry_rows", "move_costs", "gap_costs",
+    "DTW",
+]
+
+# What every measure-taking API accepts: None (-> dtw), a registry name
+# with optional parameter suffix ("erp:g=1.5"), or a spec.
+MeasureArg = Union[None, str, "MeasureSpec"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeasureSpec:
+    """Pure-data description of one elastic measure.
+
+    Hashable and comparable by value, so it can ride through ``jax.jit``
+    as a static argument; the behavior (cost step / gap fn) lives in the
+    registry keyed by ``name``, which keeps specs trivially serializable
+    for snapshot manifests.
+
+    ``params`` is a sorted tuple of ``(name, float)`` pairs — the static
+    hyper-parameters of the measure (ERP's gap value, MSM's split cost,
+    WDTW's steepness).
+
+    Capability flags gate which engine paths are *sound*:
+
+    ``has_keogh_lb``
+        ``max(LB_Kim, LB_Keogh)`` lower-bounds the measure, so the LB
+        cascade (filtered_topk, lb_refine, the encode filter, the IVF
+        ``lb_budget`` pre-filter) may prune with it.
+    ``euclid_is_upper_bound``
+        pointwise squared Euclidean distance upper-bounds the measure, so
+        it may seed filter-and-refine thresholds.
+
+    Measures lacking either flag take the exact dense path instead of an
+    unsound prune.
+    """
+    name: str
+    params: Tuple[Tuple[str, float], ...] = ()
+    has_keogh_lb: bool = False
+    euclid_is_upper_bound: bool = False
+    uses_gap_border: bool = False   # ERP-style virtual first row/column
+    uses_neighbors: bool = False    # step needs a_{i-1} / b_{j-1} (MSM)
+    uses_position: bool = False     # step needs |i - j| (WDTW)
+
+    def param(self, key: str) -> float:
+        return dict(self.params)[key]
+
+    @property
+    def label(self) -> str:
+        """Human/bench label: ``dtw``, ``erp(g=1)``, ..."""
+        if not self.params:
+            return self.name
+        inner = ",".join(f"{k}={v:g}" for k, v in self.params)
+        return f"{self.name}({inner})"
+
+    def to_manifest(self) -> dict:
+        """JSON-safe record for snapshot manifests."""
+        return {"name": self.name, "params": dict(self.params)}
+
+    @property
+    def can_prune(self) -> bool:
+        """True when the LB-cascade filter-and-refine path is sound."""
+        return self.has_keogh_lb and self.euclid_is_upper_bound
+
+
+# name -> (spec factory defaults, step fn, gap fn)
+_REGISTRY: Dict[str, dict] = {}
+
+
+def register_measure(name: str, *, step: Callable,
+                     gap: Optional[Callable] = None,
+                     defaults: Tuple[Tuple[str, float], ...] = (),
+                     has_keogh_lb: bool = False,
+                     euclid_is_upper_bound: bool = False,
+                     uses_neighbors: bool = False,
+                     uses_position: bool = False,
+                     doc: str = "") -> None:
+    """Register an elastic measure.
+
+    ``step(params, x, y, xp, yp, dd, length)`` returns the three per-move
+    costs ``(diag, vert, horiz)`` for cells with values ``x = a_i``,
+    ``y = b_j``, predecessors ``xp = a_{i-1}`` / ``yp = b_{j-1}``
+    (sentinel-filled where a move never uses them), integer phase offset
+    ``dd = |i - j|`` and static series length ``length``.  Returning the
+    *same array object* three times marks the shared-cost fast path (DTW
+    family).
+
+    ``gap(params, values)`` — per-element virtual-border gap cost (ERP
+    style); its presence implies the virtual first row/column are prefix
+    sums of it rather than +inf.
+    """
+    _REGISTRY[name] = dict(step=step, gap=gap, defaults=tuple(defaults),
+                           has_keogh_lb=has_keogh_lb,
+                           euclid_is_upper_bound=euclid_is_upper_bound,
+                           uses_neighbors=uses_neighbors,
+                           uses_position=uses_position, doc=doc)
+
+
+def available() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_measure(name: str, **params: float) -> MeasureSpec:
+    """Spec for a registered measure, with keyword parameter overrides."""
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown elastic measure {name!r}; registered: {available()}")
+    entry = _REGISTRY[name]
+    merged = dict(entry["defaults"])
+    for k, v in params.items():
+        if k not in merged:
+            raise ValueError(
+                f"measure {name!r} has no parameter {k!r}; expected "
+                f"{tuple(merged)}")
+        merged[k] = float(v)
+    return MeasureSpec(
+        name=name, params=tuple(sorted(merged.items())),
+        has_keogh_lb=entry["has_keogh_lb"],
+        euclid_is_upper_bound=entry["euclid_is_upper_bound"],
+        uses_gap_border=entry["gap"] is not None,
+        uses_neighbors=entry["uses_neighbors"],
+        uses_position=entry["uses_position"])
+
+
+def resolve(measure: Union[None, str, MeasureSpec]) -> MeasureSpec:
+    """Normalize a measure argument to a spec.
+
+    ``None`` -> the DTW default; a string -> registry lookup, with an
+    optional parameter suffix ``"erp:g=1.5"`` / ``"msm:c=0.1"``; a spec
+    passes through (re-validated against the registry).
+    """
+    if measure is None:
+        return DTW
+    if isinstance(measure, MeasureSpec):
+        if measure.name not in _REGISTRY:
+            raise ValueError(
+                f"measure {measure.name!r} is not registered; call "
+                f"register_measure first (registered: {available()})")
+        return measure
+    name, _, rest = str(measure).partition(":")
+    params = {}
+    if rest:
+        for item in rest.split(","):
+            k, _, v = item.partition("=")
+            params[k.strip()] = float(v)
+    return get_measure(name.strip(), **params)
+
+
+def registry_rows() -> Tuple[dict, ...]:
+    """One summary row per registered measure (docs / benchmarks)."""
+    rows = []
+    for name in available():
+        spec = get_measure(name)
+        rows.append(dict(
+            name=name, params=dict(spec.params),
+            has_keogh_lb=spec.has_keogh_lb,
+            euclid_is_upper_bound=spec.euclid_is_upper_bound,
+            prune_path=("LB cascade" if spec.can_prune
+                        else "exact dense fallback"),
+            doc=_REGISTRY[name]["doc"]))
+    return tuple(rows)
+
+
+# ---------------------------------------------------------------------------
+# Recurrence-step evaluation (called from inside the shared sweeps)
+# ---------------------------------------------------------------------------
+
+def move_costs(spec: MeasureSpec, x, y, xp, yp, dd, length: int):
+    """Per-cell costs of the three DP moves -> ``(diag, vert, horiz)``.
+
+    All array arguments broadcast together; ``xp``/``yp``/``dd`` may be
+    ``None`` when the spec's flags say the step never reads them.
+    """
+    return _REGISTRY[spec.name]["step"](dict(spec.params), x, y, xp, yp,
+                                        dd, length)
+
+
+def gap_costs(spec: MeasureSpec, values):
+    """Per-element gap cost for the virtual first row/column (ERP style).
+
+    Only meaningful when ``spec.uses_gap_border``; the border values are
+    inclusive prefix sums of this array.
+    """
+    gap = _REGISTRY[spec.name]["gap"]
+    if gap is None:
+        raise ValueError(f"measure {spec.name!r} has no gap border")
+    return gap(dict(spec.params), values)
+
+
+# ---------------------------------------------------------------------------
+# Shipped measures
+# ---------------------------------------------------------------------------
+
+def _dtw_step(params, x, y, xp, yp, dd, length):
+    c = (x - y) ** 2
+    return c, c, c   # same object: shared-cost fast path
+
+
+def _wdtw_step(params, x, y, xp, yp, dd, length):
+    # Logistic phase weight, normalized so g = 0 is flat weight 1 (== DTW).
+    g = params["g"]
+    w = 2.0 / (1.0 + jnp.exp(-g * (dd.astype(jnp.float32)
+                                   - 0.5 * float(length))))
+    c = w * (x - y) ** 2
+    return c, c, c
+
+
+def _erp_step(params, x, y, xp, yp, dd, length):
+    g = params["g"]
+    return jnp.abs(x - y), jnp.abs(x - g), jnp.abs(y - g)
+
+
+def _erp_gap(params, values):
+    return jnp.abs(values - params["g"])
+
+
+def _msm_move(new, prev, other, c):
+    """MSM split/merge cost C(new | prev, other)."""
+    inside = (((prev <= new) & (new <= other))
+              | ((prev >= new) & (new >= other)))
+    return jnp.where(inside, c,
+                     c + jnp.minimum(jnp.abs(new - prev),
+                                     jnp.abs(new - other)))
+
+
+def _msm_step(params, x, y, xp, yp, dd, length):
+    c = params["c"]
+    return (jnp.abs(x - y),
+            _msm_move(x, xp, y, c),    # consume a_i after a_{i-1}
+            _msm_move(y, yp, x, c))    # consume b_j after b_{j-1}
+
+
+register_measure(
+    "dtw", step=_dtw_step,
+    has_keogh_lb=True, euclid_is_upper_bound=True,
+    doc="classic DTW, squared pointwise costs")
+register_measure(
+    "wdtw", step=_wdtw_step, defaults=(("g", 0.05),), uses_position=True,
+    euclid_is_upper_bound=True,
+    doc="logistic phase-weighted DTW (g=0 recovers dtw exactly; "
+        "Euclidean upper bound assumes g >= 0)")
+register_measure(
+    "erp", step=_erp_step, gap=_erp_gap, defaults=(("g", 0.0),),
+    doc="edit distance with real penalty (metric, absolute costs)")
+register_measure(
+    "msm", step=_msm_step, defaults=(("c", 0.5),), uses_neighbors=True,
+    doc="move-split-merge (metric, absolute costs)")
+
+DTW = get_measure("dtw")

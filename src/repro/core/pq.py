@@ -28,11 +28,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import measures as measures_mod
 from .dtw import euclidean_sq
 from .dispatch import (adc_cdist, elastic_cdist, elastic_pairwise,
                        prealign_encode)
 from .lb import keogh_envelope, lb_keogh, lb_kim
 from .kmeans import dba_kmeans, euclidean_kmeans
+from .measures import MeasureSpec
 from .modwt import prealign, fixed_segments
 
 __all__ = ["PQConfig", "PQCodebook", "segment", "fit", "encode",
@@ -43,11 +45,19 @@ __all__ = ["PQConfig", "PQCodebook", "segment", "fit", "encode",
 
 @dataclasses.dataclass(frozen=True)
 class PQConfig:
-    """Hyper-parameters of the product quantizer (paper §3 + §5)."""
+    """Hyper-parameters of the product quantizer (paper §3 + §5).
+
+    ``metric`` selects the subspace distance: any registered elastic
+    measure name ("dtw", "wdtw", "erp", "msm", ...) or "euclidean" (the
+    PQ_ED baseline).  ``measure_params`` carries the measure's static
+    hyper-parameters (e.g. ``{"g": 1.0}`` for erp) — normalized to a
+    sorted tuple of pairs so the config stays hashable and JSON-safe.
+    """
     n_sub: int = 8              # M: number of subspaces
     codebook_size: int = 256    # K
     window_frac: float = 0.1    # Sakoe-Chiba band, fraction of subseq length
-    metric: str = "dtw"         # "dtw" (PQDTW) or "euclidean" (PQ_ED baseline)
+    metric: str = "dtw"         # elastic measure name or "euclidean"
+    measure_params: Tuple[Tuple[str, float], ...] = ()
     use_prealign: bool = True   # MODWT pre-alignment (§3.5)
     wavelet_level: int = 3      # J
     tail_frac: float = 0.15     # t, fraction of D/M
@@ -60,9 +70,27 @@ class PQConfig:
     fused_encode: bool = True   # exact prealigned encodes take the fused
                                 # MODWT+encode dispatch path (one kernel)
 
+    def __post_init__(self):
+        params = tuple(sorted((str(k), float(v)) for k, v in
+                              dict(self.measure_params or ()).items()))
+        object.__setattr__(self, "measure_params", params)
+        if self.metric != "euclidean":
+            measures_mod.get_measure(self.metric, **dict(params))  # validate
+
+    @property
+    def is_elastic(self) -> bool:
+        return self.metric != "euclidean"
+
+    def measure(self) -> Optional[MeasureSpec]:
+        """The elastic measure spec, or None under the euclidean baseline."""
+        if not self.is_elastic:
+            return None
+        return measures_mod.get_measure(self.metric,
+                                        **dict(self.measure_params))
+
     def subseq_len(self, D: int) -> int:
         base = D // self.n_sub
-        return base + self.tail(D) if (self.use_prealign and self.metric == "dtw") else base
+        return base + self.tail(D) if (self.use_prealign and self.is_elastic) else base
 
     def tail(self, D: int) -> int:
         if self.snap_tail is not None:
@@ -70,12 +98,23 @@ class PQConfig:
         return max(1, int(round(self.tail_frac * (D // self.n_sub))))
 
     def window(self, D: int) -> Optional[int]:
-        if self.metric != "dtw":
+        if not self.is_elastic:
             return None
         return max(1, int(round(self.window_frac * self.subseq_len(D))))
 
     def refine_t(self) -> int:
         return max(1, int(round(self.refine_frac * self.codebook_size)))
+
+    def full_scan_encode(self) -> bool:
+        """True when encoding is an exact full scan of every centroid:
+        explicitly requested, a refine budget covering the whole codebook,
+        or a measure without a sound LB cascade (the filter-then-refine
+        shortcut would prune incorrectly, so it is capability-gated off).
+        """
+        if self.exact_encode or self.refine_t() >= self.codebook_size:
+            return True
+        spec = self.measure()
+        return spec is not None and not spec.has_keogh_lb
 
 
 class PQCodebook(NamedTuple):
@@ -105,7 +144,7 @@ class PQCodebook(NamedTuple):
 def segment(X: jnp.ndarray, cfg: PQConfig) -> jnp.ndarray:
     """``X (N, D)`` -> ``(N, M, S)`` subsequences (pre-aligned or fixed)."""
     D = X.shape[-1]
-    if cfg.use_prealign and cfg.metric == "dtw":
+    if cfg.use_prealign and cfg.is_elastic:
         return prealign(X, cfg.n_sub, cfg.wavelet_level, cfg.tail(D))
     return fixed_segments(X, cfg.n_sub)
 
@@ -122,14 +161,16 @@ def fit(key: jax.Array, X: jnp.ndarray, cfg: PQConfig) -> PQCodebook:
     window = cfg.window(D)
     keys = jax.random.split(key, cfg.n_sub)
 
+    spec = cfg.measure()
     cents, luts, uppers, lowers = [], [], [], []
     for m in range(cfg.n_sub):
         sub = segs[:, m, :]
-        if cfg.metric == "dtw":
+        if cfg.is_elastic:
             res = dba_kmeans(keys[m], sub, cfg.codebook_size,
                              iters=cfg.kmeans_iters, dba_iters=cfg.dba_iters,
-                             window=window)
-            lut = elastic_cdist(res.centroids, res.centroids, window)
+                             window=window, measure=spec)
+            lut = elastic_cdist(res.centroids, res.centroids, window,
+                                measure=spec)
         else:
             res = euclidean_kmeans(keys[m], sub, cfg.codebook_size,
                                    iters=cfg.kmeans_iters)
@@ -148,29 +189,35 @@ def fit(key: jax.Array, X: jnp.ndarray, cfg: PQConfig) -> PQCodebook:
 # Encoding (Algorithm 2) — vectorized filter-then-refine
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("window", "refine_t", "exact", "euclidean"))
+@functools.partial(jax.jit, static_argnames=("window", "refine_t",
+                                             "full_scan", "measure"))
 def _encode_segs(segs: jnp.ndarray, cb: PQCodebook, window: Optional[int],
-                 refine_t: int, exact: bool, euclidean: bool
+                 refine_t: int, full_scan: bool,
+                 measure: Optional[MeasureSpec]
                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """``segs (N, M, S)`` -> codes ``(N, M)`` int32 + soundness flags.
 
-    All exact-DTW refinements across the whole (series x subspace x
+    ``measure=None`` selects the euclidean baseline.  All exact elastic
+    refinements across the whole (series x subspace x
     candidate) set are flattened into ONE zipped-pair batch through the
     dispatch layer, so the Pallas wavefront kernel sees a single large
-    launch instead of N*M tiny ones.
+    launch instead of N*M tiny ones.  The LB filter-then-refine shortcut
+    only runs for measures with a sound Keogh cascade; ``full_scan`` (see
+    ``PQConfig.full_scan_encode``) covers the rest.
     """
     N, M, S = segs.shape
     K = cb.codebook_size
 
-    if euclidean:
+    if measure is None:
         d = jnp.sum((segs[:, :, None, :] - cb.centroids[None]) ** 2, -1)
         return jnp.argmin(d, -1).astype(jnp.int32), jnp.ones((N, M), bool)
 
-    if exact or refine_t >= K:
+    if full_scan:
         # Full scan: per-subspace all-pairs launches — the cdist kernel
         # broadcasts centroids per tile, so nothing of size N*K*S is ever
         # materialized.
-        d = jnp.stack([elastic_cdist(segs[:, m], cb.centroids[m], window)
+        d = jnp.stack([elastic_cdist(segs[:, m], cb.centroids[m], window,
+                                     measure=measure)
                        for m in range(M)], axis=1)           # (N, M, K)
         return jnp.argmin(d, -1).astype(jnp.int32), jnp.ones((N, M), bool)
 
@@ -184,7 +231,7 @@ def _encode_segs(segs: jnp.ndarray, cb: PQCodebook, window: Optional[int],
     qs = jnp.broadcast_to(segs[:, :, None, :], (N, M, T, S))
     cs = cb.centroids[jnp.arange(M)[None, :, None], cand]    # (N, M, T, S)
     d = elastic_pairwise(qs.reshape(-1, S), cs.reshape(-1, S),
-                         window).reshape(N, M, T)
+                         window, measure=measure).reshape(N, M, T)
     best = jnp.argmin(d, -1)                                 # (N, M)
     codes = jnp.take_along_axis(
         cand, best[..., None], -1)[..., 0].astype(jnp.int32)
@@ -198,11 +245,11 @@ def _encode_segs(segs: jnp.ndarray, cb: PQCodebook, window: Optional[int],
 
 def uses_fused_prealign(cfg: PQConfig) -> bool:
     """True when :func:`encode` takes the fused prealign+encode dispatch
-    path: DTW metric, pre-alignment on, and an exact (full-scan) encode —
-    the LB filter-then-refine route still needs materialized segments and
-    envelopes, so it stays on the two-step."""
-    return (cfg.fused_encode and cfg.use_prealign and cfg.metric == "dtw"
-            and (cfg.exact_encode or cfg.refine_t() >= cfg.codebook_size))
+    path: an elastic metric, pre-alignment on, and an exact (full-scan)
+    encode — the LB filter-then-refine route still needs materialized
+    segments and envelopes, so it stays on the two-step."""
+    return (cfg.fused_encode and cfg.use_prealign and cfg.is_elastic
+            and cfg.full_scan_encode())
 
 
 def encode(X: jnp.ndarray, cb: PQCodebook, cfg: PQConfig) -> jnp.ndarray:
@@ -218,11 +265,12 @@ def encode_with_stats(X: jnp.ndarray, cb: PQCodebook, cfg: PQConfig
     D = X.shape[-1]
     if uses_fused_prealign(cfg):
         codes = prealign_encode(X, cb.centroids, level=cfg.wavelet_level,
-                                tail=cfg.tail(D), window=cfg.window(D))
+                                tail=cfg.tail(D), window=cfg.window(D),
+                                measure=cfg.measure())
         return codes, jnp.ones(codes.shape, bool)   # full scan: always exact
     segs = segment(X, cfg)
     return _encode_segs(segs, cb, cfg.window(D), cfg.refine_t(),
-                        cfg.exact_encode, cfg.metric != "dtw")
+                        cfg.full_scan_encode(), cfg.measure())
 
 
 # ---------------------------------------------------------------------------
@@ -240,17 +288,22 @@ def cdist_sym(codes_a: jnp.ndarray, codes_b: jnp.ndarray,
     return adc_cdist(codes_a, codes_b, lut)
 
 
-@functools.partial(jax.jit, static_argnames=("window", "euclidean"))
+@functools.partial(jax.jit, static_argnames=("window", "euclidean",
+                                             "measure"))
 def query_lut(q_segs: jnp.ndarray, cb: PQCodebook, window: Optional[int],
-              euclidean: bool = False) -> jnp.ndarray:
-    """Asymmetric query table: ``q_segs (M, S)`` -> ``(M, K)`` squared dists."""
-    return query_lut_batch(q_segs[None], cb, window, euclidean)[0]
+              euclidean: bool = False,
+              measure: Optional[MeasureSpec] = None) -> jnp.ndarray:
+    """Asymmetric query table: ``q_segs (M, S)`` -> ``(M, K)`` subspace
+    distances under the configured measure."""
+    return query_lut_batch(q_segs[None], cb, window, euclidean, measure)[0]
 
 
-@functools.partial(jax.jit, static_argnames=("window", "euclidean"))
+@functools.partial(jax.jit, static_argnames=("window", "euclidean",
+                                             "measure"))
 def query_lut_batch(q_segs: jnp.ndarray, cb: PQCodebook,
                     window: Optional[int],
-                    euclidean: bool = False) -> jnp.ndarray:
+                    euclidean: bool = False,
+                    measure: Optional[MeasureSpec] = None) -> jnp.ndarray:
     """Batched asymmetric tables: ``q_segs (Nq, M, S)`` -> ``(Nq, M, K)``.
 
     One all-pairs dispatch launch per subspace; the cdist kernel broadcasts
@@ -261,7 +314,8 @@ def query_lut_batch(q_segs: jnp.ndarray, cb: PQCodebook,
     if euclidean:
         return jnp.sum(
             (q_segs[:, :, None, :] - cb.centroids[None]) ** 2, -1)
-    return jnp.stack([elastic_cdist(q_segs[:, m], cb.centroids[m], window)
+    return jnp.stack([elastic_cdist(q_segs[:, m], cb.centroids[m], window,
+                                    measure=measure)
                       for m in range(M)], axis=1)
 
 
@@ -279,8 +333,8 @@ def cdist_asym(Q: jnp.ndarray, codes: jnp.ndarray, cb: PQCodebook,
     Q = jnp.asarray(Q, jnp.float32)
     D = Q.shape[-1]
     q_segs = segment(Q, cfg)                     # (Nq, M, S)
-    euc = cfg.metric != "dtw"
-    luts = query_lut_batch(q_segs, cb, cfg.window(D), euc)
+    luts = query_lut_batch(q_segs, cb, cfg.window(D), not cfg.is_elastic,
+                           cfg.measure())
     return jax.vmap(lambda ql: _adc_gather(ql, codes))(luts)
 
 

@@ -8,6 +8,12 @@ the snapshot — a crash mid-write never corrupts the latest restorable
 state.  The manifest carries the full :class:`IndexConfig` (including the
 nested :class:`PQConfig`) plus per-segment static metadata, so restore
 needs no out-of-band configuration and works on any device topology.
+
+Format 2 additionally records the elastic measure (name + params) as a
+dedicated manifest entry and *validates* it on restore: an unregistered
+measure name or a record that disagrees with the embedded config is a
+hard error — codes in the snapshot were produced under that measure, so
+silently reinterpreting them under another would corrupt every distance.
 """
 
 from __future__ import annotations
@@ -30,7 +36,8 @@ from .streaming import IndexConfig, StreamingIndex
 __all__ = ["save_snapshot", "restore_snapshot", "latest_snapshot"]
 
 _PREFIX = "snap_"
-_FORMAT = 1
+_FORMAT = 2
+_SUPPORTED_FORMATS = (1, 2)   # 1 = pre-measure-registry snapshots (DTW)
 
 
 def _name(step: int) -> str:
@@ -76,10 +83,12 @@ def save_snapshot(directory: str, index: StreamingIndex,
 
     cfg = dataclasses.asdict(index.cfg)
     cfg["pq"] = dataclasses.asdict(index.cfg.pq)
+    spec = index.cfg.pq.measure()
     write_manifest(tmp, {
         "format": _FORMAT,
         "step": step,
         "config": cfg,
+        "measure": None if spec is None else spec.to_manifest(),
         "dim": index.dim,
         "next_id": index.next_id,
         "hot_count": index.hot.count,
@@ -89,6 +98,24 @@ def save_snapshot(directory: str, index: StreamingIndex,
     final = commit_atomic_dir(tmp, directory, _name(step))
     gc_numbered_dirs(directory, keep_last, _PREFIX)
     return final
+
+
+def _validate_measure(manifest: dict, cfg: IndexConfig) -> None:
+    """Hard-fail on a measure mismatch between the dedicated manifest
+    record and the embedded config (and on unregistered measure names) —
+    the snapshot's codes/LUTs are only meaningful under the measure that
+    produced them.  Format-1 snapshots predate the record and carry their
+    measure solely in the config (validated by PQConfig itself)."""
+    if manifest["format"] < 2:
+        return
+    recorded = manifest.get("measure")
+    spec = cfg.pq.measure()   # raises for unregistered names
+    expected = None if spec is None else spec.to_manifest()
+    if recorded != expected:
+        raise ValueError(
+            f"snapshot measure record {recorded!r} does not match the "
+            f"snapshot config's measure {expected!r} — refusing to restore "
+            "(codes/LUTs are bound to the measure that built them)")
 
 
 def restore_snapshot(directory: str, step: Optional[int] = None
@@ -103,15 +130,20 @@ def restore_snapshot(directory: str, step: Optional[int] = None
     d = os.path.join(directory, _name(step))
     with open(os.path.join(d, MANIFEST)) as f:
         manifest = json.load(f)
-    if manifest["format"] != _FORMAT:
+    if manifest["format"] not in _SUPPORTED_FORMATS:
         raise ValueError(
-            f"snapshot format {manifest['format']} != expected {_FORMAT}")
+            f"snapshot format {manifest['format']} not in supported "
+            f"{_SUPPORTED_FORMATS}")
 
     def load(name: str) -> np.ndarray:
         return np.load(os.path.join(d, f"{name}.npy"))
 
     cfg_d = dict(manifest["config"])
+    cfg_d["pq"] = dict(cfg_d["pq"])
+    cfg_d["pq"]["measure_params"] = [
+        tuple(p) for p in cfg_d["pq"].get("measure_params", [])]
     cfg = IndexConfig(**{**cfg_d, "pq": PQConfig(**cfg_d["pq"])})
+    _validate_measure(manifest, cfg)
     cb = PQCodebook(jnp.asarray(load("cb_centroids")),
                     jnp.asarray(load("cb_lut")),
                     jnp.asarray(load("cb_env_upper")),

@@ -70,24 +70,30 @@ def _rank_segment(codes, ids, live, list_start, list_len, dc, qluts, *,
     return jax.vmap(fn)(dc, qluts)
 
 
-@functools.partial(jax.jit, static_argnames=("window", "k", "euclidean"))
-def _scan_hot(data, ids, live, Q, *, window: int, k: int, euclidean: bool):
+@functools.partial(jax.jit, static_argnames=("window", "k", "euclidean",
+                                             "measure"))
+def _scan_hot(data, ids, live, Q, *, window: int, k: int, euclidean: bool,
+              measure=None):
     """Exact scan of the hot buffer -> ``(Nq, k)`` d, ids.
 
-    Banded DTW under the PQDTW metric, squared Euclidean under the PQ_ED
+    The configured elastic measure under PQDTW-style metrics, squared
+    Euclidean under the PQ_ED
     baseline — matching the metric the sealed segments' LUTs encode, so
-    hot and sealed distances stay order-compatible in the merge.  The DTW
-    path runs the LB-cascade filter-and-refine top-k
+    hot and sealed distances stay order-compatible in the merge.  The
+    elastic path runs the LB-cascade filter-and-refine top-k
     (:func:`repro.core.lb_search.filtered_topk`): every (query, hot row)
     pair is bounded cheaply and only candidates the cascade cannot exclude
-    reach the exact banded-DTW wavefront — same distances, fewer DTWs."""
+    reach the exact banded wavefront — same distances, fewer sweeps.
+    Measures without the pruning capabilities take its exact dense
+    fallback automatically."""
     if euclidean:
         d2 = euclidean_sq(Q, data)
         dh = jnp.sqrt(jnp.maximum(d2, 0.0))
         dh = jnp.where(live[None, :], dh, jnp.inf)           # (Nq, cap)
         neg, idx = jax.lax.top_k(-dh, k)
         return -neg, jnp.where(jnp.isfinite(neg), ids[idx], -1)
-    d2, idx, _ = filtered_topk(Q, data, window, k, valid=live)
+    d2, idx, _ = filtered_topk(Q, data, window, k, valid=live,
+                               measure=measure)
     dh = jnp.sqrt(jnp.maximum(d2, 0.0))
     return dh, jnp.where(idx >= 0, ids[jnp.maximum(idx, 0)], -1)
 
@@ -131,12 +137,13 @@ def search_impl(coarse: jnp.ndarray, cb: PQCodebook,
     Q = jnp.asarray(Q, jnp.float32)
     parts_d, parts_i = [], []
 
+    spec = icfg.pq.measure()
     if segs:
         w = icfg.coarse_window(dim)
-        dc = elastic_cdist(Q, coarse, w)                     # (Nq, n_lists)
+        dc = elastic_cdist(Q, coarse, w, measure=spec)       # (Nq, n_lists)
         qluts = query_lut_batch(segment(Q, icfg.pq), cb,
                                 icfg.pq.window(dim),
-                                icfg.pq.metric != "dtw")     # (Nq, M, K)
+                                not icfg.pq.is_elastic, spec)  # (Nq, M, K)
         for sg in segs:
             k = min(topk, n_probe * sg.max_list)
             if k < 1:
@@ -153,7 +160,8 @@ def search_impl(coarse: jnp.ndarray, cb: PQCodebook,
         d, i = _scan_hot(data, ids, live, Q,
                          window=icfg.coarse_window(dim),
                          k=min(topk, data.shape[0]),
-                         euclidean=icfg.pq.metric != "dtw")
+                         euclidean=not icfg.pq.is_elastic,
+                         measure=spec)
         parts_d.append(d)
         parts_i.append(i)
 
@@ -220,7 +228,8 @@ class StreamingIndex:
         D = X_train.shape[-1]
         kc, kf = jax.random.split(key)
         res = dba_kmeans(kc, X_train, cfg.n_lists, iters=cfg.coarse_iters,
-                         dba_iters=1, window=cfg.coarse_window(D))
+                         dba_iters=1, window=cfg.coarse_window(D),
+                         measure=cfg.pq.measure())
         cb = fit(kf, X_train, cfg.pq)
         return cls(cfg, res.centroids, cb, D)
 
@@ -295,7 +304,8 @@ class StreamingIndex:
         Xj = jnp.asarray(rows)
         codes = np.asarray(encode(Xj, self.cb, self.cfg.pq))
         assign = np.asarray(coarse_assign(
-            Xj, self.coarse, self.cfg.coarse_window(self.dim)))
+            Xj, self.coarse, self.cfg.coarse_window(self.dim),
+            self.cfg.pq.measure()))
         cap = self.cfg.hot_capacity
         self._add_segment(seal(codes, ids, assign, self.cfg.n_lists,
                                rows=cap, max_list=cap))

@@ -35,6 +35,13 @@ TPU notes (both kernels):
     pre-padded copy of ``b`` (built once per tile) — no scatter/gather ops;
   * the band geometry is integer arithmetic on the loop counter, so shapes
     never depend on data.
+
+Measure-generic: the band-compressed sweep takes a static
+:class:`repro.core.measures.MeasureSpec` whose per-move costs are inlined
+into the wavefront step, so one kernel body serves DTW, WDTW, ERP and MSM
+(plus anything registered later).  ERP-style virtual first rows/columns
+are prefix sums of gap costs, sliced per diagonal exactly like the series
+values.  The legacy full-width kernel stays DTW-only.
 """
 
 from __future__ import annotations
@@ -45,6 +52,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from ...core import measures
+from ...core.dispatch import effective_window
+from ...core.measures import MeasureArg
 
 __all__ = [
     "dtw_band_kernel",
@@ -112,16 +123,36 @@ def dtw_band_kernel(a_ref, b_ref, o_ref, *, length: int, window: int,
 # Band-compressed kernel
 # ---------------------------------------------------------------------------
 
+def _prefix_sum(x: jnp.ndarray, length: int) -> jnp.ndarray:
+    """Inclusive prefix sum along axis 1 — log-depth shifted adds (rolls +
+    masks only, so it lowers inside a Pallas kernel body; no cumsum
+    primitive)."""
+    t = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    shift = 1
+    while shift < length:
+        x = x + jnp.where(t >= shift, jnp.roll(x, shift, axis=1), 0.0)
+        shift *= 2
+    return x
+
+
 def wavefront_compressed(a: jnp.ndarray, b: jnp.ndarray, *, length: int,
-                         window: int, width: int) -> jnp.ndarray:
+                         window: int, width: int,
+                         measure: MeasureArg = None) -> jnp.ndarray:
     """Band-compressed anti-diagonal sweep over zipped pair *arrays*.
 
-    ``a (rows, L)`` vs ``b (rows, L)`` -> ``(rows, 1)`` squared banded DTW.
-    This is the in-register DP shared by :func:`dtw_band_compressed_kernel`
-    and the fused pre-align+encode kernel (which calls it on segment x
-    centroid pairs it has just built in VMEM) — everything stays
-    ``(rows, width)`` with ``width ~ window + 1``.
+    ``a (rows, L)`` vs ``b (rows, L)`` -> ``(rows, 1)`` banded elastic cost
+    under ``measure`` (squared banded DTW by default).  This is the
+    in-register DP shared by :func:`dtw_band_compressed_kernel`, the fused
+    LB-cascade refine and the fused pre-align+encode kernel (which calls it
+    on segment x centroid pairs it has just built in VMEM) — everything
+    stays ``(rows, width)`` with ``width ~ window + 1``.
+
+    The measure spec is static: its per-move costs are inlined into the
+    step, and ERP-style measures additionally thread their virtual first
+    row/column (prefix sums of gap costs, sliced per diagonal exactly like
+    the series values) through the same sweep.
     """
+    spec = measures.resolve(measure)
     L, w, W = length, window, width
     rows = a.shape[0]
 
@@ -136,6 +167,27 @@ def wavefront_compressed(a: jnp.ndarray, b: jnp.ndarray, *, length: int,
     pad = jnp.zeros((rows, W), jnp.float32)
     a_pad = jnp.concatenate([a, pad], axis=1)
     b_rev_pad = jnp.concatenate([jnp.flip(b, axis=1), pad], axis=1)
+
+    if spec.uses_neighbors:
+        # a_{i-1} / b_{j-1} values (sentinel = element 0 at the borders,
+        # where the corresponding move reads an inf predecessor anyway)
+        a_prev = jnp.concatenate([a[:, :1], a[:, :-1]], axis=1)
+        b_prev = jnp.concatenate([b[:, :1], b[:, :-1]], axis=1)
+        a_prev_pad = jnp.concatenate([a_prev, pad], axis=1)
+        b_prev_rev_pad = jnp.concatenate([jnp.flip(b_prev, axis=1), pad],
+                                         axis=1)
+    if spec.uses_gap_border:
+        # virtual first column/row: T[i, -1] = ga[i], T[-1, j] = gb[j]
+        ga = _prefix_sum(measures.gap_costs(spec, a), L)
+        gb = _prefix_sum(measures.gap_costs(spec, b), L)
+        zero = jnp.zeros((rows, 1), jnp.float32)
+        ga_prev = jnp.concatenate([zero, ga[:, :-1]], axis=1)
+        gb_prev = jnp.concatenate([zero, gb[:, :-1]], axis=1)
+        ga_pad = jnp.concatenate([ga, pad], axis=1)
+        ga_prev_pad = jnp.concatenate([ga_prev, pad], axis=1)
+        gb_rev_pad = jnp.concatenate([jnp.flip(gb, axis=1), pad], axis=1)
+        gb_prev_rev_pad = jnp.concatenate([jnp.flip(gb_prev, axis=1), pad],
+                                          axis=1)
 
     def lo_of(d):
         # max(0, d - (L-1), ceil((d - w) / 2)); jnp // is floor division.
@@ -154,16 +206,45 @@ def wavefront_compressed(a: jnp.ndarray, b: jnp.ndarray, *, length: int,
         hi = jnp.minimum(jnp.minimum(L - 1, d), (d + w) // 2)
         s1 = lo - lo_of(d - 1)
         s2 = lo - lo_of(d - 2) - 1
+        off_b = L - 1 - d + lo
 
         av = jax.lax.dynamic_slice_in_dim(a_pad, lo, W, axis=1)
-        bv = jax.lax.dynamic_slice_in_dim(b_rev_pad, L - 1 - d + lo, W,
-                                          axis=1)
-        cost = (av - bv) ** 2
+        bv = jax.lax.dynamic_slice_in_dim(b_rev_pad, off_b, W, axis=1)
+        i_arr = lo + t
+        xp = (jax.lax.dynamic_slice_in_dim(a_prev_pad, lo, W, axis=1)
+              if spec.uses_neighbors else None)
+        yp = (jax.lax.dynamic_slice_in_dim(b_prev_rev_pad, off_b, W, axis=1)
+              if spec.uses_neighbors else None)
+        dd = jnp.abs(2 * i_arr - d) if spec.uses_position else None
+        c_d, c_v, c_h = measures.move_costs(spec, av, bv, xp, yp, dd, L)
 
-        best = jnp.minimum(jnp.minimum(read(prev2, s2), read(prev1, s1)),
-                           read(prev1, s1 - 1))
-        best = jnp.where((t == 0) & (d == 0), 0.0, best)
-        diag = jnp.where(t <= hi - lo, cost + best, inf)
+        # Predecessor slots (see module header): horiz (i, j-1) at t + s1
+        # on d-1, vert (i-1, j) at t + s1 - 1 on d-1, diag (i-1, j-1) at
+        # t + s2 on d-2.
+        pred_h = read(prev1, s1)
+        pred_v = read(prev1, s1 - 1)
+        pred_d = read(prev2, s2)
+        is_i0 = i_arr == 0
+        is_j0 = (d - i_arr) == 0
+        if spec.uses_gap_border:
+            ga_v = jax.lax.dynamic_slice_in_dim(ga_pad, lo, W, axis=1)
+            gap_v = jax.lax.dynamic_slice_in_dim(ga_prev_pad, lo, W, axis=1)
+            gb_v = jax.lax.dynamic_slice_in_dim(gb_rev_pad, off_b, W, axis=1)
+            gbp_v = jax.lax.dynamic_slice_in_dim(gb_prev_rev_pad, off_b, W,
+                                                 axis=1)
+            pred_d = jnp.where(is_i0, gbp_v, jnp.where(is_j0, gap_v, pred_d))
+            pred_d = jnp.where(is_i0 & is_j0, 0.0, pred_d)
+            pred_v = jnp.where(is_i0, gb_v, pred_v)
+            pred_h = jnp.where(is_j0, ga_v, pred_h)
+        else:
+            # Base case: cell (0, 0) starts from 0 via the diagonal move.
+            pred_d = jnp.where(is_i0 & is_j0, 0.0, pred_d)
+        if c_v is c_d and c_h is c_d:   # shared-cost family (DTW, WDTW)
+            cell = c_d + jnp.minimum(jnp.minimum(pred_d, pred_h), pred_v)
+        else:
+            cell = jnp.minimum(jnp.minimum(pred_d + c_d, pred_v + c_v),
+                               pred_h + c_h)
+        diag = jnp.where(t <= hi - lo, cell, inf)
         diag = jnp.minimum(diag, inf)
         return diag, prev1
 
@@ -175,7 +256,8 @@ def wavefront_compressed(a: jnp.ndarray, b: jnp.ndarray, *, length: int,
 
 def dtw_band_compressed_kernel(a_ref, b_ref, o_ref, *, length: int,
                                window: int, block: int, width: int,
-                               broadcast_b: bool = False):
+                               broadcast_b: bool = False,
+                               measure: MeasureArg = None):
     """Kernel body: ``a_ref (block, L)`` and ``b_ref (block, L)`` (or
     ``(1, L)`` with ``broadcast_b``) -> ``o_ref (block, 1)``.
 
@@ -187,7 +269,7 @@ def dtw_band_compressed_kernel(a_ref, b_ref, o_ref, *, length: int,
     if broadcast_b:
         b = jnp.broadcast_to(b, (block, length))
     o_ref[...] = wavefront_compressed(a, b, length=length, window=window,
-                                      width=width)
+                                      width=width, measure=measure)
 
 
 # ---------------------------------------------------------------------------
@@ -196,22 +278,28 @@ def dtw_band_compressed_kernel(a_ref, b_ref, o_ref, *, length: int,
 
 def make_dtw_band_call(n_pairs: int, length: int, window: Optional[int],
                        block: int, interpret: bool, mode: str = "compressed",
-                       lane: int = 8):
+                       lane: int = 8, measure: MeasureArg = None):
     """Build the pallas_call for ``(n_pairs, L)`` zipped pair batches.
 
     ``n_pairs`` must already be padded to a multiple of ``block``.
     ``mode`` selects the band-compressed sweep (default) or the legacy
-    full-width sweep (benchmark baseline).
+    full-width sweep (DTW-only benchmark baseline).
     """
-    w = length if window is None else int(window)
+    spec = measures.resolve(measure)
+    w = effective_window(length, window)
     grid = (n_pairs // block,)
     if mode == "full":
+        if spec.name != "dtw":
+            raise ValueError(
+                "mode='full' is the legacy DTW-only benchmark baseline; "
+                f"measure {spec.name!r} requires mode='compressed'")
         kernel = functools.partial(dtw_band_kernel, length=length, window=w,
                                    block=block)
     elif mode == "compressed":
         kernel = functools.partial(dtw_band_compressed_kernel, length=length,
                                    window=w, block=block,
-                                   width=band_width(length, w, lane))
+                                   width=band_width(length, w, lane),
+                                   measure=spec)
     else:
         raise ValueError(f"unknown dtw_band mode: {mode!r}")
     return pl.pallas_call(
@@ -229,7 +317,8 @@ def make_dtw_band_call(n_pairs: int, length: int, window: Optional[int],
 
 def make_dtw_band_cdist_call(n_a: int, n_b: int, length: int,
                              window: Optional[int], block_a: int,
-                             interpret: bool, lane: int = 8):
+                             interpret: bool, lane: int = 8,
+                             measure: MeasureArg = None):
     """All-pairs call on a 2-D grid: ``A (n_a, L) x B (n_b, L) -> (n_a, n_b)``.
 
     Each grid step sweeps ``block_a`` rows of A against ONE row of B
@@ -237,11 +326,12 @@ def make_dtw_band_cdist_call(n_a: int, n_b: int, length: int,
     materialized in HBM.  ``n_a`` must be padded to a multiple of
     ``block_a``.
     """
-    w = length if window is None else int(window)
+    w = effective_window(length, window)
     kernel = functools.partial(dtw_band_compressed_kernel, length=length,
                                window=w, block=block_a,
                                width=band_width(length, w, lane),
-                               broadcast_b=True)
+                               broadcast_b=True,
+                               measure=measures.resolve(measure))
     return pl.pallas_call(
         kernel,
         grid=(n_a // block_a, n_b),

@@ -1,4 +1,4 @@
-"""Jitted public wrappers for the banded-DTW Pallas kernels."""
+"""Jitted public wrappers for the banded elastic-measure Pallas kernels."""
 
 from __future__ import annotations
 
@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from ..common import default_interpret, pad_to
-from .kernel import make_dtw_band_call, make_dtw_band_cdist_call
+from .kernel import MeasureArg, make_dtw_band_call, make_dtw_band_cdist_call
 
 __all__ = ["dtw_band", "dtw_band_cdist"]
 
@@ -23,16 +23,19 @@ def _default_lane() -> int:
 
 @functools.partial(jax.jit,
                    static_argnames=("window", "block", "interpret", "mode",
-                                    "lane"))
+                                    "lane", "measure"))
 def dtw_band(A: jnp.ndarray, B: jnp.ndarray, window: Optional[int] = None,
              block: int = 8, interpret: Optional[bool] = None,
              mode: str = "compressed",
-             lane: Optional[int] = None) -> jnp.ndarray:
-    """Squared banded DTW over zipped pairs: ``A (N, L)``, ``B (N, L)`` -> ``(N,)``.
+             lane: Optional[int] = None,
+             measure: MeasureArg = None) -> jnp.ndarray:
+    """Banded elastic cost over zipped pairs: ``A (N, L)``, ``B (N, L)`` ->
+    ``(N,)`` (squared banded DTW under the default measure).
 
     ``mode="compressed"`` (default) runs the band-compressed wavefront whose
     per-step cost scales with the Sakoe-Chiba band; ``mode="full"`` runs the
-    legacy full-width sweep (kept as the benchmark baseline).
+    legacy full-width sweep (kept as the DTW-only benchmark baseline).
+    ``measure`` selects any registered elastic measure (static).
     """
     if interpret is None:
         interpret = default_interpret()
@@ -44,18 +47,20 @@ def dtw_band(A: jnp.ndarray, B: jnp.ndarray, window: Optional[int] = None,
     Ap = pad_to(A, block, axis=0)
     Bp = pad_to(B, block, axis=0)
     call = make_dtw_band_call(Ap.shape[0], L, window, block, interpret,
-                              mode=mode, lane=lane)
+                              mode=mode, lane=lane, measure=measure)
     out = call(Ap, Bp)
     return out[:n, 0]
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("window", "block", "interpret", "lane"))
+                   static_argnames=("window", "block", "interpret", "lane",
+                                    "measure"))
 def dtw_band_cdist(A: jnp.ndarray, B: jnp.ndarray,
                    window: Optional[int] = None, block: int = 8,
                    interpret: Optional[bool] = None,
-                   lane: Optional[int] = None) -> jnp.ndarray:
-    """All-pairs squared banded DTW: ``A (N, L)``, ``B (M, L)`` -> ``(N, M)``.
+                   lane: Optional[int] = None,
+                   measure: MeasureArg = None) -> jnp.ndarray:
+    """All-pairs banded elastic cost: ``A (N, L)``, ``B (M, L)`` -> ``(N, M)``.
 
     Runs the band-compressed kernel on a 2-D grid (A row-blocks x B rows);
     the N*M cross-product is never materialized — B rows are broadcast
@@ -71,5 +76,5 @@ def dtw_band_cdist(A: jnp.ndarray, B: jnp.ndarray,
     M = B.shape[0]
     Ap = pad_to(A, block, axis=0)
     call = make_dtw_band_cdist_call(Ap.shape[0], M, L, window, block,
-                                    interpret, lane=lane)
+                                    interpret, lane=lane, measure=measure)
     return call(Ap, B)[:N]

@@ -1,6 +1,7 @@
-"""Pure-jnp oracle for the banded-DTW kernel (independent of the Pallas path
-— delegates to the core wavefront implementation, which is itself validated
-against an O(L^2) numpy DP oracle in tests/test_dtw.py)."""
+"""Pure-jnp oracle for the banded elastic kernels (independent of the Pallas
+path — delegates to the core wavefront implementation, which is itself
+validated against O(L^2) numpy DP oracles in tests/test_dtw.py and
+tests/test_measures.py)."""
 
 from __future__ import annotations
 
@@ -8,16 +9,18 @@ from typing import Optional
 
 import jax.numpy as jnp
 
-from ...core.dtw import dtw_batch, dtw_cdist
+from ...core.dtw import MeasureArg, dtw_batch, dtw_cdist
 
 __all__ = ["dtw_band_ref", "dtw_band_cdist_ref"]
 
 
 def dtw_band_ref(A: jnp.ndarray, B: jnp.ndarray,
-                 window: Optional[int] = None) -> jnp.ndarray:
-    return dtw_batch(A, B, window)
+                 window: Optional[int] = None,
+                 measure: MeasureArg = None) -> jnp.ndarray:
+    return dtw_batch(A, B, window, measure)
 
 
 def dtw_band_cdist_ref(A: jnp.ndarray, B: jnp.ndarray,
-                       window: Optional[int] = None) -> jnp.ndarray:
-    return dtw_cdist(A, B, window)
+                       window: Optional[int] = None,
+                       measure: MeasureArg = None) -> jnp.ndarray:
+    return dtw_cdist(A, B, window, measure=measure)

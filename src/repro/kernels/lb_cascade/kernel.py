@@ -34,14 +34,17 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ...core.dispatch import effective_window
 from ...core.lb import lb_keogh, lb_kim
+from ...core.measures import MeasureArg
 from ..dtw_band.kernel import band_width, wavefront_compressed
 
 __all__ = ["lb_cascade_kernel", "make_lb_refine_call"]
 
 
 def lb_cascade_kernel(a_ref, b_ref, u_ref, l_ref, t_ref, d_ref, f_ref, *,
-                      length: int, window: int, block: int, width: int):
+                      length: int, window: int, block: int, width: int,
+                      measure: MeasureArg = None):
     """``a_ref (block, L)`` queries, ``b_ref (block, L)`` candidates,
     ``u_ref``/``l_ref (block, L)`` query envelopes, ``t_ref (block, 1)``
     thresholds -> ``d_ref (block, 1)`` distances, ``f_ref (block, 1)``
@@ -59,7 +62,7 @@ def lb_cascade_kernel(a_ref, b_ref, u_ref, l_ref, t_ref, d_ref, f_ref, *,
 
     def refine(_):
         return wavefront_compressed(a, b, length=length, window=window,
-                                    width=width)
+                                    width=width, measure=measure)
 
     def skip(_):
         return jnp.zeros((block, 1), jnp.float32)
@@ -70,15 +73,17 @@ def lb_cascade_kernel(a_ref, b_ref, u_ref, l_ref, t_ref, d_ref, f_ref, *,
 
 
 def make_lb_refine_call(n_pairs: int, length: int, window: Optional[int],
-                        block: int, interpret: bool, lane: int = 8):
+                        block: int, interpret: bool, lane: int = 8,
+                        measure: MeasureArg = None):
     """Build the pallas_call over ``(n_pairs, L)`` zipped pair batches.
 
     ``n_pairs`` must already be padded to a multiple of ``block``.
     """
-    w = length if window is None else int(window)
+    w = effective_window(length, window)
     kernel = functools.partial(lb_cascade_kernel, length=length, window=w,
                                block=block,
-                               width=band_width(length, w, lane))
+                               width=band_width(length, w, lane),
+                               measure=measure)
     row_spec = pl.BlockSpec((block, length), lambda i: (i, 0))
     out_spec = pl.BlockSpec((block, 1), lambda i: (i, 0))
     return pl.pallas_call(

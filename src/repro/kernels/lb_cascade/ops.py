@@ -8,6 +8,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ...core.measures import MeasureArg
 from ..common import default_interpret, pad_to
 from .kernel import make_lb_refine_call
 
@@ -21,12 +22,14 @@ def _default_lane() -> int:
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("window", "block", "interpret", "lane"))
+                   static_argnames=("window", "block", "interpret", "lane",
+                                    "measure"))
 def lb_refine(A: jnp.ndarray, B: jnp.ndarray, upper: jnp.ndarray,
               lower: jnp.ndarray, thresh: jnp.ndarray,
               window: Optional[int] = None, block: int = 8,
               interpret: Optional[bool] = None,
-              lane: Optional[int] = None
+              lane: Optional[int] = None,
+              measure: MeasureArg = None
               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Cascaded bound + conditional banded-DTW refine over zipped pairs.
 
@@ -52,6 +55,6 @@ def lb_refine(A: jnp.ndarray, B: jnp.ndarray, upper: jnp.ndarray,
     Tp = pad_to(jnp.asarray(thresh, jnp.float32).reshape(-1, 1), block,
                 axis=0, value=-jnp.inf)
     call = make_lb_refine_call(Ap.shape[0], L, window, block, interpret,
-                               lane=lane)
+                               lane=lane, measure=measure)
     d, flag = call(Ap, Bp, Up, Lp, Tp)
     return d[:n, 0], flag[:n, 0].astype(bool)

@@ -24,8 +24,10 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ...core.dispatch import effective_window
 from ...core.dtw import dtw_batch
 from ...core.lb import lb_keogh, lb_kim
+from ...core.measures import MeasureArg
 from ..dtw_band.kernel import band_width, wavefront_compressed
 
 __all__ = ["lb_refine_ref", "lb_refine_jax", "cascade_bound_ref"]
@@ -45,27 +47,29 @@ def _select(lb, d, thresh):
 
 def lb_refine_ref(A: jnp.ndarray, B: jnp.ndarray, upper: jnp.ndarray,
                   lower: jnp.ndarray, thresh: jnp.ndarray,
-                  window: Optional[int] = None
+                  window: Optional[int] = None,
+                  measure: MeasureArg = None
                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     A = jnp.asarray(A, jnp.float32)
     B = jnp.asarray(B, jnp.float32)
     lb = cascade_bound_ref(A, B, jnp.asarray(upper, jnp.float32),
                            jnp.asarray(lower, jnp.float32))
-    d = dtw_batch(A, B, window)
+    d = dtw_batch(A, B, window, measure)
     return _select(lb, d, jnp.asarray(thresh, jnp.float32))
 
 
-@functools.partial(jax.jit, static_argnames=("window",))
+@functools.partial(jax.jit, static_argnames=("window", "measure"))
 def lb_refine_jax(A: jnp.ndarray, B: jnp.ndarray, upper: jnp.ndarray,
                   lower: jnp.ndarray, thresh: jnp.ndarray,
-                  window: Optional[int] = None
+                  window: Optional[int] = None,
+                  measure: MeasureArg = None
                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     A = jnp.asarray(A, jnp.float32)
     B = jnp.asarray(B, jnp.float32)
     L = A.shape[-1]
-    w = L if window is None else int(window)
+    w = effective_window(L, window)
     lb = cascade_bound_ref(A, B, jnp.asarray(upper, jnp.float32),
                            jnp.asarray(lower, jnp.float32))
     d = wavefront_compressed(A, B, length=L, window=w,
-                             width=band_width(L, w))[:, 0]
+                             width=band_width(L, w), measure=measure)[:, 0]
     return _select(lb, d, jnp.asarray(thresh, jnp.float32))

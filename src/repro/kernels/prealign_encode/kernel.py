@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ...core.measures import MeasureArg
 from ..dtw_band.kernel import wavefront_compressed
 
 __all__ = ["prealign_encode_kernel", "make_prealign_encode_call"]
@@ -57,7 +58,8 @@ def _forward_fill_sign(s: jnp.ndarray, t: jnp.ndarray,
 
 def prealign_encode_kernel(x_ref, c_ref, lin_ref, o_ref, *, length: int,
                            n_sub: int, n_k: int, seg_len: int, level: int,
-                           tail: int, window: int, block: int, width: int):
+                           tail: int, window: int, block: int, width: int,
+                           measure: MeasureArg = None):
     """``x_ref (block, L)``, ``c_ref (M, K, S)``, ``lin_ref (1, S)`` ->
     ``o_ref (block, M)`` int32 codes."""
     L, M, K, S = length, n_sub, n_k, seg_len
@@ -105,7 +107,8 @@ def prealign_encode_kernel(x_ref, c_ref, lin_ref, o_ref, *, length: int,
         b = jnp.broadcast_to(cents[None, :, :], (block, K, S))
         d = wavefront_compressed(a.reshape(block * K, S),
                                  b.reshape(block * K, S),
-                                 length=S, window=window, width=width)
+                                 length=S, window=window, width=width,
+                                 measure=measure)
         d = d.reshape(block, K)
         k_iota = jax.lax.broadcasted_iota(jnp.int32, (block, K), 1)
         dmin = jnp.min(d, axis=1, keepdims=True)
@@ -116,7 +119,8 @@ def prealign_encode_kernel(x_ref, c_ref, lin_ref, o_ref, *, length: int,
 def make_prealign_encode_call(n: int, length: int, n_sub: int, n_k: int,
                               seg_len: int, level: int, tail: int,
                               window: int, block: int, width: int,
-                              interpret: bool):
+                              interpret: bool,
+                              measure: MeasureArg = None):
     """Build the pallas_call: ``X (n, L)`` tiles x one resident codebook.
 
     ``n`` must already be padded to a multiple of ``block``; the centroid
@@ -125,7 +129,7 @@ def make_prealign_encode_call(n: int, length: int, n_sub: int, n_k: int,
     kernel = functools.partial(
         prealign_encode_kernel, length=length, n_sub=n_sub, n_k=n_k,
         seg_len=seg_len, level=level, tail=tail, window=window, block=block,
-        width=width)
+        width=width, measure=measure)
     return pl.pallas_call(
         kernel,
         grid=(n // block,),

@@ -8,6 +8,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from ...core.dispatch import effective_window
+from ...core.measures import MeasureArg
 from ..common import default_interpret, pad_to
 from ..dtw_band.kernel import band_width
 from .kernel import make_prealign_encode_call
@@ -23,11 +25,13 @@ def _default_lane() -> int:
 
 
 @functools.partial(jax.jit, static_argnames=("level", "tail", "window",
-                                             "block", "interpret", "lane"))
+                                             "block", "interpret", "lane",
+                                             "measure"))
 def prealign_encode(X: jnp.ndarray, centroids: jnp.ndarray, level: int,
                     tail: int, window: Optional[int] = None, block: int = 8,
                     interpret: Optional[bool] = None,
-                    lane: Optional[int] = None) -> jnp.ndarray:
+                    lane: Optional[int] = None,
+                    measure: MeasureArg = None) -> jnp.ndarray:
     """Fused MODWT prealign + DTW-1NN encode: ``X (N, D)`` -> ``(N, M)``.
 
     ``centroids (M, K, S)`` with ``S = D // M + tail``; ``window`` is the
@@ -43,11 +47,11 @@ def prealign_encode(X: jnp.ndarray, centroids: jnp.ndarray, level: int,
     N, D = X.shape
     M, K, S = centroids.shape
     check_geometry(D, centroids, tail)
-    w = S if window is None else int(window)
+    w = effective_window(S, window)
     block = min(block, max(1, N))
     Xp = pad_to(X, block, axis=0)
     lin = jnp.linspace(0.0, 1.0, S, dtype=jnp.float32)[None, :]
     call = make_prealign_encode_call(
         Xp.shape[0], D, M, K, S, level, tail, w, block,
-        band_width(S, w, lane), interpret)
+        band_width(S, w, lane), interpret, measure=measure)
     return call(Xp, centroids, lin)[:N]

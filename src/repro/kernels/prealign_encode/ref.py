@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from ...core.dtw import dtw_cdist
+from ...core.measures import MeasureArg
 from ...core.modwt import prealign
 
 __all__ = ["prealign_encode_ref", "check_geometry"]
@@ -33,9 +34,11 @@ def check_geometry(D: int, centroids: jnp.ndarray, tail: int) -> None:
             f"segments of length {want}")
 
 
-@functools.partial(jax.jit, static_argnames=("level", "tail", "window"))
+@functools.partial(jax.jit, static_argnames=("level", "tail", "window",
+                                             "measure"))
 def prealign_encode_ref(X: jnp.ndarray, centroids: jnp.ndarray, level: int,
-                        tail: int, window: Optional[int] = None
+                        tail: int, window: Optional[int] = None,
+                        measure: MeasureArg = None
                         ) -> jnp.ndarray:
     """``X (N, D)``, ``centroids (M, K, S)`` -> codes ``(N, M)`` int32."""
     X = jnp.asarray(X, jnp.float32)
@@ -43,6 +46,7 @@ def prealign_encode_ref(X: jnp.ndarray, centroids: jnp.ndarray, level: int,
     check_geometry(X.shape[-1], centroids, tail)
     M = centroids.shape[0]
     segs = prealign(X, M, level, tail)               # (N, M, S)
-    d = jnp.stack([dtw_cdist(segs[:, m], centroids[m], window)
+    d = jnp.stack([dtw_cdist(segs[:, m], centroids[m], window,
+                             measure=measure)
                    for m in range(M)], axis=1)       # (N, M, K)
     return jnp.argmin(d, axis=-1).astype(jnp.int32)

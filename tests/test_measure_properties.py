@@ -1,0 +1,137 @@
+"""Property-based (hypothesis) tests of measure metric axioms.
+
+Symmetry holds for every registered measure; ERP and MSM are true metrics
+(triangle inequality) under their absolute-difference costs; squared DTW
+famously is NOT a metric — a fixed violating triple documents that.  The
+limiting-case equivalences (wdtw flat weight == dtw, erp lock-step limits)
+are sweep-checked on both dispatch backends.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need the dev-only hypothesis dependency")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dispatch
+from repro.core.dtw import dtw_batch
+from repro.core.measures import available, get_measure, resolve
+
+pytestmark = pytest.mark.slow    # hypothesis sweeps: tier-2
+
+SETTINGS = dict(max_examples=12, deadline=None)
+MEASURES = ("dtw", "wdtw:g=0.1", "erp:g=0.3", "msm:c=0.5")
+METRICS = ("erp:g=0.3", "msm:c=0.5")     # true metrics (triangle holds)
+
+
+def _series(draw, length, lo=-4.0, hi=4.0):
+    vals = draw(st.lists(
+        st.floats(lo, hi, allow_nan=False, allow_infinity=False, width=32),
+        min_size=length, max_size=length))
+    return np.asarray(vals, np.float32)
+
+
+@st.composite
+def series_triple(draw, length=10):
+    return (_series(draw, length), _series(draw, length),
+            _series(draw, length))
+
+
+def _d(spec, a, b, window=None):
+    return float(dtw_batch(jnp.asarray(a)[None], jnp.asarray(b)[None],
+                           window, spec)[0])
+
+
+class TestMetricAxioms:
+    @pytest.mark.parametrize("measure", MEASURES)
+    @given(series_triple())
+    @settings(**SETTINGS)
+    def test_identity_zero(self, measure, triple):
+        a, _, _ = triple
+        spec = resolve(measure)
+        assert _d(spec, a, a) == pytest.approx(0.0, abs=1e-4)
+
+    @pytest.mark.parametrize("measure", MEASURES)
+    @given(series_triple())
+    @settings(**SETTINGS)
+    def test_symmetry(self, measure, triple):
+        a, b, _ = triple
+        spec = resolve(measure)
+        dab, dba = _d(spec, a, b), _d(spec, b, a)
+        assert dab == pytest.approx(dba, rel=1e-4, abs=1e-4)
+
+    @pytest.mark.parametrize("measure", METRICS)
+    @given(series_triple())
+    @settings(**SETTINGS)
+    def test_triangle_inequality(self, measure, triple):
+        a, b, c = triple
+        spec = resolve(measure)
+        dac = _d(spec, a, c)
+        dab = _d(spec, a, b)
+        dbc = _d(spec, b, c)
+        assert dac <= dab + dbc + 1e-3 + 1e-4 * (dab + dbc)
+
+    def test_dtw_triangle_violating_triple(self):
+        """Squared DTW is not a metric: the classic constant-series triple
+        violates the triangle inequality outright."""
+        a = np.zeros(4, np.float32)
+        b = np.full(4, 1.0, np.float32)
+        c = np.full(4, 2.0, np.float32)
+        spec = resolve("dtw")
+        dac = _d(spec, a, c)        # 4 * 2^2 = 16
+        dab = _d(spec, a, b)        # 4 * 1^2 = 4
+        dbc = _d(spec, b, c)        # 4 * 1^2 = 4
+        assert dac > dab + dbc + 1.0
+
+    @pytest.mark.parametrize("measure", MEASURES)
+    @given(series_triple(), st.integers(1, 9))
+    @settings(**SETTINGS)
+    def test_window_monotone(self, measure, triple, w):
+        """Widening the band can only lower any measure's cost (a superset
+        of feasible alignment paths)."""
+        a, b, _ = triple
+        spec = resolve(measure)
+        d_w = _d(spec, a, b, w)
+        d_full = _d(spec, a, b, None)
+        assert d_full <= d_w + 1e-3 + 1e-4 * abs(d_w)
+
+
+class TestLimitingCases:
+    @pytest.mark.parametrize("backend", ["jax", "pallas_interpret"])
+    @given(series_triple())
+    @settings(**SETTINGS)
+    def test_wdtw_flat_equals_dtw_both_backends(self, backend, triple):
+        a, b, _ = triple
+        A, B = jnp.asarray(a)[None], jnp.asarray(b)[None]
+        with dispatch.use_backend(backend):
+            flat = float(dispatch.elastic_pairwise(
+                A, B, 3, measure=get_measure("wdtw", g=0.0))[0])
+            plain = float(dispatch.elastic_pairwise(A, B, 3)[0])
+        assert flat == pytest.approx(plain, rel=1e-4, abs=1e-4)
+
+    @pytest.mark.parametrize("backend", ["jax", "pallas_interpret"])
+    @given(series_triple())
+    @settings(**SETTINGS)
+    def test_erp_lockstep_limits_both_backends(self, backend, triple):
+        """erp with an unaffordable gap penalty degenerates to the L1
+        lock-step — the same limit dtw(window=0) hits in L2^2."""
+        a, b, _ = triple
+        A, B = jnp.asarray(a)[None], jnp.asarray(b)[None]
+        with dispatch.use_backend(backend):
+            big_g = float(dispatch.elastic_pairwise(
+                A, B, None, measure=get_measure("erp", g=1e6))[0])
+            dtw0 = float(dispatch.elastic_pairwise(A, B, 0)[0])
+        assert big_g == pytest.approx(float(np.abs(a - b).sum()),
+                                      rel=1e-4, abs=1e-3)
+        assert dtw0 == pytest.approx(float(((a - b) ** 2).sum()),
+                                     rel=1e-4, abs=1e-3)
+
+
+def test_all_shipped_measures_covered():
+    """Guard: every shipped measure appears in the axiom sweep above."""
+    shipped = {"dtw", "wdtw", "erp", "msm"}
+    assert shipped <= set(available())
+    assert shipped == {resolve(m).name for m in MEASURES}
