@@ -1,12 +1,17 @@
 """Streaming index lifecycle costs: insert throughput, query latency as a
-function of sealed-segment count, and the cost + payoff of compaction."""
+function of sealed-segment count, the cost + payoff of compaction, and the
+device-scaling axis of the sharded planner (replicated vs list-sharded
+layout on 1/2/4 simulated devices)."""
 
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
 import time
 
 import jax
-import numpy as np
 
 from repro.core.pq import PQConfig
 from repro.data.timeseries import random_walks
@@ -14,6 +19,49 @@ from repro.index import IndexConfig, StreamingIndex
 
 from . import common
 from .common import Bench, timeit
+
+# Runs in a subprocess per device count: XLA fixes the host device count at
+# first init, so each mesh size needs a fresh process.  Prints one JSON
+# marker line the parent collects into the shared Bench.
+_DEVICE_LEG = r"""
+import json, numpy as np, jax
+from repro.core.pq import PQConfig
+from repro.data.timeseries import random_walks
+from repro.index import IndexConfig, StreamingIndex, search_sharded
+from benchmarks import common
+from benchmarks.common import timeit
+
+n_dev = int({n_dev})
+assert len(jax.devices()) == n_dev
+D, n_lists, cap, n_seg = {D}, {n_lists}, {cap}, {n_seg}
+cfg = IndexConfig(
+    pq=PQConfig(n_sub=4, codebook_size=32, use_prealign=False,
+                **common.measure_config_fields(),
+                kmeans_iters=3, dba_iters=1),
+    n_lists=n_lists, hot_capacity=cap, coarse_iters=4, n_shards=n_dev)
+index = StreamingIndex.bootstrap(
+    jax.random.PRNGKey(0), random_walks(2 * cap, D, seed=0), cfg)
+index.insert(random_walks(n_seg * cap, D, seed=2))
+index.compact()                       # one merged, placement-balanced shard
+Q = random_walks(16, D, seed=99)
+lat = dict()
+lat["direct"] = timeit(lambda: index.search(Q, n_probe=4, topk=3),
+                       repeats=3)["median_s"]
+for part in ("queries", "lists"):
+    lat[part] = timeit(lambda: search_sharded(index, Q, n_probe=4, topk=3,
+                                              partition=part),
+                       repeats=3)["median_s"]
+sg = index.segments[0]
+mc = index.memory_cost()
+print("LEG:" + json.dumps(dict(
+    n_devices=n_dev, latency_s=lat, live_rows=index.n_live(),
+    shard_cap=sg.shard_cap, max_list=int(np.asarray(sg.list_len).max()),
+    code_bytes=mc["code_bytes"],
+    max_device_bytes=mc.get("max_device_bytes", mc["total_bytes"]),
+    replicated_bytes=mc.get("replicated_bytes", 0),
+    partitioned_bytes=mc.get("partitioned_bytes",
+                             mc["code_bytes"] + mc["sidecar_bytes"]))))
+"""
 
 
 def _make_index(D: int, n_lists: int, hot_capacity: int,
@@ -60,12 +108,55 @@ def run(quick: bool = True) -> Bench:
     b.add(op="compact", merged_rows=index.segments[0].rows,
           max_list=index.segments[0].max_list, compact_s=t_cmp,
           post_compact_latency_s=t["median_s"])
+
+    # --- device scaling: replicated vs list-sharded layout ------------------
+    # Simulated host devices share one CPU, so wall-clock speedup is not the
+    # point here; what the rows pin down is the *structure* of the scale-out:
+    # per-device occupancy (hence sealed-code HBM) shrinking ~linearly with
+    # the mesh, and the cost of the all_gather fan-in merge relative to the
+    # query-sharded plan doing identical kernel work.
+    n_seg_dev = 4
+    for n_dev in (1, 2, 4):
+        env = dict(os.environ, JAX_PLATFORMS="cpu",
+                   XLA_FLAGS=f"--xla_force_host_platform_device_count="
+                             f"{n_dev}")
+        code = _DEVICE_LEG.format(n_dev=n_dev, D=D, n_lists=n_lists,
+                                  cap=cap, n_seg=n_seg_dev)
+        res = subprocess.run([sys.executable, "-c", code], env=env,
+                             capture_output=True, text=True, timeout=1200)
+        if res.returncode != 0:
+            raise RuntimeError(
+                f"device leg n_dev={n_dev} failed:\n{res.stderr[-2000:]}")
+        leg = json.loads(next(ln for ln in res.stdout.splitlines()
+                              if ln.startswith("LEG:"))[4:])
+        lat = leg["latency_s"]
+        # the placement guarantee, on the physically sealed layout:
+        # per-device rows <= perfect split + one list's worth
+        assert leg["shard_cap"] <= (-(-leg["live_rows"] // n_dev)
+                                    + leg["max_list"]), leg
+        if n_dev > 1:
+            # per-device partitioned share shrinks ~linearly with the mesh
+            share = leg["max_device_bytes"] - leg["replicated_bytes"]
+            assert share <= leg["partitioned_bytes"] / n_dev + 1, leg
+        b.add(op="device_scaling", n_devices=n_dev,
+              rows=leg["live_rows"], shard_cap=leg["shard_cap"],
+              latency_direct_s=lat["direct"],
+              latency_query_sharded_s=lat["queries"],
+              latency_list_sharded_s=lat["lists"],
+              fanin_overhead_s=lat["lists"] - lat["queries"],
+              per_device_speedup=lat["direct"] / lat["lists"],
+              max_device_bytes=leg["max_device_bytes"],
+              partitioned_bytes=leg["partitioned_bytes"])
+
     b.save(headline={
         "quick": quick, "measure": common.MEASURE,
         "config": dict(D=D, n_lists=n_lists, hot_capacity=cap),
         "insert_throughput_per_s": next(
             (r["throughput_per_s"] for r in b.rows if r["op"] == "insert"),
-            None)})
+            None),
+        "max_device_bytes_by_mesh": {
+            str(r["n_devices"]): r["max_device_bytes"]
+            for r in b.rows if r["op"] == "device_scaling"}})
     return b
 
 

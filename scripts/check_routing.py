@@ -30,6 +30,7 @@ EXPECTED_OPS = (
     "adc_lookup",
     "prealign_encode",
     "lb_refine",
+    "two_level_coarse",
 )
 
 # ops whose recurrence is measure-parameterized: each needs a non-DTW
@@ -39,6 +40,7 @@ MEASURED_OPS = (
     "elastic_pairwise",
     "elastic_cdist",
     "prealign_encode",
+    "two_level_coarse",
 )
 
 

@@ -29,15 +29,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .dispatch import elastic_cdist
+from .dispatch import elastic_cdist, two_level_coarse
 from .kmeans import dba_kmeans
 from .lb import lb_lut
 from .measures import MeasureArg
 from .pq import (PQCodebook, PQConfig, _adc_gather, encode, fit,
                  query_lut_batch, segment)
 
-__all__ = ["IVFPQIndex", "build_index", "build_lists", "coarse_assign",
-           "fine_rank", "search", "search_batch", "validate_n_probe",
+__all__ = ["IVFPQIndex", "TwoLevelCoarse", "build_index", "build_lists",
+           "build_two_level", "coarse_assign", "coarse_dists", "fine_rank",
+           "search", "search_batch", "validate_n_probe",
            "validate_codebook"]
 
 
@@ -83,6 +84,73 @@ def coarse_assign(X: jnp.ndarray, coarse: jnp.ndarray,
     ids."""
     return jnp.argmin(elastic_cdist(X, coarse, window, measure=measure),
                       axis=1).astype(jnp.int32)
+
+
+class TwoLevelCoarse(NamedTuple):
+    """Hierarchical coarse quantizer: a k-means clustering *of the coarse
+    centroids themselves*, so queries rank ``n_top`` top cells and fan
+    out only to the probed cells' children instead of evaluating all
+    ``n_lists`` centroids (the per-query coarse bottleneck once
+    ``n_lists`` reaches tens of thousands).  A pytree of arrays —
+    replicable across a device mesh alongside the flat centroids."""
+    top: jnp.ndarray          # (n_top, D) centroids of the coarse centroids
+    child_idx: jnp.ndarray    # (n_top, max_children) int32 into coarse
+    child_valid: jnp.ndarray  # (n_top, max_children) bool padding mask
+
+    @property
+    def n_top(self) -> int:
+        return self.top.shape[0]
+
+    @property
+    def max_children(self) -> int:
+        return self.child_idx.shape[1]
+
+
+def build_two_level(key: jax.Array, coarse: jnp.ndarray, n_top: int,
+                    window: Optional[int], measure: MeasureArg = None,
+                    iters: int = 8) -> TwoLevelCoarse:
+    """Cluster the ``(n_lists, D)`` coarse centroids into ``n_top`` top
+    cells (same elastic DBA k-means as the bottom level) and tabulate each
+    cell's children as a static padded table."""
+    coarse = jnp.asarray(coarse, jnp.float32)
+    n_lists = coarse.shape[0]
+    if not 1 <= n_top <= n_lists:
+        raise ValueError(
+            f"n_top={n_top} out of range: must satisfy 1 <= n_top <= "
+            f"n_lists={n_lists}")
+    res = dba_kmeans(key, coarse, n_top, iters=iters, dba_iters=1,
+                     window=window, measure=measure)
+    assign = np.asarray(res.assignment)
+    order, start, length, max_children = build_lists(assign, n_top)
+    max_children = max(1, max_children)
+    child_idx = np.zeros((n_top, max_children), np.int32)
+    child_valid = np.zeros((n_top, max_children), bool)
+    for t in range(n_top):
+        kids = order[start[t]:start[t] + length[t]]
+        child_idx[t, :len(kids)] = kids
+        child_valid[t, :len(kids)] = True
+    return TwoLevelCoarse(top=res.centroids,
+                          child_idx=jnp.asarray(child_idx),
+                          child_valid=jnp.asarray(child_valid))
+
+
+def coarse_dists(Q: jnp.ndarray, coarse: jnp.ndarray,
+                 window: Optional[int], measure: MeasureArg = None,
+                 two_level: Optional[TwoLevelCoarse] = None,
+                 n_probe_top: Optional[int] = None) -> jnp.ndarray:
+    """Coarse distance rows ``(Nq, n_lists)`` for the probe stage: the
+    flat all-pairs cdist, or — when a :class:`TwoLevelCoarse` is given —
+    the hierarchical fan-out (``+inf`` outside the ``n_probe_top``
+    nearest top cells' children).  Shared by the monolithic
+    :func:`search_batch`, the streaming index, and the sharded planner,
+    so every plan ranks probes with identical numbers."""
+    if two_level is None:
+        return elastic_cdist(Q, coarse, window, measure=measure)
+    if n_probe_top is None:
+        raise ValueError("two_level coarse search requires n_probe_top")
+    return two_level_coarse(Q, two_level.top, coarse, two_level.child_idx,
+                            two_level.child_valid, window,
+                            n_probe_top=n_probe_top, measure=measure)
 
 
 def build_lists(assign: np.ndarray, n_lists: int
@@ -187,6 +255,12 @@ def fine_rank(codes: jnp.ndarray, ids: jnp.ndarray,
     """
     _, probes = jax.lax.top_k(-dc, n_probe)
     slots, valid = _candidates(list_start, list_len, max_list, probes)
+    # Hierarchical coarse stage (:func:`coarse_dists` with a two-level
+    # quantizer) leaves unprobed lists at dc == +inf; if n_probe exceeds
+    # the finite fan-out, top_k pads with such lists — their rows were
+    # never coarse-ranked and must not become candidates.  Flat coarse
+    # distances are always finite, so this is a no-op there.
+    valid = valid & jnp.repeat(jnp.isfinite(dc[probes]), max_list)
     if live is not None:
         valid = valid & live[slots]
     cand_codes = codes[slots]                               # (cap, M)
@@ -257,7 +331,9 @@ def search(index: IVFPQIndex, q: jnp.ndarray, cfg: PQConfig, *,
 def search_batch(index: IVFPQIndex, Q: jnp.ndarray, cfg: PQConfig, *,
                  n_probe: int, topk: int = 1,
                  coarse_window: Optional[int] = None,
-                 lb_budget: Optional[int] = None):
+                 lb_budget: Optional[int] = None,
+                 two_level: Optional[TwoLevelCoarse] = None,
+                 n_probe_top: Optional[int] = None):
     """Batched search over queries ``Q (Nq, D)``.
 
     The coarse DTW stage and the asymmetric query tables are computed for
@@ -272,13 +348,22 @@ def search_batch(index: IVFPQIndex, Q: jnp.ndarray, cfg: PQConfig, *,
     their envelope lower bound before the exact ADC gather.  The budget is
     capability-gated: for measures without a sound Keogh cascade it is
     ignored (exact full gather) instead of pruning unsoundly.
+
+    ``two_level`` + ``n_probe_top`` switch the coarse stage to the
+    hierarchical quantizer (:func:`build_two_level`): probe ranking is
+    restricted to the children of each query's ``n_probe_top`` nearest
+    top cells.  With ``n_probe_top == two_level.n_top`` the results match
+    the flat coarse stage; smaller fan-outs trade coarse recall for an
+    ``O(n_top + n_probe_top * max_children)`` coarse cost.
     """
     _validate_probe(index.n_lists, index.max_list, n_probe, topk, lb_budget)
     Q = jnp.asarray(Q, jnp.float32)
     D = Q.shape[-1]
     spec = cfg.measure()
     w = coarse_window if coarse_window is not None else index.coarse_window
-    dc = elastic_cdist(Q, index.coarse, w, measure=spec)    # (Nq, n_lists)
+    dc = coarse_dists(Q, index.coarse, w, measure=spec,
+                      two_level=two_level,
+                      n_probe_top=n_probe_top)             # (Nq, n_lists)
     q_segs = segment(Q, cfg)                                # (Nq, M, S)
     qluts = query_lut_batch(q_segs, index.cb, cfg.window(D),
                             not cfg.is_elastic, spec)       # (Nq, M, K)

@@ -57,15 +57,20 @@ __all__ = ["filtered_topk"]
 
 def _dense_topk(Q: jnp.ndarray, X: jnp.ndarray, window: Optional[int],
                 k: int, valid: Optional[jnp.ndarray],
+                q_valid: Optional[jnp.ndarray],
                 spec) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Exact dense fallback: one all-pairs launch + top-k (the sound path
     for measures without a Keogh cascade / Euclidean upper bound)."""
     d = elastic_cdist(Q, X, window, measure=spec)
+    n_q = (jnp.int32(Q.shape[0]) if q_valid is None
+           else jnp.sum(q_valid).astype(jnp.int32))
     if valid is not None:
         d = jnp.where(valid[None, :], d, jnp.inf)
-        n_ref = Q.shape[0] * jnp.sum(valid).astype(jnp.int32)
+        n_ref = n_q * jnp.sum(valid).astype(jnp.int32)
     else:
-        n_ref = jnp.int32(Q.shape[0] * X.shape[0])
+        n_ref = n_q * jnp.int32(X.shape[0])
+    if q_valid is not None:
+        d = jnp.where(q_valid[:, None], d, jnp.inf)
     neg, idx = jax.lax.top_k(-d, k)
     idx = jnp.where(jnp.isfinite(neg), idx, -1).astype(jnp.int32)
     return -neg, idx, n_ref
@@ -78,11 +83,17 @@ def filtered_topk(Q: jnp.ndarray, X: jnp.ndarray, window: Optional[int],
                   k: int, budget: Optional[int] = None,
                   valid: Optional[jnp.ndarray] = None,
                   max_iters: Optional[int] = None,
-                  measure: MeasureArg = None
+                  measure: MeasureArg = None,
+                  q_valid: Optional[jnp.ndarray] = None
                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Exact banded elastic top-k of ``Q (Nq, L)`` against ``X (N, L)``.
 
     ``valid`` is an optional ``(N,)`` mask (False rows are never returned).
+    ``q_valid`` is an optional ``(Nq,)`` *query* mask for callers whose
+    batch carries padding rows (e.g. the sharded planner's padded query
+    blocks): masked queries get all-``inf`` / ``-1`` results, never claim
+    refine-wave slots, and are excluded from ``n_refined`` — pad rows
+    neither burn wavefront sweeps nor pollute pruning statistics.
     Returns ``(d (Nq, k), idx (Nq, k) int32, n_refined)``:
     distances ascending per query with ``inf`` / ``-1`` filling slots
     beyond the number of valid candidates, and ``n_refined`` the total
@@ -99,7 +110,7 @@ def filtered_topk(Q: jnp.ndarray, X: jnp.ndarray, window: Optional[int],
         raise ValueError(f"k={k} out of range: must satisfy 1 <= k <= {N}")
     spec = measures.resolve(measure)
     if not spec.can_prune:
-        return _dense_topk(Q, X, window, k, valid, spec)
+        return _dense_topk(Q, X, window, k, valid, q_valid, spec)
     # Per-wave budget: thresholds tighten after every wave, so small waves
     # (a few pairs per query) converge in a handful of launches and waste
     # the least refine work; the cap below bounds the worst (pruning-free)
@@ -123,6 +134,13 @@ def filtered_topk(Q: jnp.ndarray, X: jnp.ndarray, window: Optional[int],
     if valid is not None:
         lbs = jnp.where(valid[None, :], lbs, jnp.inf)
         d_ub = jnp.where(valid[None, :], d_ub, jnp.inf)
+    if q_valid is not None:
+        # Masked (padding) queries: every bound and seed goes to +inf, so
+        # the wave-selection key is +inf (never chosen except as already-
+        # discarded filler), cond() sees inf < inf == False, and the
+        # `fresh` re-check below keeps any filler pick out of n_refined.
+        lbs = jnp.where(q_valid[:, None], lbs, jnp.inf)
+        d_ub = jnp.where(q_valid[:, None], d_ub, jnp.inf)
     # strict upper margin: exact ties (e.g. a query that IS a database row)
     # must still refine, so the seed sits just above the k-th smallest ED
     seed = -jax.lax.top_k(-d_ub, k)[0][:, -1] * 1.0001 + 1e-6
@@ -149,15 +167,17 @@ def filtered_topk(Q: jnp.ndarray, X: jnp.ndarray, window: Optional[int],
         _, flat = jax.lax.top_k(-key.reshape(-1), R)
         q_idx = flat // N
         c_idx = flat % N
-        th = thresh[q_idx]
-        d, refined = lb_refine(Q[q_idx], X[c_idx], up[q_idx], lo[q_idx],
-                               th, window, measure=spec)
-        # the kernel recomputes bounds from the raw series, so mask out
-        # deleted rows and pairs a previous iteration already handled
-        # (picked again only as filler once finite keys run out)
+        # the kernel recomputes bounds from the raw series, so deleted
+        # rows, masked queries and pairs a previous iteration already
+        # handled (picked again only as filler once finite keys run out)
+        # get a -inf threshold: the cascade can never beat it, the
+        # cond-guarded tile skips their wavefront sweeps entirely
         fresh = jnp.isfinite(lb_rem[q_idx, c_idx])
         if valid is not None:
             fresh = fresh & valid[c_idx]
+        th = jnp.where(fresh, thresh[q_idx], -jnp.inf)
+        d, refined = lb_refine(Q[q_idx], X[c_idx], up[q_idx], lo[q_idx],
+                               th, window, measure=spec)
         refined = refined & fresh
         d_exact = d_exact.at[q_idx, c_idx].min(
             jnp.where(refined, d, jnp.inf))

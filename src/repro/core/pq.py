@@ -368,7 +368,7 @@ def cdist_sym_refined(codes_a: jnp.ndarray, segs_a: jnp.ndarray,
 
 def memory_cost(cfg: PQConfig, D: int, n_series: int, *,
                 n_segments: int = 0, n_lists: int = 0,
-                hot_capacity: int = 0) -> dict:
+                hot_capacity: int = 0, n_devices: int = 1) -> dict:
     """Bytes for raw data vs PQ representation + auxiliary structures.
 
     With the segmented-index keywords, the estimate also covers the
@@ -377,6 +377,18 @@ def memory_cost(cfg: PQConfig, D: int, n_series: int, *,
     raw float32 hot-segment buffer — so ``compaction`` gains (fewer
     segments, no dead padding) are visible in the same accounting that
     §3.4 uses for the quantizer itself.
+
+    ``n_devices > 1`` additionally splits the segmented estimate into
+    per-device accounting for the list-sharded layout: the quantizers,
+    inverted-list tables and hot buffer are *replicated* on every device
+    (``replicated_bytes``) while the sealed codes and their sidecars are
+    *partitioned* across the mesh (``partitioned_bytes``), so the
+    per-device high-water mark is
+
+        ``max_device_bytes = replicated + ceil(partitioned / n_devices)``
+
+    — the partitioned share shrinks ~linearly with the mesh (up to the
+    one-list placement slack of :mod:`repro.index.placement`).
     """
     S = cfg.subseq_len(D)
     M, K = cfg.n_sub, cfg.codebook_size
@@ -394,6 +406,7 @@ def memory_cost(cfg: PQConfig, D: int, n_series: int, *,
         # sealed sidecars: int32 id + int32 coarse assignment + bool live
         sidecar = (4 + 4 + 1) * n_series
         # per-segment inverted-list tables: int32 start + len per list
+        # (+ int32 placement under the sharded layout — counted replicated)
         lists = 2 * 4 * n_lists * n_segments
         # hot segment: raw float32 buffer + id/live sidecars at capacity
         hot = (4 * D + 4 + 1) * hot_capacity
@@ -401,4 +414,15 @@ def memory_cost(cfg: PQConfig, D: int, n_series: int, *,
                    index_bytes=codes + sidecar + lists + hot,
                    total_bytes=codes + sidecar + lists + hot
                    + out["aux_bytes"])
+        if n_devices > 1:
+            # coarse centroids ride along with every device's probe stage
+            coarse = 4 * n_lists * D
+            replicated = out["aux_bytes"] + coarse + lists + hot
+            partitioned = codes + sidecar
+            out.update(
+                n_devices=n_devices,
+                coarse_bytes=coarse,
+                replicated_bytes=replicated,
+                partitioned_bytes=partitioned,
+                max_device_bytes=replicated + -(-partitioned // n_devices))
     return out

@@ -15,10 +15,14 @@ from one frozen array.  This package turns it into a long-lived structure:
 
 Search fans a query batch out over the hot segment and every sealed
 segment, merging per-shard top-k with one final ``lax.top_k``; the planner
-(:mod:`repro.index.planner`) additionally shards the query batch across
-devices with ``shard_map``.
+(:mod:`repro.index.planner`) additionally scales out over a device mesh
+with ``shard_map`` — either sharding the query batch (index replicated)
+or partitioning the inverted lists themselves across devices
+(:mod:`repro.index.placement`, ``IndexConfig(n_shards=...)``) with a
+device-resident ``all_gather`` top-k fan-in.
 """
 
+from .placement import placement_loads, plan_placement
 from .segments import HotBuffer, SealedSegment
 from .streaming import IndexConfig, StreamingIndex
 from .snapshot import latest_snapshot, restore_snapshot, save_snapshot
@@ -27,6 +31,7 @@ from .planner import search_sharded
 __all__ = [
     "HotBuffer", "SealedSegment",
     "IndexConfig", "StreamingIndex",
+    "plan_placement", "placement_loads",
     "save_snapshot", "restore_snapshot", "latest_snapshot",
     "search_sharded",
 ]

@@ -8,9 +8,22 @@ Two kinds of segment, one searchable contract:
   DTW against every live row.
 * :class:`SealedSegment` — an immutable device-resident inverted-list
   shard of PQ codes sharing the index-wide codebook.  Registered as a
-  pytree with ``max_list`` as *static* metadata, so jitted search caches
-  on segment shape, not segment identity: every flush-born segment is
-  padded to the same ``capacity`` rows and reuses one compiled fine stage.
+  pytree with the shard geometry as *static* metadata, so jitted search
+  caches on segment shape, not segment identity: every flush-born segment
+  is padded to the same per-shard width and reuses one compiled fine
+  stage.
+
+Partitioned layout (``n_shards > 1``): rows are ordered *shard-major* —
+all lists placed on shard 0 (list-sorted), padding to ``shard_cap``, then
+shard 1's lists, and so on — so shard ``s`` owns exactly the contiguous
+row block ``[s * shard_cap, (s + 1) * shard_cap)`` and the whole segment
+can be resharded across a device mesh by reshaping to ``(n_shards,
+shard_cap, ...)``.  Because a list lives wholly on one shard
+(:mod:`repro.index.placement`), every inverted list remains a contiguous
+run and ``list_start`` / ``list_len`` keep working unchanged for the
+single-device plan; the layout costs only per-shard padding, never a
+second copy.  ``n_shards == 1`` reproduces the historical plain
+list-sorted layout exactly.
 
 Row padding convention: dead rows carry ``ids == -1``, ``live == False``
 and ``assign == n_lists`` (sorted past every real list, so no inverted
@@ -28,23 +41,27 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.ivf import build_lists
+from .placement import placement_loads, plan_placement
 
 __all__ = ["HotBuffer", "SealedSegment", "seal"]
 
 
 @partial(jax.tree_util.register_dataclass,
          data_fields=("codes", "ids", "live", "assign", "list_start",
-                      "list_len"),
-         meta_fields=("max_list",))
+                      "list_len", "placement"),
+         meta_fields=("max_list", "n_shards", "shard_cap"))
 @dataclasses.dataclass(frozen=True)
 class SealedSegment:
-    codes: jnp.ndarray        # (rows, M) int32 PQ codes, list-sorted
+    codes: jnp.ndarray        # (n_shards*shard_cap, M) int32, shard-major
     ids: jnp.ndarray          # (rows,) int32 external ids, -1 = padding
     live: jnp.ndarray         # (rows,) bool, False = deleted or padding
     assign: jnp.ndarray       # (rows,) int32 coarse list id, n_lists = pad
     list_start: jnp.ndarray   # (n_lists,) int32
     list_len: jnp.ndarray     # (n_lists,) int32
+    placement: jnp.ndarray    # (n_lists,) int32 shard id of each list
     max_list: int             # static: candidate width of the fine stage
+    n_shards: int             # static: data-partition count of the layout
+    shard_cap: int            # static: padded rows per shard block
 
     @property
     def rows(self) -> int:
@@ -62,11 +79,39 @@ class SealedSegment:
         live = self.live & ~jnp.asarray(dead)
         return dataclasses.replace(self, live=live)
 
+    def shard_views(self) -> Tuple[jnp.ndarray, ...]:
+        """Per-shard arrays for the list-sharded planner.
+
+        Returns ``(codes (n_shards, shard_cap, M), ids, live
+        (n_shards, shard_cap), loc_start, loc_len (n_shards, n_lists))``
+        where the local list tables address rows *within* a shard block
+        (lists placed elsewhere have length 0) — sharding the leading axis
+        over a mesh gives every device exactly its locally-placed lists.
+        """
+        n, cap = self.n_shards, self.shard_cap
+        M = self.codes.shape[1]
+        sh = jnp.arange(n, dtype=jnp.int32)[:, None]
+        own = self.placement[None, :] == sh
+        loc_start = jnp.where(own, self.list_start[None, :] - sh * cap,
+                              0).astype(jnp.int32)
+        loc_len = jnp.where(own, self.list_len[None, :], 0).astype(jnp.int32)
+        return (self.codes.reshape(n, cap, M), self.ids.reshape(n, cap),
+                self.live.reshape(n, cap), loc_start, loc_len)
+
 
 def seal(codes: np.ndarray, ids: np.ndarray, assign: np.ndarray,
-         n_lists: int, rows: int,
-         max_list: Optional[int] = None) -> SealedSegment:
-    """Lay ``(n, M)`` codes out as a list-sorted segment padded to ``rows``.
+         n_lists: int, rows: int, max_list: Optional[int] = None, *,
+         n_shards: int = 1, shard_round: int = 1) -> SealedSegment:
+    """Lay ``(n, M)`` codes out as a shard-major list-sorted segment.
+
+    ``rows`` is the minimum total padded size (flush-born segments pass
+    the hot capacity so every flush shares one compiled search shape);
+    with ``n_shards > 1`` the total grows to ``n_shards * shard_cap``
+    where ``shard_cap`` covers the heaviest shard of a fresh
+    occupancy-aware placement (:func:`plan_placement`), rounded up to a
+    multiple of ``shard_round`` — flush callers round to ``ceil(rows /
+    n_shards)`` to bound the number of distinct compiled fine-stage
+    shapes, compaction keeps the exact (tightest) width.
 
     ``max_list`` is the static fine-stage width; it defaults to the true
     longest list.  Flush-born segments pass ``rows == max_list == hot
@@ -77,23 +122,54 @@ def seal(codes: np.ndarray, ids: np.ndarray, assign: np.ndarray,
     n = len(ids)
     if n > rows:
         raise ValueError(f"cannot seal {n} rows into a {rows}-row segment")
-    order, start, length, true_max = build_lists(assign, n_lists)
+    if shard_round < 1:
+        raise ValueError(f"shard_round={shard_round} must be >= 1")
+    order, start0, length, true_max = build_lists(assign, n_lists)
     if max_list is None:
         max_list = true_max
+    placement = plan_placement(length, n_shards)
+    loads = placement_loads(placement, length, n_shards)
+    base = -(-rows // n_shards) if rows else 1
+    shard_cap = max(1, base,
+                    -(-int(max(loads.max(initial=0), 1)) // shard_round)
+                    * shard_round)
+    total = n_shards * shard_cap
+
+    # Exclusive running offset of each list inside the shard-major layout:
+    # lists grouped by (shard, list id), each shard block based at
+    # s * shard_cap.
+    ordL = np.lexsort((np.arange(n_lists), placement))
+    lens = length[ordL].astype(np.int64)
+    shard_of = placement[ordL]
+    run = np.cumsum(lens) - lens                     # grouped exclusive sum
+    first = np.searchsorted(shard_of, np.arange(n_shards))
+    shard_base = np.where(first < n_lists, run[np.minimum(first,
+                                                          n_lists - 1)], 0)
+    new_start = np.empty(n_lists, np.int64)
+    new_start[ordL] = (run - shard_base[shard_of]
+                       + shard_of.astype(np.int64) * shard_cap)
+    new_start = new_start.astype(np.int32)
+
     M = codes.shape[1]
-    codes_p = np.zeros((rows, M), np.int32)
-    ids_p = np.full((rows,), -1, np.int32)
-    live_p = np.zeros((rows,), bool)
-    assign_p = np.full((rows,), n_lists, np.int32)
-    codes_p[:n] = codes[order]
-    ids_p[:n] = ids[order]
-    live_p[:n] = True
-    assign_p[:n] = assign[order]
+    codes_p = np.zeros((total, M), np.int32)
+    ids_p = np.full((total,), -1, np.int32)
+    live_p = np.zeros((total,), bool)
+    assign_p = np.full((total,), n_lists, np.int32)
+    if n:
+        sorted_assign = np.asarray(assign)[order]
+        dest = new_start[sorted_assign] + (np.arange(n, dtype=np.int64)
+                                           - start0[sorted_assign])
+        codes_p[dest] = codes[order]
+        ids_p[dest] = ids[order]
+        live_p[dest] = True
+        assign_p[dest] = sorted_assign
     return SealedSegment(
         codes=jnp.asarray(codes_p), ids=jnp.asarray(ids_p),
         live=jnp.asarray(live_p), assign=jnp.asarray(assign_p),
-        list_start=jnp.asarray(start), list_len=jnp.asarray(length),
-        max_list=int(max_list))
+        list_start=jnp.asarray(new_start), list_len=jnp.asarray(length),
+        placement=jnp.asarray(placement),
+        max_list=int(max_list), n_shards=int(n_shards),
+        shard_cap=int(shard_cap))
 
 
 class HotBuffer:

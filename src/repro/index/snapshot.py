@@ -14,6 +14,13 @@ dedicated manifest entry and *validates* it on restore: an unregistered
 measure name or a record that disagrees with the embedded config is a
 hard error — codes in the snapshot were produced under that measure, so
 silently reinterpreting them under another would corrupt every distance.
+
+Format 3 persists the scale-out state: each segment's list-to-device
+``placement`` array plus its ``n_shards`` / ``shard_cap`` static metadata
+(the shard-major layout restores bit-exactly — no re-placement on
+restore), and the two-level coarse quantizer tables when the index has
+one.  Formats 1–2 remain restorable: their segments load as the
+single-shard layout (``placement`` all zeros, ``shard_cap`` = rows).
 """
 
 from __future__ import annotations
@@ -29,6 +36,7 @@ import numpy as np
 from ..checkpoint.ckpt import (MANIFEST, begin_atomic_dir, commit_atomic_dir,
                                gc_numbered_dirs, latest_numbered_dir,
                                write_manifest)
+from ..core.ivf import TwoLevelCoarse
 from ..core.pq import PQCodebook, PQConfig
 from .segments import SealedSegment
 from .streaming import IndexConfig, StreamingIndex
@@ -36,8 +44,9 @@ from .streaming import IndexConfig, StreamingIndex
 __all__ = ["save_snapshot", "restore_snapshot", "latest_snapshot"]
 
 _PREFIX = "snap_"
-_FORMAT = 2
-_SUPPORTED_FORMATS = (1, 2)   # 1 = pre-measure-registry snapshots (DTW)
+_FORMAT = 3
+_SUPPORTED_FORMATS = (1, 2, 3)   # 1 = pre-measure-registry snapshots (DTW),
+                                 # 2 = pre-scale-out (single-shard layout)
 
 
 def _name(step: int) -> str:
@@ -72,12 +81,17 @@ def save_snapshot(directory: str, index: StreamingIndex,
         "hot_ids": index.hot.ids,
         "hot_live": index.hot.live,
     }
+    if index.two_level is not None:
+        arrays["tl_top"] = index.two_level.top
+        arrays["tl_child_idx"] = index.two_level.child_idx
+        arrays["tl_child_valid"] = index.two_level.child_valid
     seg_meta = []
     for s, sg in enumerate(index.segments):
         for field in ("codes", "ids", "live", "assign", "list_start",
-                      "list_len"):
+                      "list_len", "placement"):
             arrays[f"seg{s:04d}_{field}"] = getattr(sg, field)
-        seg_meta.append({"max_list": sg.max_list})
+        seg_meta.append({"max_list": sg.max_list, "n_shards": sg.n_shards,
+                         "shard_cap": sg.shard_cap})
     for name, arr in arrays.items():
         np.save(os.path.join(tmp, f"{name}.npy"), np.asarray(arr))
 
@@ -90,6 +104,7 @@ def save_snapshot(directory: str, index: StreamingIndex,
         "config": cfg,
         "measure": None if spec is None else spec.to_manifest(),
         "dim": index.dim,
+        "two_level": index.two_level is not None,
         "next_id": index.next_id,
         "hot_count": index.hot.count,
         "segments": seg_meta,
@@ -148,8 +163,14 @@ def restore_snapshot(directory: str, step: Optional[int] = None
                     jnp.asarray(load("cb_lut")),
                     jnp.asarray(load("cb_env_upper")),
                     jnp.asarray(load("cb_env_lower")))
+    two_level = None
+    if manifest.get("two_level"):
+        two_level = TwoLevelCoarse(
+            top=jnp.asarray(load("tl_top")),
+            child_idx=jnp.asarray(load("tl_child_idx")),
+            child_valid=jnp.asarray(load("tl_child_valid")))
     index = StreamingIndex.from_parts(cfg, jnp.asarray(load("coarse")), cb,
-                                      manifest["dim"])
+                                      manifest["dim"], two_level=two_level)
     index.next_id = manifest["next_id"]
     index.hot.data[:] = load("hot_data")
     index.hot.ids[:] = load("hot_ids")
@@ -160,13 +181,27 @@ def restore_snapshot(directory: str, step: Optional[int] = None
     for s, meta in enumerate(manifest["segments"]):
         host_ids = load(f"seg{s:04d}_ids")
         host_live = load(f"seg{s:04d}_live")
+        codes = load(f"seg{s:04d}_codes")
+        list_start = load(f"seg{s:04d}_list_start")
+        if manifest["format"] >= 3:
+            placement = load(f"seg{s:04d}_placement")
+            n_shards = int(meta["n_shards"])
+            shard_cap = int(meta["shard_cap"])
+        else:
+            # pre-scale-out snapshots are the single-shard layout: every
+            # list on shard 0, the whole segment one shard block
+            placement = np.zeros(list_start.shape[0], np.int32)
+            n_shards = 1
+            shard_cap = codes.shape[0]
         index._add_segment(SealedSegment(
-            codes=jnp.asarray(load(f"seg{s:04d}_codes")),
+            codes=jnp.asarray(codes),
             ids=jnp.asarray(host_ids),
             live=jnp.asarray(host_live),
             assign=jnp.asarray(load(f"seg{s:04d}_assign")),
-            list_start=jnp.asarray(load(f"seg{s:04d}_list_start")),
+            list_start=jnp.asarray(list_start),
             list_len=jnp.asarray(load(f"seg{s:04d}_list_len")),
-            max_list=int(meta["max_list"])), host_ids=host_ids,
+            placement=jnp.asarray(placement),
+            max_list=int(meta["max_list"]), n_shards=n_shards,
+            shard_cap=shard_cap), host_ids=host_ids,
             host_live=host_live)
     return index

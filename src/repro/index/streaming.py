@@ -27,9 +27,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.dispatch import elastic_cdist
 from ..core.dtw import euclidean_sq
-from ..core.ivf import (coarse_assign, fine_rank, validate_codebook,
+from ..core.ivf import (TwoLevelCoarse, build_two_level, coarse_assign,
+                        coarse_dists, fine_rank, validate_codebook,
                         validate_n_probe)
 from ..core.lb_search import filtered_topk
 from ..core.kmeans import dba_kmeans
@@ -42,12 +42,46 @@ __all__ = ["IndexConfig", "StreamingIndex"]
 
 @dataclasses.dataclass(frozen=True)
 class IndexConfig:
-    """Lifecycle hyper-parameters around a :class:`PQConfig`."""
+    """Lifecycle hyper-parameters around a :class:`PQConfig`.
+
+    ``n_shards`` is the data-partition count of the sealed layout: every
+    segment is sealed shard-major for ``n_shards`` devices
+    (:mod:`repro.index.placement`), which the list-sharded planner
+    (:func:`repro.index.planner.search_sharded`) maps 1:1 onto the search
+    mesh.  ``n_shards == 1`` is the historical replicated layout.
+
+    ``n_top_lists > 0`` enables the hierarchical (two-level) coarse
+    quantizer: queries rank ``n_top_lists`` top cells and fan out to the
+    children of their ``n_probe_top`` nearest — an ``O(n_top +
+    fan_out)`` coarse stage instead of ``O(n_lists)``.  With
+    ``n_probe_top == n_top_lists`` results match the flat stage exactly.
+    """
     pq: PQConfig
     n_lists: int = 8
     hot_capacity: int = 128
     coarse_iters: int = 8
     coarse_window_frac: float = 0.1
+    n_shards: int = 1
+    n_top_lists: int = 0
+    n_probe_top: int = 0
+
+    def __post_init__(self):
+        if self.n_shards < 1:
+            raise ValueError(f"n_shards={self.n_shards} must be >= 1")
+        if self.n_top_lists:
+            if not 1 <= self.n_top_lists <= self.n_lists:
+                raise ValueError(
+                    f"n_top_lists={self.n_top_lists} out of range: must "
+                    f"satisfy 1 <= n_top_lists <= n_lists={self.n_lists}")
+            if not 1 <= self.n_probe_top <= self.n_top_lists:
+                raise ValueError(
+                    f"n_probe_top={self.n_probe_top} out of range: must "
+                    f"satisfy 1 <= n_probe_top <= n_top_lists="
+                    f"{self.n_top_lists}")
+        elif self.n_probe_top:
+            raise ValueError(
+                f"n_probe_top={self.n_probe_top} requires a two-level "
+                f"coarse quantizer (set n_top_lists > 0)")
 
     def coarse_window(self, D: int) -> int:
         return max(1, int(round(self.coarse_window_frac * D)))
@@ -72,8 +106,8 @@ def _rank_segment(codes, ids, live, list_start, list_len, dc, qluts, *,
 
 @functools.partial(jax.jit, static_argnames=("window", "k", "euclidean",
                                              "measure"))
-def _scan_hot(data, ids, live, Q, *, window: int, k: int, euclidean: bool,
-              measure=None):
+def _scan_hot(data, ids, live, Q, q_valid=None, *, window: int, k: int,
+              euclidean: bool, measure=None):
     """Exact scan of the hot buffer -> ``(Nq, k)`` d, ids.
 
     The configured elastic measure under PQDTW-style metrics, squared
@@ -85,15 +119,19 @@ def _scan_hot(data, ids, live, Q, *, window: int, k: int, euclidean: bool,
     pair is bounded cheaply and only candidates the cascade cannot exclude
     reach the exact banded wavefront — same distances, fewer sweeps.
     Measures without the pruning capabilities take its exact dense
-    fallback automatically."""
+    fallback automatically.  ``q_valid`` is the optional query padding
+    mask of the sharded planner — masked rows produce ``inf``/``-1`` and
+    never claim LB-cascade refine work."""
     if euclidean:
         d2 = euclidean_sq(Q, data)
         dh = jnp.sqrt(jnp.maximum(d2, 0.0))
         dh = jnp.where(live[None, :], dh, jnp.inf)           # (Nq, cap)
+        if q_valid is not None:
+            dh = jnp.where(q_valid[:, None], dh, jnp.inf)
         neg, idx = jax.lax.top_k(-dh, k)
         return -neg, jnp.where(jnp.isfinite(neg), ids[idx], -1)
     d2, idx, _ = filtered_topk(Q, data, window, k, valid=live,
-                               measure=measure)
+                               measure=measure, q_valid=q_valid)
     dh = jnp.sqrt(jnp.maximum(d2, 0.0))
     return dh, jnp.where(idx >= 0, ids[jnp.maximum(idx, 0)], -1)
 
@@ -118,7 +156,10 @@ def search_impl(coarse: jnp.ndarray, cb: PQCodebook,
                 segs: Tuple[SealedSegment, ...],
                 hot: Optional[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]],
                 Q: jnp.ndarray, *, icfg: IndexConfig, n_probe: int,
-                topk: int, dim: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                topk: int, dim: int,
+                two_level: Optional[TwoLevelCoarse] = None,
+                q_valid: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Fan ``Q (Nq, D)`` out over every segment and merge top-k.
 
     ``segs`` is a (possibly empty) tuple of sealed segments; ``hot`` is
@@ -127,6 +168,12 @@ def search_impl(coarse: jnp.ndarray, cb: PQCodebook,
     ``inf`` / id ``-1`` where fewer than ``topk`` live rows exist.  Sealed
     rows are ranked by asymmetric PQDTW, hot rows by exact banded DTW —
     both in sqrt space, so the merge is order-compatible.
+
+    ``two_level`` switches the coarse stage to the hierarchical quantizer
+    with the config's ``n_probe_top`` fan-out; ``q_valid (Nq,)`` marks
+    padding rows of a sharded query batch (results for masked rows are
+    arbitrary — the caller slices them off — but they are excluded from
+    LB-cascade refine work and pruning statistics).
 
     Deliberately NOT one enclosing jit: the pieces (coarse cdist, query
     LUTs, per-segment fine stage, hot scan, final merge) are jitted
@@ -140,7 +187,10 @@ def search_impl(coarse: jnp.ndarray, cb: PQCodebook,
     spec = icfg.pq.measure()
     if segs:
         w = icfg.coarse_window(dim)
-        dc = elastic_cdist(Q, coarse, w, measure=spec)       # (Nq, n_lists)
+        dc = coarse_dists(
+            Q, coarse, w, measure=spec, two_level=two_level,
+            n_probe_top=icfg.n_probe_top if two_level is not None
+            else None)                                       # (Nq, n_lists)
         qluts = query_lut_batch(segment(Q, icfg.pq), cb,
                                 icfg.pq.window(dim),
                                 not icfg.pq.is_elastic, spec)  # (Nq, M, K)
@@ -157,7 +207,7 @@ def search_impl(coarse: jnp.ndarray, cb: PQCodebook,
 
     if hot is not None:
         data, ids, live = hot
-        d, i = _scan_hot(data, ids, live, Q,
+        d, i = _scan_hot(data, ids, live, Q, q_valid,
                          window=icfg.coarse_window(dim),
                          k=min(topk, data.shape[0]),
                          euclidean=not icfg.pq.is_elastic,
@@ -185,7 +235,8 @@ class StreamingIndex:
     """
 
     def __init__(self, cfg: IndexConfig, coarse: jnp.ndarray,
-                 cb: PQCodebook, dim: int):
+                 cb: PQCodebook, dim: int,
+                 two_level: Optional[TwoLevelCoarse] = None):
         if coarse.shape[0] != cfg.n_lists:
             raise ValueError(
                 f"coarse quantizer has {coarse.shape[0]} centroids, "
@@ -202,6 +253,15 @@ class StreamingIndex:
         self.coarse = jnp.asarray(coarse, jnp.float32)
         self.cb = cb
         self.dim = int(dim)
+        # hierarchical coarse quantizer: derived deterministically from the
+        # (frozen) coarse centroids when the config asks for one, unless a
+        # pre-built table is handed in (the snapshot-restore path)
+        if two_level is None and cfg.n_top_lists:
+            two_level = build_two_level(
+                jax.random.PRNGKey(0), self.coarse, cfg.n_top_lists,
+                cfg.coarse_window(self.dim), measure=cfg.pq.measure(),
+                iters=cfg.coarse_iters)
+        self.two_level = two_level
         self.hot = HotBuffer(cfg.hot_capacity, dim)
         self.segments: List[SealedSegment] = []
         # host-side mirrors of each segment's id array (immutable) and live
@@ -235,8 +295,10 @@ class StreamingIndex:
 
     @classmethod
     def from_parts(cls, cfg: IndexConfig, coarse: jnp.ndarray,
-                   cb: PQCodebook, dim: int) -> "StreamingIndex":
-        return cls(cfg, coarse, cb, dim)
+                   cb: PQCodebook, dim: int,
+                   two_level: Optional[TwoLevelCoarse] = None
+                   ) -> "StreamingIndex":
+        return cls(cfg, coarse, cb, dim, two_level=two_level)
 
     # -- write path ---------------------------------------------------------
 
@@ -307,8 +369,13 @@ class StreamingIndex:
             Xj, self.coarse, self.cfg.coarse_window(self.dim),
             self.cfg.pq.measure()))
         cap = self.cfg.hot_capacity
+        # shard_round = ceil(cap / n_shards): every flush-born segment gets
+        # the same shard_cap regardless of list skew, so they all share one
+        # compiled fine-stage / planner shape
         self._add_segment(seal(codes, ids, assign, self.cfg.n_lists,
-                               rows=cap, max_list=cap))
+                               rows=cap, max_list=cap,
+                               n_shards=self.cfg.n_shards,
+                               shard_round=-(-cap // self.cfg.n_shards)))
 
     def compact(self) -> None:
         """Merge every sealed segment into one: tombstoned and padding rows
@@ -332,7 +399,8 @@ class StreamingIndex:
         if len(ids) == 0:
             return
         self._add_segment(seal(codes, ids, assign, self.cfg.n_lists,
-                               rows=len(ids)))
+                               rows=len(ids),
+                               n_shards=self.cfg.n_shards))
 
     # -- read path ----------------------------------------------------------
 
@@ -343,7 +411,7 @@ class StreamingIndex:
         return search_impl(self.coarse, self.cb, tuple(self.segments),
                            self._hot_arrays(), Q,
                            icfg=self.cfg, n_probe=n_probe, topk=topk,
-                           dim=self.dim)
+                           dim=self.dim, two_level=self.two_level)
 
     def _validate(self, Q, n_probe: int, topk: int) -> jnp.ndarray:
         Q = jnp.asarray(Q, jnp.float32)
@@ -397,7 +465,8 @@ class StreamingIndex:
         return memory_cost(self.cfg.pq, self.dim, rows,
                            n_segments=self.n_segments,
                            n_lists=self.cfg.n_lists,
-                           hot_capacity=self.cfg.hot_capacity)
+                           hot_capacity=self.cfg.hot_capacity,
+                           n_devices=self.cfg.n_shards)
 
     def stats(self) -> dict:
         return dict(n_segments=self.n_segments, n_live=self.n_live(),

@@ -1,0 +1,505 @@
+"""List-sharded scale-out: occupancy-aware placement, the shard-major
+sealed layout, the list-partitioned planner with device-resident fan-in,
+the two-level coarse quantizer, query-padding masks, per-device memory
+accounting, and snapshot format 3."""
+
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import MANIFEST
+from repro.core import dispatch
+from repro.core.dispatch import use_backend
+from repro.core.ivf import build_two_level, coarse_dists
+from repro.core.lb_search import filtered_topk
+from repro.core.pq import PQConfig, memory_cost
+from repro.data.timeseries import cbf
+from repro.index import (IndexConfig, StreamingIndex, placement_loads,
+                         plan_placement, restore_snapshot, save_snapshot,
+                         search_sharded)
+from repro.index.segments import seal
+from repro.launch.mesh import make_search_mesh, validate_search_mesh
+
+
+def _config(**kw):
+    pq = PQConfig(n_sub=4, codebook_size=8, use_prealign=False,
+                  kmeans_iters=2, dba_iters=1)
+    base = dict(pq=pq, n_lists=4, hot_capacity=12, coarse_iters=3)
+    base.update(kw)
+    return IndexConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def data():
+    X, _ = cbf(n_per_class=12, length=48, seed=0)    # 36 series
+    Q, _ = cbf(n_per_class=2, length=48, seed=7)     # 6 queries
+    return X.astype(np.float32), Q.astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def booted(data):
+    X, _ = data
+    return StreamingIndex.bootstrap(jax.random.PRNGKey(0), X, _config())
+
+
+def _fresh(booted, **cfg_kw):
+    """Empty index on booted's trained quantizers, config overridable —
+    the quantizers depend only on pq/n_lists, which stay fixed."""
+    cfg = dataclasses.replace(booted.cfg, **cfg_kw)
+    return StreamingIndex.from_parts(cfg, booted.coarse, booted.cb,
+                                     booted.dim)
+
+
+class TestPlacement:
+    def test_lpt_makespan_bound(self):
+        """Greedy LPT guarantee: heaviest shard <= average + one list."""
+        rng = np.random.default_rng(0)
+        for n_shards in (2, 3, 4, 7):
+            for _ in range(20):
+                counts = rng.integers(0, 50, size=rng.integers(1, 40))
+                p = plan_placement(counts, n_shards)
+                assert p.shape == counts.shape and p.dtype == np.int32
+                assert (0 <= p).all() and (p < n_shards).all()
+                loads = placement_loads(p, counts, n_shards)
+                assert loads.sum() == counts.sum()
+                bound = counts.sum() / n_shards + counts.max(initial=0)
+                assert loads.max() <= bound
+
+    def test_deterministic(self):
+        counts = np.array([5, 9, 1, 9, 3, 0, 7])
+        p1 = plan_placement(counts, 3)
+        p2 = plan_placement(counts, 3)
+        np.testing.assert_array_equal(p1, p2)
+
+    def test_single_shard_and_validation(self):
+        np.testing.assert_array_equal(
+            plan_placement(np.array([3, 1, 4]), 1), np.zeros(3, np.int32))
+        with pytest.raises(ValueError, match="n_shards"):
+            plan_placement(np.array([1, 2]), 0)
+        with pytest.raises(ValueError, match="1-D"):
+            plan_placement(np.zeros((2, 2)), 2)
+
+
+def _toy_rows(n=23, n_lists=5, m=4, seed=3):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 8, size=(n, m)).astype(np.int32)
+    ids = np.arange(n, dtype=np.int32)
+    assign = rng.integers(0, n_lists, size=n).astype(np.int32)
+    return codes, ids, assign
+
+
+class TestSealLayout:
+    def test_shard_major_blocks(self):
+        codes, ids, assign = _toy_rows()
+        sg = seal(codes, ids, assign, 5, rows=23, n_shards=3)
+        assert sg.rows == 3 * sg.shard_cap
+        start = np.asarray(sg.list_start)
+        length = np.asarray(sg.list_len)
+        placed = np.asarray(sg.placement)
+        seg_ids = np.asarray(sg.ids)
+        seg_assign = np.asarray(sg.assign)
+        for l in range(5):
+            lo, n = start[l], length[l]
+            s = placed[l]
+            # every list is one contiguous run inside its shard's block
+            assert s * sg.shard_cap <= lo
+            assert lo + n <= (s + 1) * sg.shard_cap
+            assert (seg_assign[lo:lo + n] == l).all()
+            want = set(ids[assign == l].tolist())
+            assert set(seg_ids[lo:lo + n].tolist()) == want
+        # padding rows carry the usual sentinels
+        pad = seg_ids == -1
+        assert (~np.asarray(sg.live)[pad]).all()
+        assert (seg_assign[pad] == 5).all()
+
+    def test_single_shard_reproduces_legacy_layout(self):
+        codes, ids, assign = _toy_rows()
+        a = seal(codes, ids, assign, 5, rows=30)
+        b = seal(codes, ids, assign, 5, rows=30, n_shards=1)
+        np.testing.assert_array_equal(np.asarray(a.codes),
+                                      np.asarray(b.codes))
+        np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+        np.testing.assert_array_equal(np.asarray(a.list_start),
+                                      np.asarray(b.list_start))
+        assert a.shard_cap == 30 and a.n_shards == 1
+
+    def test_per_shard_occupancy_bound(self):
+        """Acceptance bound: per-device rows (hence sealed-code bytes)
+        <= total / n_shards + one list's worth (+ ceil rounding)."""
+        codes, ids, assign = _toy_rows(n=97, n_lists=11, seed=9)
+        for n_shards in (2, 3, 4):
+            sg = seal(codes, ids, assign, 11, rows=97, n_shards=n_shards)
+            max_len = int(np.asarray(sg.list_len).max())
+            assert sg.shard_cap <= -(-97 // n_shards) + max_len
+
+    def test_shard_views_consistent_with_global_tables(self):
+        codes, ids, assign = _toy_rows()
+        sg = seal(codes, ids, assign, 5, rows=23, n_shards=3)
+        v_codes, v_ids, v_live, loc_start, loc_len = (
+            np.asarray(a) for a in sg.shard_views())
+        assert v_codes.shape == (3, sg.shard_cap, 4)
+        placed = np.asarray(sg.placement)
+        start = np.asarray(sg.list_start)
+        length = np.asarray(sg.list_len)
+        for s in range(3):
+            for l in range(5):
+                if placed[l] == s:
+                    assert loc_len[s, l] == length[l]
+                    lo = loc_start[s, l]
+                    np.testing.assert_array_equal(
+                        v_ids[s, lo:lo + length[l]],
+                        np.asarray(sg.ids)[start[l]:start[l] + length[l]])
+                else:
+                    assert loc_len[s, l] == 0
+
+    def test_seal_validation(self):
+        codes, ids, assign = _toy_rows()
+        with pytest.raises(ValueError, match="shard_round"):
+            seal(codes, ids, assign, 5, rows=23, shard_round=0)
+
+
+class TestConfigValidation:
+    def test_bad_shards_and_two_level(self):
+        with pytest.raises(ValueError, match="n_shards"):
+            _config(n_shards=0)
+        with pytest.raises(ValueError, match="n_top_lists"):
+            _config(n_top_lists=5)               # > n_lists=4
+        with pytest.raises(ValueError, match="n_probe_top"):
+            _config(n_top_lists=2)               # missing n_probe_top
+        with pytest.raises(ValueError, match="n_probe_top"):
+            _config(n_top_lists=2, n_probe_top=3)
+        with pytest.raises(ValueError, match="n_probe_top"):
+            _config(n_probe_top=1)               # without n_top_lists
+
+
+class TestTwoLevelCoarse:
+    def test_exhaustive_fanout_matches_flat(self, data, booted):
+        _, Q = data
+        w = booted.cfg.coarse_window(booted.dim)
+        tl = build_two_level(jax.random.PRNGKey(0), booted.coarse, 2, w)
+        dc_flat = coarse_dists(Q, booted.coarse, w)
+        dc_tl = coarse_dists(Q, booted.coarse, w, two_level=tl,
+                             n_probe_top=tl.n_top)
+        np.testing.assert_allclose(np.asarray(dc_tl), np.asarray(dc_flat),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_partial_fanout_is_masked_subset(self, data, booted):
+        _, Q = data
+        w = booted.cfg.coarse_window(booted.dim)
+        tl = build_two_level(jax.random.PRNGKey(0), booted.coarse, 3, w)
+        dc_flat = np.asarray(coarse_dists(Q, booted.coarse, w))
+        dc_tl = np.asarray(coarse_dists(Q, booted.coarse, w, two_level=tl,
+                                        n_probe_top=1))
+        finite = np.isfinite(dc_tl)
+        assert finite.any(axis=1).all()          # every query probes lists
+        assert not finite.all()                  # and some were skipped
+        np.testing.assert_allclose(dc_tl[finite], dc_flat[finite],
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_index_search_exhaustive_fanout_equals_flat(self, data, booted):
+        X, Q = data
+        flat = _fresh(booted)
+        hier = _fresh(booted, n_top_lists=2, n_probe_top=2)
+        flat.insert(X[:30])
+        hier.insert(X[:30])
+        d0, i0 = flat.search(Q, n_probe=4, topk=5)
+        d1, i1 = hier.search(Q, n_probe=4, topk=5)
+        np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+        np.testing.assert_allclose(np.asarray(d0), np.asarray(d1),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_routing_counters_including_non_dtw(self, data, booted):
+        """two_level_coarse is ledgered per backend and per measure — the
+        CI routing gate requires both the bare op and a non-DTW variant."""
+        _, Q = data
+        w = booted.cfg.coarse_window(booted.dim)
+        tl = build_two_level(jax.random.PRNGKey(0), booted.coarse, 2, w)
+        with use_backend("pallas_interpret"):
+            dispatch.reset_stats()
+            dispatch.two_level_coarse(Q, tl.top, booted.coarse,
+                                      tl.child_idx, tl.child_valid, w,
+                                      n_probe_top=2)
+            dispatch.two_level_coarse(Q, tl.top, booted.coarse,
+                                      tl.child_idx, tl.child_valid, w,
+                                      n_probe_top=2, measure="msm")
+        assert dispatch.stats.get(
+            ("two_level_coarse", "pallas_interpret"), 0) == 2
+        assert dispatch.stats.get(
+            ("two_level_coarse[msm]", "pallas_interpret"), 0) == 1
+
+    def test_build_and_fanout_validation(self, booted):
+        w = booted.cfg.coarse_window(booted.dim)
+        with pytest.raises(ValueError, match="n_top"):
+            build_two_level(jax.random.PRNGKey(0), booted.coarse, 9, w)
+        tl = build_two_level(jax.random.PRNGKey(0), booted.coarse, 2, w)
+        with pytest.raises(ValueError, match="n_probe_top"):
+            coarse_dists(jnp.zeros((1, booted.dim)), booted.coarse, w,
+                         two_level=tl)
+        with pytest.raises(ValueError, match="n_probe_top"):
+            coarse_dists(jnp.zeros((1, booted.dim)), booted.coarse, w,
+                         two_level=tl, n_probe_top=3)
+
+
+class TestQueryValidMask:
+    def _padded(self, Q, pad):
+        Qp = np.concatenate([Q, np.zeros((pad, Q.shape[1]), Q.dtype)])
+        q_valid = jnp.arange(len(Qp)) < len(Q)
+        return jnp.asarray(Qp), q_valid
+
+    @pytest.mark.parametrize("measure", [None, "msm"])
+    def test_masked_rows_inert(self, data, measure):
+        """Padded query rows return inf/-1, leave real rows' results
+        untouched, and claim zero LB-cascade refine work."""
+        X, Q = data
+        Qp, q_valid = self._padded(Q, 3)
+        d0, i0, n0 = filtered_topk(jnp.asarray(Q), jnp.asarray(X), 5, 4,
+                                   measure=measure)
+        d1, i1, n1 = filtered_topk(Qp, jnp.asarray(X), 5, 4,
+                                   measure=measure, q_valid=q_valid)
+        np.testing.assert_allclose(np.asarray(d1)[:len(Q)], np.asarray(d0),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(i1)[:len(Q)],
+                                      np.asarray(i0))
+        assert np.isinf(np.asarray(d1)[len(Q):]).all()
+        assert (np.asarray(i1)[len(Q):] == -1).all()
+        # pad rows never inflate the refine count past the real-query
+        # worst case (and the dense fallback counts only real pairs)
+        assert int(n1) <= len(Q) * len(X)
+
+    def test_sharded_padding_excluded_from_hot_scan(self, data, booted):
+        """search_sharded on a non-divisible batch (hot rows only, so the
+        whole result comes from the masked filtered_topk) matches the
+        unpadded direct search."""
+        X, Q = data
+        idx = _fresh(booted)
+        idx.insert(X[:8])                        # hot only
+        d0, i0 = idx.search(Q[:3], n_probe=2, topk=4)
+        d1, i1 = search_sharded(idx, Q[:3], n_probe=2, topk=4,
+                                partition="queries")
+        np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+        np.testing.assert_allclose(np.asarray(d0), np.asarray(d1),
+                                   rtol=1e-6, atol=1e-6)
+
+
+class TestListShardedPlanner:
+    @pytest.mark.parametrize("backend", ["jax", "pallas_interpret"])
+    def test_matches_direct_and_replicated(self, data, booted, backend):
+        """The three plans (direct, query-sharded, list-sharded) agree on
+        whatever mesh the runtime provides, on both backends."""
+        X, Q = data
+        n_dev = len(jax.devices())
+        idx = _fresh(booted, n_shards=n_dev)
+        idx.insert(X[:30])                       # sealed segments + hot
+        idx.delete([2, 13])
+        with use_backend(backend):
+            d0, i0 = idx.search(Q, n_probe=3, topk=4)
+            d1, i1 = search_sharded(idx, Q, n_probe=3, topk=4,
+                                    partition="queries")
+            d2, i2 = search_sharded(idx, Q, n_probe=3, topk=4,
+                                    partition="lists")
+        for d, i in ((d1, i1), (d2, i2)):
+            np.testing.assert_array_equal(np.asarray(i0), np.asarray(i))
+            np.testing.assert_allclose(np.asarray(d0), np.asarray(d),
+                                       rtol=1e-6, atol=1e-6)
+
+    def test_auto_partition_selects_lists(self, data, booted):
+        X, Q = data
+        n_dev = len(jax.devices())
+        idx = _fresh(booted, n_shards=n_dev)
+        idx.insert(X[:30])
+        d0, i0 = idx.search(Q, n_probe=3, topk=4)
+        d1, i1 = search_sharded(idx, Q, n_probe=3, topk=4)   # auto
+        np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+        np.testing.assert_allclose(np.asarray(d0), np.asarray(d1),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_layout_mesh_mismatch_raises(self, data, booted):
+        X, Q = data
+        n_dev = len(jax.devices())
+        idx = _fresh(booted, n_shards=n_dev + 1)
+        idx.insert(X[:12])
+        with pytest.raises(ValueError, match="n_shards"):
+            search_sharded(idx, Q, n_probe=2, topk=2, partition="lists")
+
+    def test_partition_arg_validation(self, data, booted):
+        _, Q = data
+        idx = _fresh(booted)
+        with pytest.raises(ValueError, match="partition"):
+            search_sharded(idx, Q, n_probe=2, partition="bogus")
+
+    def test_empty_and_hot_only_list_sharded(self, data, booted):
+        X, Q = data
+        n_dev = len(jax.devices())
+        idx = _fresh(booted, n_shards=n_dev)
+        d, ids = search_sharded(idx, Q, n_probe=2, topk=3,
+                                partition="lists")
+        assert np.isinf(np.asarray(d)).all()
+        assert (np.asarray(ids) == -1).all()
+        idx.insert(X[:6])                        # hot only, no segments
+        d, ids = search_sharded(idx, Q, n_probe=2, topk=3,
+                                partition="lists")
+        d0, i0 = idx.search(Q, n_probe=2, topk=3)
+        np.testing.assert_array_equal(np.asarray(i0), np.asarray(ids))
+        np.testing.assert_allclose(np.asarray(d0), np.asarray(d),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_validate_search_mesh(self):
+        mesh = make_search_mesh()
+        validate_search_mesh(mesh, len(jax.devices()))
+        with pytest.raises(ValueError, match="n_shards"):
+            validate_search_mesh(mesh, len(jax.devices()) + 1)
+
+    @pytest.mark.slow
+    def test_list_sharded_multi_device_property(self):
+        """The full equivalence chain on 4 simulated host devices: direct
+        == query-sharded == list-sharded, on jax AND pallas_interpret,
+        with a non-divisible query count, after deletes + compact(), and
+        across a snapshot round-trip."""
+        import subprocess
+        import sys
+
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        env = dict(os.environ,
+                   XLA_FLAGS="--xla_force_host_platform_device_count=4",
+                   JAX_PLATFORMS="cpu",
+                   PYTHONPATH=os.path.join(root, "src"))
+        code = """
+import numpy as np, jax
+assert len(jax.devices()) == 4
+from repro.core.dispatch import use_backend
+from repro.core.pq import PQConfig
+from repro.index import (IndexConfig, StreamingIndex, restore_snapshot,
+                         save_snapshot, search_sharded)
+from repro.data.timeseries import cbf
+
+X, _ = cbf(12, length=48, seed=0)
+Q, _ = cbf(2, length=48, seed=7)          # 6 queries: not divisible by 4
+pq = PQConfig(n_sub=4, codebook_size=8, use_prealign=False,
+              kmeans_iters=2, dba_iters=1)
+cfg = IndexConfig(pq=pq, n_lists=4, hot_capacity=12, coarse_iters=3,
+                  n_shards=4, n_top_lists=2, n_probe_top=2)
+idx = StreamingIndex.bootstrap(jax.random.PRNGKey(0), X, cfg)
+idx.insert(X[:30]); idx.delete([3, 17])
+
+def check(ix):
+    d0, i0 = ix.search(Q, n_probe=3, topk=4)
+    for backend in ("jax", "pallas_interpret"):
+        with use_backend(backend):
+            for part in ("queries", "lists"):
+                d, i = search_sharded(ix, Q, n_probe=3, topk=4,
+                                      partition=part)
+                np.testing.assert_array_equal(np.asarray(i0), np.asarray(i))
+                np.testing.assert_allclose(np.asarray(d0), np.asarray(d),
+                                           rtol=1e-6, atol=1e-6)
+
+check(idx)
+idx.delete([5, 21]); idx.compact()
+assert all(sg.n_shards == 4 for sg in idx.segments)
+check(idx)
+import tempfile
+with tempfile.TemporaryDirectory() as tmp:
+    save_snapshot(tmp, idx)
+    back = restore_snapshot(tmp)
+for a, b in zip(idx.segments, back.segments):
+    assert a.n_shards == b.n_shards and a.shard_cap == b.shard_cap
+    np.testing.assert_array_equal(np.asarray(a.placement),
+                                  np.asarray(b.placement))
+check(back)
+print("OK")
+"""
+        res = subprocess.run([sys.executable, "-c", code], env=env,
+                             capture_output=True, text=True, timeout=900)
+        assert res.returncode == 0, res.stderr[-2000:]
+
+
+class TestPerDeviceAccounting:
+    def test_memory_cost_per_device_keys(self):
+        pq = PQConfig(n_sub=4, codebook_size=8, use_prealign=False)
+        one = memory_cost(pq, 48, 1000, n_segments=2, n_lists=8,
+                          hot_capacity=64)
+        assert "max_device_bytes" not in one     # n_devices=1: old surface
+        for n_dev in (2, 4, 8):
+            m = memory_cost(pq, 48, 1000, n_segments=2, n_lists=8,
+                            hot_capacity=64, n_devices=n_dev)
+            assert m["n_devices"] == n_dev
+            assert (m["replicated_bytes"] + m["partitioned_bytes"]
+                    == m["index_bytes"] + m["aux_bytes"]
+                    + m["coarse_bytes"])
+            assert m["max_device_bytes"] == (
+                m["replicated_bytes"]
+                + -(-m["partitioned_bytes"] // n_dev))
+            # index_bytes keeps its meaning regardless of the mesh
+            assert m["index_bytes"] == one["index_bytes"]
+
+    def test_partitioned_share_shrinks_linearly(self):
+        pq = PQConfig(n_sub=8, codebook_size=16, use_prealign=False)
+        m1 = memory_cost(pq, 96, 100_000, n_segments=1, n_lists=64,
+                         hot_capacity=128, n_devices=2)
+        m2 = memory_cost(pq, 96, 100_000, n_segments=1, n_lists=64,
+                         hot_capacity=128, n_devices=4)
+        shrink = ((m1["max_device_bytes"] - m1["replicated_bytes"])
+                  / (m2["max_device_bytes"] - m2["replicated_bytes"]))
+        assert shrink == pytest.approx(2.0, rel=0.01)
+
+
+class TestSnapshotFormat3:
+    def test_roundtrip_sharded_and_two_level(self, data, booted, tmp_path):
+        X, Q = data
+        idx = _fresh(booted, n_shards=2, n_top_lists=2, n_probe_top=2)
+        idx.insert(X[:30])
+        idx.delete([4, 14])
+        idx.compact()
+        save_snapshot(str(tmp_path), idx)
+        with open(os.path.join(str(tmp_path), "snap_0000000000",
+                               MANIFEST)) as f:
+            assert json.load(f)["format"] == 3
+        back = restore_snapshot(str(tmp_path))
+        assert back.two_level is not None
+        np.testing.assert_array_equal(np.asarray(idx.two_level.top),
+                                      np.asarray(back.two_level.top))
+        for a, b in zip(idx.segments, back.segments):
+            assert (a.n_shards, a.shard_cap) == (b.n_shards, b.shard_cap)
+            np.testing.assert_array_equal(np.asarray(a.placement),
+                                          np.asarray(b.placement))
+        d0, i0 = idx.search(Q, n_probe=3, topk=4)
+        d1, i1 = back.search(Q, n_probe=3, topk=4)
+        np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+        np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+
+    def test_restores_format2_single_shard_layout(self, data, booted,
+                                                  tmp_path):
+        """A doctored pre-scale-out snapshot (format 2: no placement
+        arrays, no shard metadata, no scale-out config fields) restores to
+        the single-shard layout with identical search results."""
+        X, Q = data
+        idx = _fresh(booted)
+        idx.insert(X[:30])
+        idx.flush()
+        save_snapshot(str(tmp_path), idx)
+        d = os.path.join(str(tmp_path), "snap_0000000000")
+        with open(os.path.join(d, MANIFEST)) as f:
+            manifest = json.load(f)
+        manifest["format"] = 2
+        manifest.pop("two_level")
+        for k in ("n_shards", "n_top_lists", "n_probe_top"):
+            manifest["config"].pop(k)
+        for meta in manifest["segments"]:
+            meta.pop("n_shards")
+            meta.pop("shard_cap")
+        for name in list(os.listdir(d)):
+            if "placement" in name:
+                os.remove(os.path.join(d, name))
+        with open(os.path.join(d, MANIFEST), "w") as f:
+            json.dump(manifest, f)
+        back = restore_snapshot(str(tmp_path))
+        assert all(sg.n_shards == 1 for sg in back.segments)
+        assert all(sg.shard_cap == sg.rows for sg in back.segments)
+        d0, i0 = idx.search(Q, n_probe=3, topk=4)
+        d1, i1 = back.search(Q, n_probe=3, topk=4)
+        np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+        np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
