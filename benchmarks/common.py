@@ -67,8 +67,15 @@ def backend_headline() -> Dict[str, object]:
 
 
 def timeit(fn: Callable, *args, repeats: int = 3, warmup: int = 1,
-           **kwargs) -> Dict[str, float]:
-    """Median wall time of ``fn(*args)`` with jit warmup; blocks on results."""
+           **kwargs) -> Dict[str, object]:
+    """Median wall time of ``fn(*args)`` with jit warmup; blocks on results.
+
+    Returns the raw per-repetition samples (``samples_s``, wall order) and
+    latency percentiles (``p50_s``/``p99_s``, linear-interpolated like
+    ``np.percentile`` — same estimator the obs layer exports) alongside
+    the legacy ``median_s``/``min_s``/``max_s`` keys, so suites can report
+    tail latency without re-running."""
+    from repro.obs import percentile
     if SMOKE:
         repeats, warmup = 1, min(warmup, 1)
     for _ in range(warmup):
@@ -78,9 +85,13 @@ def timeit(fn: Callable, *args, repeats: int = 3, warmup: int = 1,
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args, **kwargs))
         times.append(time.perf_counter() - t0)
-    times.sort()
-    return {"median_s": times[len(times) // 2], "min_s": times[0],
-            "max_s": times[-1], "repeats": repeats}
+    srt = sorted(times)
+    return {"median_s": srt[len(srt) // 2], "min_s": srt[0],
+            "max_s": srt[-1], "repeats": repeats,
+            "mean_s": sum(times) / len(times),
+            "p50_s": percentile(times, 50.0),
+            "p99_s": percentile(times, 99.0),
+            "samples_s": times}
 
 
 class Bench:

@@ -44,17 +44,18 @@ index = StreamingIndex.bootstrap(
 index.insert(random_walks(n_seg * cap, D, seed=2))
 index.compact()                       # one merged, placement-balanced shard
 Q = random_walks(16, D, seed=99)
-lat = dict()
-lat["direct"] = timeit(lambda: index.search(Q, n_probe=4, topk=3),
-                       repeats=3)["median_s"]
+lat, lat_p99 = dict(), dict()
+t = timeit(lambda: index.search(Q, n_probe=4, topk=3), repeats=3)
+lat["direct"], lat_p99["direct"] = t["median_s"], t["p99_s"]
 for part in ("queries", "lists"):
-    lat[part] = timeit(lambda: search_sharded(index, Q, n_probe=4, topk=3,
-                                              partition=part),
-                       repeats=3)["median_s"]
+    t = timeit(lambda: search_sharded(index, Q, n_probe=4, topk=3,
+                                      partition=part), repeats=3)
+    lat[part], lat_p99[part] = t["median_s"], t["p99_s"]
 sg = index.segments[0]
 mc = index.memory_cost()
 print("LEG:" + json.dumps(dict(
-    n_devices=n_dev, latency_s=lat, live_rows=index.n_live(),
+    n_devices=n_dev, latency_s=lat, latency_p99_s=lat_p99,
+    live_rows=index.n_live(),
     shard_cap=sg.shard_cap, max_list=int(np.asarray(sg.list_len).max()),
     code_bytes=mc["code_bytes"],
     max_device_bytes=mc.get("max_device_bytes", mc["total_bytes"]),
@@ -98,7 +99,8 @@ def run(quick: bool = True) -> Bench:
         assert index.n_segments == n_seg
         t = timeit(lambda: index.search(Q, n_probe=4, topk=3), repeats=3)
         b.add(op="search", n_segments=n_seg, rows=n_seg * cap,
-              latency_s=t["median_s"])
+              latency_s=t["median_s"], latency_p50_s=t["p50_s"],
+              latency_p99_s=t["p99_s"])
 
     # --- compaction: cost of the merge, payoff on query latency -------------
     t0 = time.perf_counter()
@@ -107,7 +109,8 @@ def run(quick: bool = True) -> Bench:
     t = timeit(lambda: index.search(Q, n_probe=4, topk=3), repeats=3)
     b.add(op="compact", merged_rows=index.segments[0].rows,
           max_list=index.segments[0].max_list, compact_s=t_cmp,
-          post_compact_latency_s=t["median_s"])
+          post_compact_latency_s=t["median_s"],
+          post_compact_latency_p99_s=t["p99_s"])
 
     # --- device scaling: replicated vs list-sharded layout ------------------
     # Simulated host devices share one CPU, so wall-clock speedup is not the
@@ -143,6 +146,7 @@ def run(quick: bool = True) -> Bench:
               latency_direct_s=lat["direct"],
               latency_query_sharded_s=lat["queries"],
               latency_list_sharded_s=lat["lists"],
+              latency_list_sharded_p99_s=leg["latency_p99_s"]["lists"],
               fanin_overhead_s=lat["lists"] - lat["queries"],
               per_device_speedup=lat["direct"] / lat["lists"],
               max_device_bytes=leg["max_device_bytes"],

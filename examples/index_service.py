@@ -9,6 +9,13 @@ interleaved queries, deletions of stale ids, a periodic compaction, and a
 crash-safe snapshot that a "restarted" service restores and keeps serving
 from.  Runs on CPU in seconds; set REPRO_ELASTIC_BACKEND=pallas_interpret
 to push every elastic hot path through the Pallas kernel bodies.
+
+The service runs with the observability layer on (``repro.obs``): every
+round's ingest and query land in ``service.*`` spans on top of the
+library's own ``index.*`` stage spans, and the exit summary reports
+per-stage p50/p99 latency, the LB-cascade pruning rate, and the dispatch
+routing counters — the same report ``scripts/obs_report.py`` renders
+from a ``REPRO_OBS_DUMP`` snapshot.
 """
 
 import argparse
@@ -18,6 +25,7 @@ import time
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core.pq import PQConfig
 from repro.data.timeseries import random_walks
 from repro.index import (IndexConfig, StreamingIndex, restore_snapshot,
@@ -38,10 +46,16 @@ def main():
                     help="elastic measure for every stage (coarse routing, "
                          "PQ codebooks, hot-segment scan): a registry name, "
                          "optionally with params ('msm:c=0.5')")
+    ap.add_argument("--no-obs", action="store_true",
+                    help="leave the observability layer off (zero-overhead "
+                         "mode; the exit report is skipped)")
     args = ap.parse_args()
     D = args.length
     from repro.core import measures
     spec = measures.resolve(args.measure)
+
+    if not args.no_obs:
+        obs.enable()
 
     # --- bootstrap the shared quantizers on a historical sample ------------
     # With --prealign, seal-time encoding snaps segment boundaries to MODWT
@@ -64,10 +78,15 @@ def main():
     # --- serve the stream ---------------------------------------------------
     queries = random_walks(8, D, seed=99)
     rng = np.random.default_rng(1)
+    ingest_h = obs.histogram("stage_seconds", persistent=True,
+                             stage="service.ingest")
+    query_h = obs.histogram("stage_seconds", persistent=True,
+                            stage="service.query")
     for it in range(args.iters):
         fresh = random_walks(args.chunk, D, seed=100 + it)
         t0 = time.perf_counter()
-        ids = index.insert(fresh)
+        with obs.span("service.ingest"):
+            ids = index.insert(fresh)
         t_ins = time.perf_counter() - t0
 
         if it % 3 == 2 and index.next_id > 8:   # retire a few stale series
@@ -75,7 +94,9 @@ def main():
             index.delete(stale)
 
         t0 = time.perf_counter()
-        d, nn = index.search(queries, n_probe=4, topk=3)
+        with obs.span("service.query") as sp:
+            d, nn = index.search(queries, n_probe=4, topk=3)
+            sp.fence(d)
         jax.block_until_ready(d)
         t_q = time.perf_counter() - t0
         s = index.stats()
@@ -114,6 +135,18 @@ def main():
     print(f"memory: index {mem['index_bytes'] / 1e3:.1f}KB vs raw "
           f"{mem['raw_bytes'] / 1e3:.1f}KB "
           f"({mem['compression']:.1f}x codes-only compression)")
+
+    # --- exit observability summary ------------------------------------------
+    if obs.enabled() and ingest_h.count and query_h.count:
+        print()
+        print(f"service ingest p50/p99: {ingest_h.percentile(50) * 1e3:.1f}"
+              f"ms / {ingest_h.percentile(99) * 1e3:.1f}ms "
+              f"over {ingest_h.count} rounds")
+        print(f"service query  p50/p99: {query_h.percentile(50) * 1e3:.1f}"
+              f"ms / {query_h.percentile(99) * 1e3:.1f}ms "
+              f"over {query_h.count} rounds")
+        print()
+        print(obs.render(obs.snapshot(), title="index service obs summary"))
 
 
 if __name__ == "__main__":

@@ -4,18 +4,27 @@
 Usage: python scripts/check_routing.py ROUTING_DUMP.json [BACKEND]
 
 The dump is written by tests/conftest.py at pytest session end (set
-REPRO_ROUTING_DUMP) from the process-lifetime `repro.core.dispatch.totals`
-ledger. Every elastic op listed below must have dispatched through BACKEND
-(default: the REPRO_ELASTIC_BACKEND the tests ran under) at least once —
-a kernel import error or an accidental fallback to the pure-JAX route
-would otherwise let the suite pass without executing a single Pallas
-kernel body.
+REPRO_ROUTING_DUMP): a ``repro.obs`` metrics snapshot whose
+``dispatch_total`` counters mirror the process-lifetime
+``repro.core.dispatch.totals`` ledger.  (The pre-obs flat
+``{"op:backend": n}`` dict is still accepted, so older dumps keep
+working.)  Every elastic op listed below must have dispatched through
+BACKEND (default: the REPRO_ELASTIC_BACKEND the tests ran under) at
+least once — a kernel import error or an accidental fallback to the
+pure-JAX route would otherwise let the suite pass without executing a
+single Pallas kernel body.
 
-Measure-parameterized ops are additionally ledgered as "op[measure]";
-for MEASURED_OPS the gate also requires at least one NON-DTW measure to
-have dispatched through BACKEND, so the measure-generic kernel bodies
+Measure-parameterized ops are additionally keyed as "op[measure]"; for
+MEASURED_OPS the gate also requires at least one NON-DTW measure to have
+dispatched through BACKEND, so the measure-generic kernel bodies
 (wdtw/erp/msm recurrence steps) are provably exercised, not just the DTW
 default.
+
+When the snapshot was captured with obs enabled, a third gate checks
+*stage coverage*: every instrumented pipeline stage in EXPECTED_STAGES
+must have recorded at least one ``stage_seconds`` span — catching a
+refactor that silently drops instrumentation while the routing ledger
+still looks healthy.
 """
 
 import json
@@ -43,6 +52,44 @@ MEASURED_OPS = (
     "two_level_coarse",
 )
 
+# every instrumented pipeline stage the tier-1 suite must light up when
+# it runs with REPRO_OBS=1 (spans live in index/streaming.py,
+# index/planner.py)
+EXPECTED_STAGES = (
+    "index.search",
+    "index.search.coarse",
+    "index.search.lut",
+    "index.search.fine",
+    "index.search.hot",
+    "index.search.merge",
+    "index.insert",
+    "index.flush",
+    "index.compact",
+    "sharded.search",
+    "sharded.execute",
+)
+
+
+def ledger_from_snapshot(snap: dict) -> dict:
+    """Rebuild the flat ``{"op:backend": n, "op[measure]:backend": n}``
+    ledger from a metrics snapshot's ``dispatch_total`` counters."""
+    ledger: dict = {}
+    for c in snap.get("counters", []):
+        if c["name"] != "dispatch_total":
+            continue
+        labels = c["labels"]
+        op, backend = labels.get("op"), labels.get("backend")
+        if not op or not backend:
+            continue
+        n = int(c["value"])
+        key = f"{op}:{backend}"
+        ledger[key] = ledger.get(key, 0) + n
+        measure = labels.get("measure")
+        if measure:
+            mkey = f"{op}[{measure}]:{backend}"
+            ledger[mkey] = ledger.get(mkey, 0) + n
+    return ledger
+
 
 def main() -> int:
     if len(sys.argv) < 2:
@@ -55,7 +102,9 @@ def main() -> int:
         else os.environ.get("REPRO_ELASTIC_BACKEND", "pallas_interpret")
     )
     with open(path) as f:
-        ledger = json.load(f)
+        dump = json.load(f)
+    is_snapshot = "counters" in dump or "histograms" in dump
+    ledger = ledger_from_snapshot(dump) if is_snapshot else dump
     print(f"routing ledger ({path}), asserting backend {backend!r}:")
     for key in sorted(ledger):
         print(f"  {key}: {ledger[key]}")
@@ -85,6 +134,29 @@ def main() -> int:
         f"{backend!r} (incl. a non-DTW measure for "
         f"{len(MEASURED_OPS)} measured ops)"
     )
+    if is_snapshot and dump.get("obs_enabled"):
+        seen = {
+            h["labels"].get("stage")
+            for h in dump.get("histograms", [])
+            if h["name"] == "stage_seconds" and h["count"] > 0
+        }
+        missing_stages = [s for s in EXPECTED_STAGES if s not in seen]
+        if missing_stages:
+            print(
+                "FAIL: instrumented stages recorded zero samples: "
+                f"{', '.join(missing_stages)} — span instrumentation "
+                "silently dropped?"
+            )
+            return 1
+        print(
+            f"OK: all {len(EXPECTED_STAGES)} instrumented stages recorded "
+            "spans"
+        )
+    elif is_snapshot:
+        print(
+            "note: snapshot captured with obs disabled — stage-coverage "
+            "gate skipped (set REPRO_OBS=1 to assert it)"
+        )
     return 0
 
 

@@ -1,0 +1,51 @@
+#!/usr/bin/env python3
+"""Render a metrics snapshot (REPRO_OBS_DUMP output) as a console report.
+
+Usage:
+    python scripts/obs_report.py SNAPSHOT.json
+    python scripts/obs_report.py SNAPSHOT.json --require-stages a,b,c
+
+The snapshot is the JSON written by ``repro.obs.write_snapshot`` (or the
+``REPRO_OBS_DUMP`` atexit hook).  ``--require-stages`` turns the report
+into a CI gate: exit 1 unless every named stage recorded at least one
+span — catching instrumentation that silently stopped firing (an
+always-disabled flag, a renamed stage, a refactor that dropped a span).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(__file__)), "src"))
+
+from repro.obs.report import check_stages, render  # noqa: E402
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("snapshot", help="metrics snapshot JSON path")
+    ap.add_argument(
+        "--require-stages",
+        default="",
+        help="comma-separated stage names that must have recorded "
+        "at least one span (exit 1 otherwise)",
+    )
+    args = ap.parse_args()
+
+    with open(args.snapshot) as f:
+        snap = json.load(f)
+    print(render(snap, title=f"observability report: {args.snapshot}"))
+
+    required = [s for s in args.require_stages.split(",") if s.strip()]
+    if required:
+        ok, message = check_stages(snap, required)
+        if not ok:
+            print(f"\nFAIL: {message}")
+            return 1
+        print(f"\nOK: all {len(required)} required stages recorded samples")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

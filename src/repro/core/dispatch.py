@@ -66,6 +66,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..obs.registry import REGISTRY as _obs_registry
 from . import measures
 from .dtw import dtw_batch, dtw_cdist
 from .measures import MeasureArg, MeasureSpec
@@ -150,6 +151,17 @@ def _count(op: str, route: str,
     for key in keys:
         stats[key] = stats.get(key, 0) + 1
         totals[key] = totals.get(key, 0) + 1
+    # Mirror into the observability registry (repro.obs): same trace-time
+    # semantics as `totals` — the kind="trace" label keeps the distinction
+    # from run-time span metrics explicit in every export — and persistent,
+    # so obs.reset() cannot erase the routing ledger mid-session.  A plain
+    # host-side counter bump: cheap enough to run whether obs is enabled
+    # or not, which keeps the exported routing coverage complete even for
+    # sessions that never turn spans on.
+    labels = {"op": op, "backend": route, "kind": "trace"}
+    if measure is not None:
+        labels["measure"] = measure.name
+    _obs_registry.counter("dispatch_total", persistent=True, **labels).inc()
 
 
 def _interpret_flag(backend: str) -> Optional[bool]:

@@ -58,7 +58,7 @@ __all__ = ["filtered_topk"]
 def _dense_topk(Q: jnp.ndarray, X: jnp.ndarray, window: Optional[int],
                 k: int, valid: Optional[jnp.ndarray],
                 q_valid: Optional[jnp.ndarray],
-                spec) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+                spec, with_stats: bool):
     """Exact dense fallback: one all-pairs launch + top-k (the sound path
     for measures without a Keogh cascade / Euclidean upper bound)."""
     d = elastic_cdist(Q, X, window, measure=spec)
@@ -73,18 +73,26 @@ def _dense_topk(Q: jnp.ndarray, X: jnp.ndarray, window: Optional[int],
         d = jnp.where(q_valid[:, None], d, jnp.inf)
     neg, idx = jax.lax.top_k(-d, k)
     idx = jnp.where(jnp.isfinite(neg), idx, -1).astype(jnp.int32)
+    if with_stats:
+        # no cascade ran: every valid pair was evaluated exactly, in what
+        # amounts to a single wave
+        stats = {"n_bounded": n_ref, "n_refined": n_ref,
+                 "n_waves": jnp.int32(1),
+                 "refined_per_wave": n_ref[None]}
+        return -neg, idx, stats
     return -neg, idx, n_ref
 
 
 @functools.partial(jax.jit,
                    static_argnames=("window", "k", "budget", "max_iters",
-                                    "measure"))
+                                    "measure", "with_stats"))
 def filtered_topk(Q: jnp.ndarray, X: jnp.ndarray, window: Optional[int],
                   k: int, budget: Optional[int] = None,
                   valid: Optional[jnp.ndarray] = None,
                   max_iters: Optional[int] = None,
                   measure: MeasureArg = None,
-                  q_valid: Optional[jnp.ndarray] = None
+                  q_valid: Optional[jnp.ndarray] = None,
+                  with_stats: bool = False
                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Exact banded elastic top-k of ``Q (Nq, L)`` against ``X (N, L)``.
 
@@ -101,6 +109,14 @@ def filtered_topk(Q: jnp.ndarray, X: jnp.ndarray, window: Optional[int],
     ``1 <= k <= N``.  Measures without the pruning capabilities take the
     exact dense fallback (same results; ``n_refined`` counts every valid
     pair).
+
+    ``with_stats=True`` (static) swaps the third return for the pruning
+    telemetry the observability layer exports: a dict of device scalars
+    ``n_bounded`` (valid pairs the cascade bounded), ``n_refined`` (pairs
+    that reached the exact wavefront), ``n_waves`` (refine launches) and
+    ``refined_per_wave`` (per-wave refine counts, zero-padded to the
+    static wave cap).  The flag is static so the default path compiles
+    exactly the pre-telemetry graph — obs-off callers pay nothing.
     """
     Q = jnp.asarray(Q, jnp.float32)
     X = jnp.asarray(X, jnp.float32)
@@ -110,7 +126,8 @@ def filtered_topk(Q: jnp.ndarray, X: jnp.ndarray, window: Optional[int],
         raise ValueError(f"k={k} out of range: must satisfy 1 <= k <= {N}")
     spec = measures.resolve(measure)
     if not spec.can_prune:
-        return _dense_topk(Q, X, window, k, valid, q_valid, spec)
+        return _dense_topk(Q, X, window, k, valid, q_valid, spec,
+                           with_stats)
     # Per-wave budget: thresholds tighten after every wave, so small waves
     # (a few pairs per query) converge in a handful of launches and waste
     # the least refine work; the cap below bounds the worst (pruning-free)
@@ -152,12 +169,12 @@ def filtered_topk(Q: jnp.ndarray, X: jnp.ndarray, window: Optional[int],
     # the per-query threshold rides in the loop state (recomputed once at
     # the end of each wave) so cond/body don't re-run the (Nq, N) top_k
     def cond(state):
-        it, lb_rem, _, thresh, _ = state
+        it, lb_rem, _, thresh, _ = state[:5]
         active = jnp.min(lb_rem, axis=1) < thresh
         return (it < iters_cap) & jnp.any(active)
 
     def body(state):
-        it, lb_rem, d_exact, thresh, n_ref = state
+        it, lb_rem, d_exact, thresh, n_ref = state[:5]
         # Global work-conserving selection: the R smallest *still-useful*
         # bounds across the whole (query, candidate) matrix.  A bound at
         # or above its query's threshold keys to +inf — it can never beat
@@ -182,13 +199,32 @@ def filtered_topk(Q: jnp.ndarray, X: jnp.ndarray, window: Optional[int],
         d_exact = d_exact.at[q_idx, c_idx].min(
             jnp.where(refined, d, jnp.inf))
         lb_rem = lb_rem.at[q_idx, c_idx].set(jnp.inf)
-        return (it + 1, lb_rem, d_exact, threshold(d_exact),
-                n_ref + jnp.sum(refined))
+        wave = jnp.sum(refined).astype(jnp.int32)
+        out = (it + 1, lb_rem, d_exact, threshold(d_exact),
+               n_ref + wave)
+        if with_stats:
+            # per-wave refine counts for the obs export (static length:
+            # the wave cap; unused slots stay zero)
+            out = out + (state[5].at[it].set(wave),)
+        return out
 
     state = (jnp.int32(0), lbs, jnp.full((Nq, N), jnp.inf), seed,
              jnp.zeros((), jnp.int32))
-    _, _, d_exact, _, n_ref = jax.lax.while_loop(cond, body, state)
+    if with_stats:
+        state = state + (jnp.zeros((iters_cap,), jnp.int32),)
+    state = jax.lax.while_loop(cond, body, state)
+    it, _, d_exact, _, n_ref = state[:5]
 
     neg, idx = jax.lax.top_k(-d_exact, k)
     idx = jnp.where(jnp.isfinite(neg), idx, -1).astype(jnp.int32)
+    if with_stats:
+        if q_valid is None:
+            n_q = jnp.int32(Nq)
+        else:
+            n_q = jnp.sum(q_valid).astype(jnp.int32)
+        n_cand = (jnp.int32(N) if valid is None
+                  else jnp.sum(valid).astype(jnp.int32))
+        stats = {"n_bounded": n_q * n_cand, "n_refined": n_ref,
+                 "n_waves": it, "refined_per_wave": state[5]}
+        return -neg, idx, stats
     return -neg, idx, n_ref

@@ -43,6 +43,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from .. import obs
 from ..core.ivf import coarse_dists
 from ..core.pq import query_lut_batch, segment
 from ..launch.mesh import make_search_mesh, validate_search_mesh
@@ -83,10 +84,12 @@ def _search_query_sharded(index: StreamingIndex, Q: jnp.ndarray,
 
     # check_rep=False: jax has no replication rule for pallas_call, and the
     # out_specs fully describe the (embarrassingly parallel) output layout.
-    d, ids = shard_map(per_device, mesh=mesh,
-                       in_specs=(P(), P("search", None), P("search")),
-                       out_specs=(P("search", None), P("search", None)),
-                       check_rep=False)(plan, Q, q_valid)
+    with obs.span("sharded.execute") as sp:
+        d, ids = sp.fence(shard_map(
+            per_device, mesh=mesh,
+            in_specs=(P(), P("search", None), P("search")),
+            out_specs=(P("search", None), P("search", None)),
+            check_rep=False)(plan, Q, q_valid))
     return d[:Nq], ids[:Nq]
 
 
@@ -119,69 +122,83 @@ def _search_list_sharded(index: StreamingIndex, Q: jnp.ndarray,
     # tiny relative to the sealed codes, so they are computed once for the
     # full batch and broadcast — every device probes with identical
     # numbers, which is what makes the fan-in merge exact.
-    dc = coarse_dists(Q, index.coarse, w, measure=spec,
-                      two_level=index.two_level,
-                      n_probe_top=icfg.n_probe_top if index.two_level
-                      is not None else None)                 # (Nq, n_lists)
-    qluts = query_lut_batch(segment(Q, icfg.pq), index.cb,
-                            icfg.pq.window(index.dim),
-                            not icfg.pq.is_elastic, spec)    # (Nq, M, K)
+    with obs.span("sharded.coarse") as sp:
+        dc = sp.fence(coarse_dists(
+            Q, index.coarse, w, measure=spec,
+            two_level=index.two_level,
+            n_probe_top=icfg.n_probe_top if index.two_level
+            is not None else None))                          # (Nq, n_lists)
+    with obs.span("sharded.lut") as sp:
+        qluts = sp.fence(query_lut_batch(
+            segment(Q, icfg.pq), index.cb, icfg.pq.window(index.dim),
+            not icfg.pq.is_elastic, spec))                   # (Nq, M, K)
 
     views = tuple(sg.shard_views() for sg in segs)
     metas = tuple((sg.max_list, min(topk, n_probe * sg.max_list))
                   for sg in segs)
 
     def per_device(dc, qluts, Qb, hot, views):
+        # spans inside this function run under the shard_map trace: they
+        # time tracing (once per compilation) and bridge the stage names
+        # into device profiles via TraceAnnotation — per-call wall time
+        # lives in the host-level "sharded.execute" span around the launch
         parts_d, parts_i = [], []
-        for (codes, ids, live, loc_start, loc_len), (max_list, k) in zip(
-                views, metas):
-            if k < 1:
-                continue
-            # leading shard axis is sliced to 1 by shard_map: [0] is this
-            # device's block; loc_start/loc_len address rows inside it,
-            # lists placed elsewhere have local length 0
-            d, i = _rank_segment(codes[0], ids[0], live[0], loc_start[0],
-                                 loc_len[0], dc, qluts,
-                                 max_list=max_list, n_probe=n_probe, k=k)
-            parts_d.append(d)
-            parts_i.append(i)
-        if hot is not None:
-            data, h_ids, h_live = hot
-            cap = data.shape[0]
-            # stripe the (replicated) hot buffer: row r belongs to device
-            # r % n_dev, so every live row is scanned by exactly one device
-            mine = (jnp.arange(cap) % n_dev
-                    ) == jax.lax.axis_index("search")
-            d, i = _scan_hot(data, h_ids, h_live & mine, Qb,
-                             window=w, k=min(topk, cap),
-                             euclidean=not icfg.pq.is_elastic,
-                             measure=spec)
-            parts_d.append(d)
-            parts_i.append(i)
-        if parts_d:
-            d_loc, i_loc = _merge_topk(tuple(parts_d), tuple(parts_i),
-                                       topk=topk)
-        else:
-            d_loc = jnp.full((Qb.shape[0], topk), jnp.inf)
-            i_loc = jnp.full((Qb.shape[0], topk), -1, jnp.int32)
-        # device-resident fan-in: gather every device's partial top-k and
-        # re-rank the union — the merged result is replicated, no host
-        # round-trip.  Empty partial slots carry +inf / -1 and lose to any
-        # real candidate, so padded lanes never surface.
-        g_d = jax.lax.all_gather(d_loc, "search")      # (n_dev, Nq, topk)
-        g_i = jax.lax.all_gather(i_loc, "search")
-        all_d = jnp.moveaxis(g_d, 0, 1).reshape(Qb.shape[0], n_dev * topk)
-        all_i = jnp.moveaxis(g_i, 0, 1).reshape(Qb.shape[0], n_dev * topk)
-        neg, best = jax.lax.top_k(-all_d, topk)
-        return -neg, jnp.take_along_axis(all_i, best, axis=1)
+        with obs.span("sharded.device_scan"):
+            for (codes, ids, live, loc_start, loc_len), (max_list, k) \
+                    in zip(views, metas):
+                if k < 1:
+                    continue
+                # leading shard axis is sliced to 1 by shard_map: [0] is
+                # this device's block; loc_start/loc_len address rows
+                # inside it, lists placed elsewhere have local length 0
+                d, i = _rank_segment(codes[0], ids[0], live[0],
+                                     loc_start[0], loc_len[0], dc, qluts,
+                                     max_list=max_list, n_probe=n_probe,
+                                     k=k)
+                parts_d.append(d)
+                parts_i.append(i)
+            if hot is not None:
+                data, h_ids, h_live = hot
+                cap = data.shape[0]
+                # stripe the (replicated) hot buffer: row r belongs to
+                # device r % n_dev, so every live row is scanned by
+                # exactly one device
+                mine = (jnp.arange(cap) % n_dev
+                        ) == jax.lax.axis_index("search")
+                d, i = _scan_hot(data, h_ids, h_live & mine, Qb,
+                                 window=w, k=min(topk, cap),
+                                 euclidean=not icfg.pq.is_elastic,
+                                 measure=spec)
+                parts_d.append(d)
+                parts_i.append(i)
+        with obs.span("sharded.fanin_merge"):
+            if parts_d:
+                d_loc, i_loc = _merge_topk(tuple(parts_d), tuple(parts_i),
+                                           topk=topk)
+            else:
+                d_loc = jnp.full((Qb.shape[0], topk), jnp.inf)
+                i_loc = jnp.full((Qb.shape[0], topk), -1, jnp.int32)
+            # device-resident fan-in: gather every device's partial top-k
+            # and re-rank the union — the merged result is replicated, no
+            # host round-trip.  Empty partial slots carry +inf / -1 and
+            # lose to any real candidate, so padded lanes never surface.
+            g_d = jax.lax.all_gather(d_loc, "search")  # (n_dev, Nq, topk)
+            g_i = jax.lax.all_gather(i_loc, "search")
+            all_d = jnp.moveaxis(g_d, 0, 1).reshape(
+                Qb.shape[0], n_dev * topk)
+            all_i = jnp.moveaxis(g_i, 0, 1).reshape(
+                Qb.shape[0], n_dev * topk)
+            neg, best = jax.lax.top_k(-all_d, topk)
+            return -neg, jnp.take_along_axis(all_i, best, axis=1)
 
     view_spec = (P("search", None, None), P("search", None),
                  P("search", None), P("search", None), P("search", None))
-    d, ids = shard_map(
-        per_device, mesh=mesh,
-        in_specs=(P(), P(), P(), P(), tuple(view_spec for _ in views)),
-        out_specs=(P(None, None), P(None, None)),
-        check_rep=False)(dc, qluts, Q, hot, views)
+    with obs.span("sharded.execute") as sp:
+        d, ids = sp.fence(shard_map(
+            per_device, mesh=mesh,
+            in_specs=(P(), P(), P(), P(), tuple(view_spec for _ in views)),
+            out_specs=(P(None, None), P(None, None)),
+            check_rep=False)(dc, qluts, Q, hot, views))
     return d, ids
 
 
@@ -213,6 +230,10 @@ def search_sharded(index: StreamingIndex, Q: np.ndarray, *,
     if partition == "auto":
         partition = ("lists" if n_dev > 1 and index.cfg.n_shards == n_dev
                      else "queries")
-    if partition == "lists":
-        return _search_list_sharded(index, Q, mesh, n_probe, topk)
-    return _search_query_sharded(index, Q, mesh, n_probe, topk)
+    with obs.span("sharded.search"):
+        if obs.enabled():
+            obs.counter("sharded_searches_total", persistent=True,
+                        partition=partition).inc()
+        if partition == "lists":
+            return _search_list_sharded(index, Q, mesh, n_probe, topk)
+        return _search_query_sharded(index, Q, mesh, n_probe, topk)

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..core.dtw import euclidean_sq
 from ..core.ivf import (TwoLevelCoarse, build_two_level, coarse_assign,
                         coarse_dists, fine_rank, validate_codebook,
@@ -105,9 +106,9 @@ def _rank_segment(codes, ids, live, list_start, list_len, dc, qluts, *,
 
 
 @functools.partial(jax.jit, static_argnames=("window", "k", "euclidean",
-                                             "measure"))
+                                             "measure", "with_stats"))
 def _scan_hot(data, ids, live, Q, q_valid=None, *, window: int, k: int,
-              euclidean: bool, measure=None):
+              euclidean: bool, measure=None, with_stats: bool = False):
     """Exact scan of the hot buffer -> ``(Nq, k)`` d, ids.
 
     The configured elastic measure under PQDTW-style metrics, squared
@@ -121,7 +122,13 @@ def _scan_hot(data, ids, live, Q, q_valid=None, *, window: int, k: int,
     Measures without the pruning capabilities take its exact dense
     fallback automatically.  ``q_valid`` is the optional query padding
     mask of the sharded planner — masked rows produce ``inf``/``-1`` and
-    never claim LB-cascade refine work."""
+    never claim LB-cascade refine work.
+
+    ``with_stats=True`` (static, obs-enabled callers only) additionally
+    returns the LB-cascade pruning telemetry dict of
+    :func:`repro.core.lb_search.filtered_topk`; the default path compiles
+    the exact pre-telemetry graph, so obs-off results stay bit-identical.
+    """
     if euclidean:
         d2 = euclidean_sq(Q, data)
         dh = jnp.sqrt(jnp.maximum(d2, 0.0))
@@ -129,11 +136,23 @@ def _scan_hot(data, ids, live, Q, q_valid=None, *, window: int, k: int,
         if q_valid is not None:
             dh = jnp.where(q_valid[:, None], dh, jnp.inf)
         neg, idx = jax.lax.top_k(-dh, k)
-        return -neg, jnp.where(jnp.isfinite(neg), ids[idx], -1)
-    d2, idx, _ = filtered_topk(Q, data, window, k, valid=live,
-                               measure=measure, q_valid=q_valid)
+        out_ids = jnp.where(jnp.isfinite(neg), ids[idx], -1)
+        if with_stats:
+            # no elastic cascade under the PQ_ED baseline: report an empty
+            # telemetry record rather than a fake 0% pruning rate
+            zero = jnp.zeros((), jnp.int32)
+            return -neg, out_ids, {"n_bounded": zero, "n_refined": zero,
+                                   "n_waves": zero,
+                                   "refined_per_wave": zero[None]}
+        return -neg, out_ids
+    d2, idx, st = filtered_topk(Q, data, window, k, valid=live,
+                                measure=measure, q_valid=q_valid,
+                                with_stats=with_stats)
     dh = jnp.sqrt(jnp.maximum(d2, 0.0))
-    return dh, jnp.where(idx >= 0, ids[jnp.maximum(idx, 0)], -1)
+    out_ids = jnp.where(idx >= 0, ids[jnp.maximum(idx, 0)], -1)
+    if with_stats:
+        return dh, out_ids, st
+    return dh, out_ids
 
 
 @functools.partial(jax.jit, static_argnames=("topk",))
@@ -158,8 +177,8 @@ def search_impl(coarse: jnp.ndarray, cb: PQCodebook,
                 Q: jnp.ndarray, *, icfg: IndexConfig, n_probe: int,
                 topk: int, dim: int,
                 two_level: Optional[TwoLevelCoarse] = None,
-                q_valid: Optional[jnp.ndarray] = None
-                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                q_valid: Optional[jnp.ndarray] = None,
+                with_stats: bool = False):
     """Fan ``Q (Nq, D)`` out over every segment and merge top-k.
 
     ``segs`` is a (possibly empty) tuple of sealed segments; ``hot`` is
@@ -175,6 +194,20 @@ def search_impl(coarse: jnp.ndarray, cb: PQCodebook,
     arbitrary — the caller slices them off — but they are excluded from
     LB-cascade refine work and pruning statistics).
 
+    ``with_stats=True`` returns ``(distances, ids, stats)`` where
+    ``stats`` is the hot-scan LB-cascade telemetry dict (device scalars;
+    ``None`` when the hot buffer is empty) — the obs-enabled entry point
+    (:meth:`StreamingIndex.search`) pulls it to host and feeds the
+    registry.  The flag threads a *static* argument into the jitted hot
+    scan, so the default path compiles the exact pre-telemetry graph.
+
+    Pipeline stages run inside :func:`repro.obs.span` blocks (coarse, lut,
+    fine, hot, merge) with device work fenced into its span when obs is
+    enabled; disabled spans are shared no-ops — no fences, no syncs, no
+    timing.  When this function is itself traced (the query-sharded
+    planner's ``shard_map``), the spans time the trace — once per
+    compilation — and the fences no-op on tracers.
+
     Deliberately NOT one enclosing jit: the pieces (coarse cdist, query
     LUTs, per-segment fine stage, hot scan, final merge) are jitted
     separately, so growing the segment count only recompiles the tiny
@@ -183,44 +216,61 @@ def search_impl(coarse: jnp.ndarray, cb: PQCodebook,
     """
     Q = jnp.asarray(Q, jnp.float32)
     parts_d, parts_i = [], []
+    hot_stats = None
 
     spec = icfg.pq.measure()
     if segs:
         w = icfg.coarse_window(dim)
-        dc = coarse_dists(
-            Q, coarse, w, measure=spec, two_level=two_level,
-            n_probe_top=icfg.n_probe_top if two_level is not None
-            else None)                                       # (Nq, n_lists)
-        qluts = query_lut_batch(segment(Q, icfg.pq), cb,
-                                icfg.pq.window(dim),
-                                not icfg.pq.is_elastic, spec)  # (Nq, M, K)
-        for sg in segs:
-            k = min(topk, n_probe * sg.max_list)
-            if k < 1:
-                continue
-            d, i = _rank_segment(sg.codes, sg.ids, sg.live, sg.list_start,
-                                 sg.list_len, dc, qluts,
-                                 max_list=sg.max_list, n_probe=n_probe,
-                                 k=k)
-            parts_d.append(d)
-            parts_i.append(i)
+        with obs.span("index.search.coarse") as sp:
+            dc = sp.fence(coarse_dists(
+                Q, coarse, w, measure=spec, two_level=two_level,
+                n_probe_top=icfg.n_probe_top if two_level is not None
+                else None))                                  # (Nq, n_lists)
+        with obs.span("index.search.lut") as sp:
+            qluts = sp.fence(query_lut_batch(
+                segment(Q, icfg.pq), cb, icfg.pq.window(dim),
+                not icfg.pq.is_elastic, spec))                # (Nq, M, K)
+        with obs.span("index.search.fine") as sp:
+            for sg in segs:
+                k = min(topk, n_probe * sg.max_list)
+                if k < 1:
+                    continue
+                d, i = _rank_segment(sg.codes, sg.ids, sg.live,
+                                     sg.list_start, sg.list_len, dc, qluts,
+                                     max_list=sg.max_list, n_probe=n_probe,
+                                     k=k)
+                parts_d.append(d)
+                parts_i.append(i)
+            sp.fence(parts_d)
 
     if hot is not None:
         data, ids, live = hot
-        d, i = _scan_hot(data, ids, live, Q, q_valid,
-                         window=icfg.coarse_window(dim),
-                         k=min(topk, data.shape[0]),
-                         euclidean=not icfg.pq.is_elastic,
-                         measure=spec)
+        with obs.span("index.search.hot") as sp:
+            out = _scan_hot(data, ids, live, Q, q_valid,
+                            window=icfg.coarse_window(dim),
+                            k=min(topk, data.shape[0]),
+                            euclidean=not icfg.pq.is_elastic,
+                            measure=spec, with_stats=with_stats)
+            if with_stats:
+                d, i, hot_stats = out
+            else:
+                d, i = out
+            sp.fence((d, i))
         parts_d.append(d)
         parts_i.append(i)
 
     if not parts_d:
         Nq = Q.shape[0]
-        return (jnp.full((Nq, topk), jnp.inf),
-                jnp.full((Nq, topk), -1, jnp.int32))
+        empty = (jnp.full((Nq, topk), jnp.inf),
+                 jnp.full((Nq, topk), -1, jnp.int32))
+        return empty + (None,) if with_stats else empty
 
-    return _merge_topk(tuple(parts_d), tuple(parts_i), topk=topk)
+    with obs.span("index.search.merge") as sp:
+        d, i = sp.fence(_merge_topk(tuple(parts_d), tuple(parts_i),
+                                    topk=topk))
+    if with_stats:
+        return d, i, hot_stats
+    return d, i
 
 
 # ---------------------------------------------------------------------------
@@ -334,11 +384,15 @@ class StreamingIndex:
             self.next_id = max(self.next_id, int(out.max(initial=-1)) + 1)
         self._resident.update(out.tolist())
         self._hot_device = None
-        i = 0
-        while i < n:
-            i += self.hot.append(X[i:], out[i:])
-            if self.hot.space == 0:
-                self.flush()
+        with obs.span("index.insert"):
+            i = 0
+            while i < n:
+                i += self.hot.append(X[i:], out[i:])
+                if self.hot.space == 0:
+                    self.flush()
+        if obs.enabled():
+            obs.counter("index_inserted_total", persistent=True).inc(n)
+            self._update_obs_gauges()
         return out
 
     def delete(self, ids: Sequence[int]) -> int:
@@ -353,29 +407,37 @@ class StreamingIndex:
                 self.segments[s] = sg.tombstone(mask)
                 self._seg_live[s] = self._seg_live[s] & ~mask
                 hit += int(mask.sum())
+        if obs.enabled():
+            obs.counter("index_deleted_total", persistent=True).inc(hit)
+            self._update_obs_gauges()
         return hit
 
     def flush(self) -> None:
         """Seal the hot buffer's live rows into a new sealed segment."""
-        dropped = self.hot.ids[(self.hot.ids >= 0) & ~self.hot.live]
-        rows, ids = self.hot.take_live()
-        self._resident.difference_update(dropped.tolist())
-        self._hot_device = None
-        if len(ids) == 0:
-            return
-        Xj = jnp.asarray(rows)
-        codes = np.asarray(encode(Xj, self.cb, self.cfg.pq))
-        assign = np.asarray(coarse_assign(
-            Xj, self.coarse, self.cfg.coarse_window(self.dim),
-            self.cfg.pq.measure()))
-        cap = self.cfg.hot_capacity
-        # shard_round = ceil(cap / n_shards): every flush-born segment gets
-        # the same shard_cap regardless of list skew, so they all share one
-        # compiled fine-stage / planner shape
-        self._add_segment(seal(codes, ids, assign, self.cfg.n_lists,
-                               rows=cap, max_list=cap,
-                               n_shards=self.cfg.n_shards,
-                               shard_round=-(-cap // self.cfg.n_shards)))
+        with obs.span("index.flush"):
+            dropped = self.hot.ids[(self.hot.ids >= 0) & ~self.hot.live]
+            rows, ids = self.hot.take_live()
+            self._resident.difference_update(dropped.tolist())
+            self._hot_device = None
+            if len(ids) == 0:
+                return
+            Xj = jnp.asarray(rows)
+            codes = np.asarray(encode(Xj, self.cb, self.cfg.pq))
+            assign = np.asarray(coarse_assign(
+                Xj, self.coarse, self.cfg.coarse_window(self.dim),
+                self.cfg.pq.measure()))
+            cap = self.cfg.hot_capacity
+            # shard_round = ceil(cap / n_shards): every flush-born segment
+            # gets the same shard_cap regardless of list skew, so they all
+            # share one compiled fine-stage / planner shape
+            self._add_segment(seal(codes, ids, assign, self.cfg.n_lists,
+                                   rows=cap, max_list=cap,
+                                   n_shards=self.cfg.n_shards,
+                                   shard_round=-(-cap // self.cfg.n_shards)))
+        if obs.enabled():
+            obs.counter("index_sealed_rows_total",
+                        persistent=True).inc(len(ids))
+            self._update_obs_gauges()
 
     def compact(self) -> None:
         """Merge every sealed segment into one: tombstoned and padding rows
@@ -384,34 +446,95 @@ class StreamingIndex:
         segment capacity) back to the true longest merged list."""
         if not self.segments:
             return
-        codes, ids, assign = [], [], []
-        for s, sg in enumerate(self.segments):
-            live = self._seg_live[s]
-            dead = self._seg_ids[s][~live]
-            self._resident.difference_update(dead[dead >= 0].tolist())
-            codes.append(np.asarray(sg.codes)[live])
-            ids.append(self._seg_ids[s][live])
-            assign.append(np.asarray(sg.assign)[live])
-        codes = np.concatenate(codes)
-        ids = np.concatenate(ids)
-        assign = np.concatenate(assign)
-        self.segments, self._seg_ids, self._seg_live = [], [], []
-        if len(ids) == 0:
-            return
-        self._add_segment(seal(codes, ids, assign, self.cfg.n_lists,
-                               rows=len(ids),
-                               n_shards=self.cfg.n_shards))
+        with obs.span("index.compact"):
+            codes, ids, assign = [], [], []
+            for s, sg in enumerate(self.segments):
+                live = self._seg_live[s]
+                dead = self._seg_ids[s][~live]
+                self._resident.difference_update(dead[dead >= 0].tolist())
+                codes.append(np.asarray(sg.codes)[live])
+                ids.append(self._seg_ids[s][live])
+                assign.append(np.asarray(sg.assign)[live])
+            codes = np.concatenate(codes)
+            ids = np.concatenate(ids)
+            assign = np.concatenate(assign)
+            self.segments, self._seg_ids, self._seg_live = [], [], []
+            if len(ids):
+                self._add_segment(seal(codes, ids, assign, self.cfg.n_lists,
+                                       rows=len(ids),
+                                       n_shards=self.cfg.n_shards))
+        if obs.enabled():
+            obs.counter("index_compactions_total", persistent=True).inc()
+            self._update_obs_gauges()
 
     # -- read path ----------------------------------------------------------
 
     def search(self, Q: np.ndarray, *, n_probe: int, topk: int = 1
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """Top-``topk`` live neighbors of ``Q (Nq, D)`` -> (dist, ids)."""
+        """Top-``topk`` live neighbors of ``Q (Nq, D)`` -> (dist, ids).
+
+        With obs enabled (:func:`repro.obs.enabled`) the search runs under
+        stage spans and records LB-cascade pruning telemetry — the stats
+        transfer is a deliberate device sync, which is why the disabled
+        path never requests stats (``with_stats`` is static: the obs-off
+        compiled graph, and therefore the results, are bit-identical to an
+        uninstrumented build).
+        """
         Q = self._validate(Q, n_probe, topk)
-        return search_impl(self.coarse, self.cb, tuple(self.segments),
-                           self._hot_arrays(), Q,
-                           icfg=self.cfg, n_probe=n_probe, topk=topk,
-                           dim=self.dim, two_level=self.two_level)
+        if not obs.enabled():
+            return search_impl(self.coarse, self.cb, tuple(self.segments),
+                               self._hot_arrays(), Q,
+                               icfg=self.cfg, n_probe=n_probe, topk=topk,
+                               dim=self.dim, two_level=self.two_level)
+        with obs.span("index.search") as sp:
+            d, ids, hot_stats = search_impl(
+                self.coarse, self.cb, tuple(self.segments),
+                self._hot_arrays(), Q, icfg=self.cfg, n_probe=n_probe,
+                topk=topk, dim=self.dim, two_level=self.two_level,
+                with_stats=True)
+            sp.fence((d, ids))
+        self._record_search_obs(Q.shape[0], hot_stats)
+        return d, ids
+
+    def _record_search_obs(self, n_queries: int, hot_stats) -> None:
+        """Feed one search's counters into the obs registry (obs on)."""
+        obs.counter("index_searches_total", persistent=True).inc()
+        obs.counter("index_queries_total",
+                    persistent=True).inc(int(n_queries))
+        if hot_stats is not None:
+            bounded = int(hot_stats["n_bounded"])
+            refined = int(hot_stats["n_refined"])
+            if bounded:
+                obs.counter("lb_candidates_bounded_total",
+                            persistent=True).inc(bounded)
+                obs.counter("lb_candidates_refined_total",
+                            persistent=True).inc(refined)
+                obs.counter("lb_candidates_pruned_total",
+                            persistent=True).inc(bounded - refined)
+                obs.counter("lb_refine_waves_total", persistent=True).inc(
+                    int(hot_stats["n_waves"]))
+                obs.histogram("lb_pruning_rate",
+                              buckets=tuple(i / 10 for i in range(1, 11)),
+                              persistent=True).record(
+                    1.0 - refined / bounded)
+        self._update_obs_gauges()
+
+    def _update_obs_gauges(self) -> None:
+        """Refresh the lifecycle gauges (host-side mirrors only — no
+        device transfers)."""
+        cap = self.cfg.hot_capacity
+        obs.gauge("hot_fill", persistent=True).set(self.hot.count)
+        obs.gauge("hot_occupancy", persistent=True).set(
+            self.hot.count / cap)
+        obs.gauge("n_segments", persistent=True).set(self.n_segments)
+        sealed_resident = sum(int((ids >= 0).sum())
+                              for ids in self._seg_ids)
+        sealed_live = sum(int(live.sum()) for live in self._seg_live)
+        resident = sealed_resident + self.hot.count
+        live = sealed_live + self.hot.n_live()
+        obs.gauge("sealed_rows", persistent=True).set(sealed_resident)
+        obs.gauge("tombstone_fraction", persistent=True).set(
+            (resident - live) / resident if resident else 0.0)
 
     def _validate(self, Q, n_probe: int, topk: int) -> jnp.ndarray:
         Q = jnp.asarray(Q, jnp.float32)

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.registry import ARCH_IDS, get_config, get_reduced
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models.encdec import init_params_encdec
@@ -76,17 +77,18 @@ def main(argv=None):
 
         # ---- prefill: one batched cache-filling pass where supported ----
         t0 = time.time()
-        if cfg.family in ("dense", "moe", "vlm"):
-            from repro.serve.prefill import prefill as batched_prefill
-            logits, cache = jax.jit(
-                lambda p, c, b: batched_prefill(p, cfg, c, b),
-                donate_argnums=(1,))(params, cache, {"tokens": prompt})
-        else:   # ssm/hybrid/encdec decoders prefill token-sequentially
-            logits = None
-            for p in range(args.prompt_len):
-                logits, cache = step(params, cache, prompt[:, p:p + 1],
-                                     jnp.int32(p))
-        jax.block_until_ready(logits)
+        with obs.span("serve.prefill"):
+            if cfg.family in ("dense", "moe", "vlm"):
+                from repro.serve.prefill import prefill as batched_prefill
+                logits, cache = jax.jit(
+                    lambda p, c, b: batched_prefill(p, cfg, c, b),
+                    donate_argnums=(1,))(params, cache, {"tokens": prompt})
+            else:   # ssm/hybrid/encdec decoders prefill token-sequentially
+                logits = None
+                for p in range(args.prompt_len):
+                    logits, cache = step(params, cache, prompt[:, p:p + 1],
+                                         jnp.int32(p))
+            jax.block_until_ready(logits)
         t_prefill = time.time() - t0
         print(f"[serve] prefill {args.prompt_len} tokens in "
               f"{t_prefill:.2f}s")
@@ -119,8 +121,12 @@ def main(argv=None):
         pq_tok = tok
         for g in range(args.gen - 1):
             pos = jnp.int32(args.prompt_len + g)
-            logits, cache = step(params, cache, tok, pos)
-            tok = greedy(logits)
+            # per-step span: with obs enabled the fence syncs each step so
+            # p50/p99 step latency is real; disabled, dispatch stays async
+            with obs.span("serve.decode_step") as sp:
+                logits, cache = step(params, cache, tok, pos)
+                tok = greedy(logits)
+                sp.fence(tok)
             out_exact.append(tok)
             if args.pqkv:
                 pq_logits, pq_cache = pq_step(params, pq_cache, pq_tok, pos)
@@ -132,6 +138,12 @@ def main(argv=None):
         rate = args.batch * (args.gen - 1) / max(t_dec, 1e-9)
         print(f"[serve] decoded {args.gen - 1} steps x {args.batch} seqs in "
               f"{t_dec:.2f}s ({rate:.1f} tok/s)")
+        if obs.enabled() and args.gen > 1:
+            h = obs.histogram("stage_seconds", persistent=True,
+                              stage="serve.decode_step")
+            print(f"[serve] decode step p50/p99: "
+                  f"{h.percentile(50) * 1e3:.1f}ms / "
+                  f"{h.percentile(99) * 1e3:.1f}ms over {h.count} steps")
         print(f"[serve] sample output ids: {toks[0][:12].tolist()}")
         if args.pqkv:
             pq_toks = np.concatenate([np.asarray(t) for t in out_pq], axis=1)

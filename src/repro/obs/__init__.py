@@ -1,0 +1,72 @@
+"""Unified observability layer: metrics registry, stage spans, exporters.
+
+One import surface for every instrumented layer::
+
+    from repro import obs
+
+    with obs.span("index.search.coarse") as sp:
+        dc = sp.fence(coarse_dists(...))     # device work lands in the span
+
+    obs.counter("lb_refined_total").inc(int(n_refined))
+    obs.gauge("hot_occupancy").set(fill / capacity)
+    print(obs.to_prometheus())
+
+Disabled by default (``REPRO_OBS=1`` or :func:`enable` turns it on):
+metric *writes* stay cheap host-side dict/list operations either way, and
+the disabled path is strictly zero device overhead — no spans, no fences,
+no ``block_until_ready`` — so search results are bit-identical with obs
+on or off and the instrumentation is safe to keep in every hot path.
+``REPRO_OBS_DUMP=<path>`` writes a JSON snapshot at process exit;
+``scripts/obs_report.py`` renders one as a console report.
+
+The dispatch routing ledgers (:data:`repro.core.dispatch.stats` /
+``totals``) are mirrored into the registry as ``dispatch_total`` counters
+labeled ``kind="trace"`` — a reminder that they count *traces*, not
+executions (a jitted caller hitting its cache does not re-count), unlike
+the run-time ``stage_seconds`` spans which time every call.
+"""
+
+from .export import (DUMP_ENV_VAR, PROM_PREFIX, snapshot, to_json,
+                     to_prometheus, write_snapshot)
+from .registry import (DEFAULT_LATENCY_BUCKETS, MAX_SAMPLES, REGISTRY,
+                       Counter, Gauge, Histogram, Registry, exp_buckets,
+                       percentile)
+from .report import (check_stages, counter_value, missing_stages, render,
+                     stage_rows)
+from .spans import (ENV_VAR, Span, current_spans, disable, enable, enabled,
+                    fence, override, span)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "Registry", "REGISTRY",
+    "exp_buckets", "percentile", "DEFAULT_LATENCY_BUCKETS", "MAX_SAMPLES",
+    "ENV_VAR", "DUMP_ENV_VAR", "PROM_PREFIX",
+    "enabled", "enable", "disable", "override",
+    "span", "Span", "fence", "current_spans",
+    "counter", "gauge", "histogram", "reset",
+    "snapshot", "to_json", "to_prometheus", "write_snapshot",
+    "render", "stage_rows", "counter_value", "missing_stages",
+    "check_stages",
+]
+
+
+def counter(name: str, persistent: bool = False, **labels: str) -> Counter:
+    """Get-or-create a counter in the process-wide registry."""
+    return REGISTRY.counter(name, persistent=persistent, **labels)
+
+
+def gauge(name: str, persistent: bool = False, **labels: str) -> Gauge:
+    """Get-or-create a gauge in the process-wide registry."""
+    return REGISTRY.gauge(name, persistent=persistent, **labels)
+
+
+def histogram(name: str, buckets=None, persistent: bool = False,
+              **labels: str) -> Histogram:
+    """Get-or-create a histogram in the process-wide registry."""
+    return REGISTRY.histogram(name, buckets=buckets, persistent=persistent,
+                              **labels)
+
+
+def reset(include_persistent: bool = False) -> None:
+    """Reset the process-wide registry (scratch metrics only by default —
+    dispatch routing counters and stage spans are persistent)."""
+    REGISTRY.reset(include_persistent=include_persistent)

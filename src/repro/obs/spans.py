@@ -1,0 +1,169 @@
+"""Pipeline stage spans and the obs on/off switch.
+
+``span("stage")`` times a host-visible pipeline stage into the
+``stage_seconds`` histogram of :data:`repro.obs.registry.REGISTRY`
+(labeled ``stage=<name>``), and bridges into device profiles through
+``jax.profiler.TraceAnnotation`` so the same stage names show up on the
+device timeline when a profiler trace is active.
+
+Zero-overhead-by-default is the load-bearing contract (the reason the
+spans are safe to leave wired into every layer of the search/ingest
+pipeline):
+
+* disabled (the default — enable with ``REPRO_OBS=1`` or
+  :func:`enable`), ``span()`` returns a shared no-op context manager:
+  no clock reads, no histogram writes, no ``TraceAnnotation``, and —
+  critically — :meth:`Span.fence` NEVER calls ``block_until_ready``,
+  so no device sync the un-instrumented code would not have done;
+* enabled, :meth:`Span.fence` blocks on its argument (skipping tracers:
+  fencing inside a traced computation is a no-op by construction), so
+  async-dispatched device work is attributed to the span that launched
+  it instead of leaking into whichever stage happens to block next.
+
+Spans nest and re-enter freely: each ``with`` entry pushes onto a
+thread-local stack and records its own sample on exit, exceptions
+included.  A span opened inside a traced function (e.g. under
+``shard_map``) times the *trace*, which runs once per cache entry — real
+per-call device time needs the span outside the traced region plus a
+fence, which is exactly how the index/planner call sites are written.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import time
+from typing import List, Optional
+
+import jax
+
+from .registry import REGISTRY
+
+__all__ = ["ENV_VAR", "enabled", "enable", "disable", "override", "span",
+           "current_spans", "fence", "Span"]
+
+ENV_VAR = "REPRO_OBS"
+
+_enabled = os.environ.get(ENV_VAR, "0").lower() not in ("", "0", "false")
+
+_local = threading.local()
+
+# test seam: monkeypatch to observe/forbid device syncs
+_block = jax.block_until_ready
+
+
+def enabled() -> bool:
+    return _enabled
+
+
+def enable() -> None:
+    global _enabled
+    _enabled = True
+
+
+def disable() -> None:
+    global _enabled
+    _enabled = False
+
+
+class override:
+    """Scoped enable/disable (tests)."""
+
+    def __init__(self, on: bool):
+        self.on = bool(on)
+        self._prev: Optional[bool] = None
+
+    def __enter__(self):
+        global _enabled
+        self._prev = _enabled
+        _enabled = self.on
+        return self
+
+    def __exit__(self, *exc):
+        global _enabled
+        _enabled = self._prev
+        return False
+
+
+def _stack() -> List[str]:
+    st = getattr(_local, "stack", None)
+    if st is None:
+        st = _local.stack = []
+    return st
+
+
+def current_spans() -> tuple:
+    """Names of the spans currently open on this thread, outermost first."""
+    return tuple(_stack())
+
+
+def _is_traced(x) -> bool:
+    return any(isinstance(leaf, jax.core.Tracer)
+               for leaf in jax.tree_util.tree_leaves(x))
+
+
+def fence(x):
+    """``jax.block_until_ready(x)`` when obs is enabled; identity (and in
+    particular no device sync) when disabled or ``x`` contains tracers."""
+    if _enabled and not _is_traced(x):
+        return _block(x)
+    return x
+
+
+class Span:
+    """One timed stage entry (enabled path — see :func:`span`)."""
+
+    __slots__ = ("name", "_t0", "_annotation")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._t0 = 0.0
+        self._annotation = None
+
+    def __enter__(self):
+        _stack().append(self.name)
+        self._annotation = jax.profiler.TraceAnnotation(self.name)
+        self._annotation.__enter__()
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        dt = time.perf_counter() - self._t0
+        self._annotation.__exit__(exc_type, exc, tb)
+        st = _stack()
+        if st and st[-1] == self.name:
+            st.pop()
+        REGISTRY.histogram("stage_seconds", persistent=True,
+                           stage=self.name).record(dt)
+        return False
+
+    def fence(self, x):
+        """Block on ``x`` so its device work lands in this span (no-op on
+        tracers); returns ``x`` for inline use."""
+        return fence(x)
+
+
+class _NullSpan:
+    """Disabled path: one shared immutable no-op for every span() call."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+    @staticmethod
+    def fence(x):
+        return x
+
+
+_NULL_SPAN = _NullSpan()
+
+
+def span(name: str):
+    """Context manager timing stage ``name`` (module docstring)."""
+    if not _enabled:
+        return _NULL_SPAN
+    return Span(name)

@@ -1,4 +1,3 @@
-import json
 import os
 
 import numpy as np
@@ -6,21 +5,21 @@ import pytest
 
 
 def pytest_sessionfinish(session, exitstatus):
-    """Dump the process-lifetime dispatch routing ledger when asked.
+    """Dump the process-lifetime metrics snapshot when asked.
 
     CI sets ``REPRO_ROUTING_DUMP`` and, after the test run, feeds the file
     to ``scripts/check_routing.py`` — which fails the build if any elastic
-    op silently fell back off the expected backend.  ``dispatch.totals``
-    (not ``stats``) is used because per-test fixtures reset ``stats``.
+    op silently fell back off the expected backend, or (with REPRO_OBS=1)
+    if any instrumented pipeline stage recorded zero spans.  The snapshot's
+    ``dispatch_total`` counters mirror ``dispatch.totals`` (not ``stats``,
+    which per-test fixtures reset); they are ``persistent`` in the
+    registry, so an ``obs.reset()`` in a test can't erase them either.
     """
     path = os.environ.get("REPRO_ROUTING_DUMP")
     if not path:
         return
-    from repro.core import dispatch
-    ledger = {f"{op}:{route}": n
-              for (op, route), n in sorted(dispatch.totals.items())}
-    with open(path, "w") as f:
-        json.dump(ledger, f, indent=1, sort_keys=True)
+    from repro import obs
+    obs.write_snapshot(path)
 
 
 def dtw_reference(a: np.ndarray, b: np.ndarray, window=None) -> float:
