@@ -8,7 +8,8 @@ import time
 
 from . import (common, dtw_kernel_bench, fig5a_scaling, fig5b_params,
                fig5c_prealign, index_scaling, ivf_scaling, lb_cascade,
-               memory_cost, pqkv_bench, roofline, table1_accuracy)
+               memory_cost, pqkv_bench, roofline, serving_qps,
+               table1_accuracy)
 
 SUITES = {
     "dtw_kernel": dtw_kernel_bench.run,
@@ -21,6 +22,7 @@ SUITES = {
     "index": index_scaling.run,
     "lb_cascade": lb_cascade.run,
     "pqkv": pqkv_bench.run,
+    "serving": serving_qps.run,
     "roofline": roofline.run,
 }
 

@@ -1,0 +1,183 @@
+"""Closed-loop serving benchmark: sustained mixed traffic through the
+coalescing :class:`~repro.serve_index.IndexServer`.
+
+Unlike every earlier suite (one-shot operation latency under ``timeit``),
+this drives the server the way production traffic would: concurrent
+client threads submit small search requests in a closed loop while an
+ingest thread inserts/deletes/compacts through the bounded write queue,
+for a fixed wall-clock duration.  Reported per scenario:
+
+* achieved QPS (completed queries / wall time) and per-request p50/p99
+  latency — including coalescing wait, so the numbers are end-to-end;
+* write throughput, shed count, view swaps, and the mean coalesced batch
+  size (from the serving obs counters).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import jax
+import numpy as np
+
+from repro import obs
+from repro.core.pq import PQConfig
+from repro.data.timeseries import random_walks
+from repro.index import IndexConfig, StreamingIndex
+from repro.serve_index import Backpressure, IndexServer, ServeConfig
+
+from . import common
+from .common import Bench
+
+
+def _build(n_rows: int, dim: int, n_lists: int, hot_capacity: int
+           ) -> StreamingIndex:
+    cfg = IndexConfig(
+        pq=PQConfig(n_sub=4, codebook_size=32, use_prealign=False,
+                    **common.measure_config_fields(),
+                    kmeans_iters=3, dba_iters=1),
+        n_lists=n_lists, hot_capacity=hot_capacity, coarse_iters=4)
+    index = StreamingIndex.bootstrap(
+        jax.random.PRNGKey(0), random_walks(min(n_rows, 512), dim, seed=0),
+        cfg)
+    index.insert(random_walks(n_rows, dim, seed=1))
+    index.compact()
+    return index
+
+
+def _counter_value(name: str, **labels) -> int:
+    return obs.counter(name, persistent=True, **labels).value
+
+
+def _batches_total() -> int:
+    from repro.obs import export
+    snap = export.snapshot()
+    return sum(c["value"] for c in snap["counters"]
+               if c["name"] == "serving_batches_total")
+
+
+def _drive(srv: IndexServer, Q: np.ndarray, dim: int, duration_s: float,
+           n_clients: int, ingest: bool) -> dict:
+    """Run the closed loop for ``duration_s``; returns the scenario row."""
+    deadline = time.monotonic() + duration_s
+    lock = threading.Lock()
+    latencies: list = []
+    totals = {"queries": 0, "inserted": 0, "deleted": 0, "shed": 0}
+    q0 = _counter_value("serving_queries_total")
+    b0 = _batches_total()
+
+    def client(seed: int) -> None:
+        rng = np.random.default_rng(seed)
+        mine, done = [], 0
+        while time.monotonic() < deadline:
+            n = int(rng.integers(1, 5))
+            q = Q[rng.integers(0, len(Q), size=n)]
+            t0 = time.perf_counter()
+            srv.submit_search(q).result()
+            mine.append(time.perf_counter() - t0)
+            done += n
+        with lock:
+            latencies.extend(mine)
+            totals["queries"] += done
+
+    def ingester() -> None:
+        rng = np.random.default_rng(4242)
+        resident: list = []
+        it = 0
+        while time.monotonic() < deadline:
+            it += 1
+            try:
+                if resident and rng.random() < 0.35:
+                    k = min(8, len(resident))
+                    victims, resident[:k] = resident[:k], []
+                    srv.delete(victims).result()
+                    totals["deleted"] += k
+                else:
+                    ids = srv.insert(
+                        rng.standard_normal((8, dim)).astype(np.float32)
+                    ).result()
+                    resident.extend(int(i) for i in ids)
+                    totals["inserted"] += len(ids)
+                if it % 32 == 0:
+                    srv.compact().result()
+            except Backpressure:
+                totals["shed"] += 1
+                time.sleep(0.001)
+
+    threads = [threading.Thread(target=client, args=(s,))
+               for s in range(n_clients)]
+    if ingest:
+        threads.append(threading.Thread(target=ingester))
+    t_start = time.monotonic()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.monotonic() - t_start
+    srv.quiesce()
+
+    n_batches = _batches_total() - b0
+    n_batched = _counter_value("serving_queries_total") - q0
+    return dict(
+        wall_s=wall,
+        qps=totals["queries"] / wall,
+        p50_ms=1e3 * obs.percentile(latencies, 50.0),
+        p99_ms=1e3 * obs.percentile(latencies, 99.0),
+        requests=len(latencies),
+        queries=totals["queries"],
+        mean_coalesced=(n_batched / n_batches) if n_batches else 0.0,
+        inserted=totals["inserted"],
+        deleted=totals["deleted"],
+        shed=totals["shed"],
+        view_version=srv.version,
+    )
+
+
+def run(quick: bool = True) -> None:
+    if common.SMOKE:
+        n_rows, dim, duration, clients = 192, 48, 0.6, 2
+    elif quick:
+        n_rows, dim, duration, clients = 1024, 96, 3.0, 4
+    else:
+        n_rows, dim, duration, clients = 8192, 128, 10.0, 8
+
+    prev_obs = obs.enabled()
+    obs.enable()                     # the bench reads serving counters
+    bench = Bench("serving_qps", root_name="serving")
+    scfg = ServeConfig(n_probe=4, topk=3)
+    try:
+        for scenario, ingest in (("read_only", False), ("mixed", True)):
+            index = _build(n_rows, dim, n_lists=8,
+                           hot_capacity=max(64, dim))
+            Q = random_walks(64, dim, seed=9)
+            with IndexServer(index, scfg) as srv:
+                # warm every bucket the traffic can coalesce into (each
+                # client submits <= 4 queries), so steady state is
+                # measured, not compilation
+                reachable = [b for b in scfg.q_buckets
+                             if b <= 4 * clients] or [scfg.q_buckets[0]]
+                for n in reachable:
+                    srv.submit_search(Q[:n]).result()
+                row = _drive(srv, Q, dim, duration, clients, ingest)
+            bench.add(scenario=scenario, n_rows=n_rows, dim=dim,
+                      clients=clients, **row)
+    finally:
+        if not prev_obs:
+            obs.disable()
+
+    mixed = next(r for r in bench.rows if r["scenario"] == "mixed")
+    bench.save(headline=dict(
+        measure=common.MEASURE,
+        scenario="mixed insert/query/delete, closed loop",
+        duration_s=duration,
+        clients=clients,
+        qps=round(mixed["qps"], 1),
+        p50_ms=round(mixed["p50_ms"], 3),
+        p99_ms=round(mixed["p99_ms"], 3),
+        shed=mixed["shed"],
+    ))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,6 +1,7 @@
 """Streaming index service loop: ingest -> query -> compact -> snapshot.
 
     PYTHONPATH=src python examples/index_service.py [--iters N] [--chunk C]
+    PYTHONPATH=src python examples/index_service.py --serve
 
 Simulates the paper's §4.1 "real-time similarity search" service as a
 lifecycle: a quantizer bootstrapped on a historical sample, a stream of
@@ -16,10 +17,17 @@ library's own ``index.*`` stage spans, and the exit summary reports
 per-stage p50/p99 latency, the LB-cascade pruning rate, and the dispatch
 routing counters — the same report ``scripts/obs_report.py`` renders
 from a ``REPRO_OBS_DUMP`` snapshot.
+
+``--serve`` drives the same stream through the production serving core
+(``repro.serve_index``, see docs/serving.md): concurrent client threads
+submit queries that a coalescer merges into padded microbatches, while
+ingest/delete/compact flow through the writer thread and publish
+immutable snapshots — no search ever blocks on a seal.
 """
 
 import argparse
 import tempfile
+import threading
 import time
 
 import jax
@@ -49,6 +57,10 @@ def main():
     ap.add_argument("--no-obs", action="store_true",
                     help="leave the observability layer off (zero-overhead "
                          "mode; the exit report is skipped)")
+    ap.add_argument("--serve", action="store_true",
+                    help="drive the stream through the serving core "
+                         "(repro.serve_index): coalesced concurrent "
+                         "queries + writer-thread ingest")
     args = ap.parse_args()
     D = args.length
     from repro.core import measures
@@ -74,6 +86,10 @@ def main():
     print(f"bootstrap: n_lists={cfg.n_lists} hot_capacity={cfg.hot_capacity}"
           f" measure={spec.label}"
           f" ({time.perf_counter() - t0:.2f}s)")
+
+    if args.serve:
+        serve_demo(index, args)
+        return
 
     # --- serve the stream ---------------------------------------------------
     queries = random_walks(8, D, seed=99)
@@ -147,6 +163,80 @@ def main():
               f"over {query_h.count} rounds")
         print()
         print(obs.render(obs.snapshot(), title="index service obs summary"))
+
+
+def serve_demo(index, args):
+    """--serve: concurrent clients + ingest through `repro.serve_index`."""
+    from repro.serve_index import Backpressure, IndexServer, ServeConfig
+
+    D = args.length
+    queries = random_walks(8, D, seed=99)
+    scfg = ServeConfig(n_probe=4, topk=3, q_buckets=(1, 2, 4, 8))
+    answered = []
+    client_errors = []
+    stop = threading.Event()
+
+    def client(seed):
+        rng = np.random.default_rng(seed)
+        while not stop.is_set():
+            rows = rng.choice(len(queries), size=int(rng.integers(1, 4)),
+                              replace=False)
+            try:
+                _, ids = srv.search(queries[rows])
+            except Exception as exc:      # surface, don't swallow
+                client_errors.append(exc)
+                return
+            answered.append(ids.shape[0])
+
+    t0 = time.perf_counter()
+    with IndexServer(index, scfg) as srv:
+        for b in scfg.q_buckets:    # compile each padded bucket once
+            srv.search(queries[:b])
+        print(f"serve: warmed {len(scfg.q_buckets)} query buckets "
+              f"({time.perf_counter() - t0:.2f}s)")
+
+        clients = [threading.Thread(target=client, args=(7 + i,))
+                   for i in range(3)]
+        for t in clients:
+            t.start()
+        shed = 0
+        t0 = time.perf_counter()
+        for it in range(args.iters):
+            fresh = random_walks(args.chunk, D, seed=200 + it)
+            try:
+                srv.insert(fresh).result()      # resolved == visible
+            except Backpressure:
+                shed += 1
+                continue
+            if it % 3 == 2:
+                srv.delete(np.arange(it, it + 3))
+            if it == args.iters // 2:
+                # seal the staged rows so later searches take the full
+                # coarse -> LUT -> fine sealed path, then merge segments
+                srv.flush().result()
+                srv.compact().result()
+        wall = time.perf_counter() - t0
+        stop.set()
+        for t in clients:
+            t.join()
+        version = srv.quiesce()
+        st = srv.stats()
+        n_live = int(srv.view.n_live())
+
+    if client_errors:
+        raise client_errors[0]
+    n_q = sum(answered)
+    print(f"serve: {len(answered)} requests / {n_q} queries from 3 clients "
+          f"({n_q / max(wall, 1e-9):,.0f} q/s) alongside "
+          f"{args.iters} ingest rounds, {shed} shed")
+    print(f"serve: view version {version}, {n_live} live rows, "
+          f"write queue {st['write_queue_depth']} "
+          f"(pressure {st['pressure']:.2f})")
+    assert n_q > 0 and st["version"] == version
+
+    if obs.enabled():
+        print()
+        print(obs.render(obs.snapshot(), title="serving obs summary"))
 
 
 if __name__ == "__main__":

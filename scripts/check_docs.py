@@ -1,0 +1,217 @@
+#!/usr/bin/env python3
+"""Fail CI when the docs rot: every greppable identifier that docs/ or
+README.md references must still exist in the source.
+
+Usage: python scripts/check_docs.py [--root PATH]
+
+Checked reference classes:
+
+* ``dispatch.<op>`` tokens -> the name must appear in
+  ``src/repro/core/dispatch.py``;
+* backtick-quoted dotted stage names whose first component is a known
+  span namespace (``index``, ``sharded``, ``serve``, ``serving``,
+  ``service``), plus ``stage="..."`` label examples -> the stage string
+  must appear quoted somewhere under ``src/``, ``examples/``,
+  ``scripts/`` or ``benchmarks/``;
+* ``repro_<metric>`` Prometheus tokens -> the unprefixed metric name
+  must appear as a quoted string under ``src/``;
+* ``snapshot format N`` mentions -> ``N`` must be in
+  ``_SUPPORTED_FORMATS`` of ``src/repro/index/snapshot.py``;
+* ``--flags`` on ``python <script>.py`` / ``python -m <module>`` command
+  lines -> the flag must appear in the named file.
+
+``--root`` exists so the negative test can point the gate at a doctored
+tree and assert it fails; CI runs it against the repo root.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+from typing import Dict, List, Tuple
+
+STAGE_NAMESPACES = ("index", "sharded", "serve", "serving", "service")
+SOURCE_DIRS = ("src", "examples", "scripts", "benchmarks")
+
+DOTTED = re.compile(r"`([a-z_]+(?:\.[a-z_]+)+)`")
+STAGE_LABEL = re.compile(r'stage="([a-z_.]+)"')
+DISPATCH_OP = re.compile(r"\bdispatch\.([a-z_]+)\b")
+PROM_METRIC = re.compile(r"\brepro_([a-z_]+)\b")
+FORMAT_REF = re.compile(r"\bformats?\s+(\d+)(?:\s*[-–]\s*(\d+))?")
+CMD_LINE = re.compile(r"\bpython(?:3)?\s+(?:-m\s+([\w.]+)|([\w./-]+\.py))")
+FLAG = re.compile(r"(--[\w-]+)")
+
+
+def _read(path: str) -> str:
+    with open(path, encoding="utf-8") as f:
+        return f.read()
+
+
+def _doc_files(root: str) -> List[str]:
+    out = []
+    readme = os.path.join(root, "README.md")
+    if os.path.exists(readme):
+        out.append(readme)
+    docs = os.path.join(root, "docs")
+    if os.path.isdir(docs):
+        for name in sorted(os.listdir(docs)):
+            if name.endswith(".md"):
+                out.append(os.path.join(docs, name))
+    return out
+
+
+def _source_text(root: str, subdirs: Tuple[str, ...]) -> str:
+    chunks = []
+    for sub in subdirs:
+        top = os.path.join(root, sub)
+        for dirpath, _, files in os.walk(top):
+            for name in files:
+                if name.endswith(".py"):
+                    chunks.append(_read(os.path.join(dirpath, name)))
+    return "\n".join(chunks)
+
+
+def _supported_formats(root: str) -> List[int]:
+    path = os.path.join(root, "src", "repro", "index", "snapshot.py")
+    if not os.path.exists(path):
+        return []
+    text = _read(path)
+    m = re.search(r"_SUPPORTED_FORMATS\s*=\s*\(([\d,\s]+)\)", text)
+    if m:
+        return [int(x) for x in m.group(1).split(",") if x.strip()]
+    m = re.search(r"_FORMAT\s*=\s*(\d+)", text)
+    return [int(m.group(1))] if m else []
+
+
+def _resolves_as_module(root: str, dotted: str) -> bool:
+    """True when a dotted token is a live module path under ``src/repro``
+    (``index.placement``), optionally with trailing attributes that appear
+    in the module's text (``index.planner.search_sharded``)."""
+    parts = dotted.split(".")
+    base = os.path.join(root, "src", "repro")
+    for i in range(len(parts), 0, -1):
+        cand = os.path.join(base, *parts[:i])
+        target = None
+        if os.path.exists(cand + ".py"):
+            target = cand + ".py"
+        elif os.path.isdir(cand):
+            if i == len(parts):
+                return True
+            init = os.path.join(cand, "__init__.py")
+            target = init if os.path.exists(init) else None
+        if target is None:
+            continue
+        if i == len(parts):
+            return True
+        text = _read(target)
+        return all(re.search(rf"\b{re.escape(p)}\b", text) for p in parts[i:])
+    return False
+
+
+def check_file(
+    path: str,
+    dispatch_src: str,
+    stage_src: str,
+    metric_src: str,
+    formats: List[int],
+    root: str,
+) -> List[str]:
+    errors = []
+    rel = os.path.relpath(path, root)
+    text = _read(path)
+
+    for op in sorted(set(DISPATCH_OP.findall(text))):
+        if not re.search(rf"\b{re.escape(op)}\b", dispatch_src):
+            errors.append(f"{rel}: dispatch.{op} not found in core/dispatch.py")
+
+    stages = {
+        s
+        for s in DOTTED.findall(text)
+        if s.split(".", 1)[0] in STAGE_NAMESPACES
+    }
+    stages.update(STAGE_LABEL.findall(text))
+    for stage in sorted(stages):
+        quoted = f'"{stage}"' in stage_src or f"'{stage}'" in stage_src
+        if not quoted and not _resolves_as_module(root, stage):
+            errors.append(f"{rel}: stage {stage!r} not found in source")
+
+    for metric in sorted(set(PROM_METRIC.findall(text))):
+        if f'"{metric}"' not in metric_src and f"'{metric}'" not in metric_src:
+            errors.append(
+                f"{rel}: metric repro_{metric} has no quoted "
+                f"{metric!r} in src/",
+            )
+
+    if formats:
+        for m in FORMAT_REF.finditer(text):
+            nums = [int(m.group(1))]
+            if m.group(2):
+                nums.append(int(m.group(2)))
+            for n in nums:
+                if n not in formats:
+                    errors.append(
+                        f"{rel}: snapshot format {n} not in supported "
+                        f"formats {formats}",
+                    )
+
+    for line in text.splitlines():
+        cmd = CMD_LINE.search(line)
+        if not cmd:
+            continue
+        module, script = cmd.group(1), cmd.group(2)
+        target = (
+            os.path.join(root, module.replace(".", os.sep) + ".py")
+            if module
+            else os.path.join(root, script)
+        )
+        if not os.path.exists(target):
+            continue  # external module (pytest, ...) or absolute example
+        target_text = _read(target)
+        for flag in FLAG.findall(line):
+            if flag not in target_text:
+                errors.append(
+                    f"{rel}: flag {flag} not found in "
+                    f"{os.path.relpath(target, root)}",
+                )
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default=".")
+    args = ap.parse_args()
+    root = args.root
+
+    docs = _doc_files(root)
+    if not docs:
+        print(f"FAIL: no README.md or docs/*.md under {root}")
+        return 1
+
+    dispatch_path = os.path.join(root, "src", "repro", "core", "dispatch.py")
+    dispatch_src = _read(dispatch_path) if os.path.exists(dispatch_path) else ""
+    stage_src = _source_text(root, SOURCE_DIRS)
+    metric_src = _source_text(root, ("src",))
+    formats = _supported_formats(root)
+
+    counts: Dict[str, int] = {}
+    errors: List[str] = []
+    for path in docs:
+        errs = check_file(path, dispatch_src, stage_src, metric_src, formats, root)
+        counts[os.path.relpath(path, root)] = len(errs)
+        errors.extend(errs)
+
+    for rel in sorted(counts):
+        print(f"  {rel}: {counts[rel]} stale reference(s)")
+    if errors:
+        print(f"FAIL: {len(errors)} stale doc reference(s):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"OK: {len(docs)} doc file(s) clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

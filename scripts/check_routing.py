@@ -54,7 +54,7 @@ MEASURED_OPS = (
 
 # every instrumented pipeline stage the tier-1 suite must light up when
 # it runs with REPRO_OBS=1 (spans live in index/streaming.py,
-# index/planner.py)
+# index/planner.py and serve_index/)
 EXPECTED_STAGES = (
     "index.search",
     "index.search.coarse",
@@ -67,6 +67,9 @@ EXPECTED_STAGES = (
     "index.compact",
     "sharded.search",
     "sharded.execute",
+    "serving.batch_search",
+    "serving.apply",
+    "serving.snapshot_swap",
 )
 
 

@@ -95,7 +95,15 @@ totals: Dict[Tuple[str, str], int] = {}
 def effective_window(length: int, window: Optional[int]) -> int:
     """The library-wide ``window=None`` contract (see module docstring):
     ``None`` -> unbanded -> ``length - 1``; everything clamped to
-    ``[0, length - 1]``."""
+    ``[0, length - 1]``.
+
+    >>> effective_window(128, None)
+    127
+    >>> effective_window(128, 12)
+    12
+    >>> effective_window(128, 500)
+    127
+    """
     w = length - 1 if window is None else int(window)
     return max(0, min(w, length - 1))
 
@@ -109,7 +117,15 @@ def _check(name: str) -> str:
 
 def get_backend() -> str:
     """Resolved backend name: ``"pallas"``, ``"pallas_interpret"`` or
-    ``"jax"`` (``"auto"`` is resolved against the runtime platform)."""
+    ``"jax"`` (``"auto"`` is resolved against the runtime platform).
+
+    >>> from repro.core import dispatch
+    >>> with dispatch.use_backend("jax"):
+    ...     dispatch.get_backend()
+    'jax'
+    >>> dispatch.get_backend() in ("pallas", "pallas_interpret", "jax")
+    True
+    """
     name = _override if _override is not None else _check(
         os.environ.get(ENV_VAR, "auto"))
     if name == "auto":
@@ -122,6 +138,12 @@ def set_backend(name: Optional[str]) -> None:
 
     Callers that were already traced keep their route — pair with
     ``jax.clear_caches()`` to force re-dispatch.
+
+    >>> from repro.core import dispatch
+    >>> dispatch.set_backend("pallas_interpret")
+    >>> dispatch.get_backend()
+    'pallas_interpret'
+    >>> dispatch.set_backend(None)          # back to env/auto selection
     """
     global _override
     _override = _check(name) if name is not None else None
@@ -129,7 +151,16 @@ def set_backend(name: Optional[str]) -> None:
 
 @contextmanager
 def use_backend(name: str):
-    """Scoped :func:`set_backend` (tests, benchmarks)."""
+    """Scoped :func:`set_backend` (tests, benchmarks).
+
+    >>> from repro.core import dispatch
+    >>> prev = dispatch.get_backend()
+    >>> with dispatch.use_backend("jax"):
+    ...     dispatch.get_backend()
+    'jax'
+    >>> dispatch.get_backend() == prev      # restored on exit
+    True
+    """
     global _override
     prev = _override
     _override = _check(name)
@@ -140,6 +171,22 @@ def use_backend(name: str):
 
 
 def reset_stats() -> None:
+    """Clear the per-test :data:`stats` ledger; the process-lifetime
+    :data:`totals` ledger (the CI routing gate's input) is untouched.
+
+    >>> import jax.numpy as jnp
+    >>> from repro.core import dispatch
+    >>> with dispatch.use_backend("jax"):
+    ...     _ = dispatch.elastic_pairwise(jnp.zeros((1, 4)),
+    ...                                   jnp.ones((1, 4)), window=1)
+    >>> dispatch.stats[("elastic_pairwise", "jax")] >= 1
+    True
+    >>> dispatch.reset_stats()
+    >>> ("elastic_pairwise", "jax") in dispatch.stats
+    False
+    >>> ("elastic_pairwise", "jax") in dispatch.totals
+    True
+    """
     stats.clear()
 
 
@@ -174,7 +221,18 @@ def elastic_pairwise(A: jnp.ndarray, B: jnp.ndarray,
                      window: Optional[int] = None, *,
                      block: int = 8,
                      measure: MeasureArg = None) -> jnp.ndarray:
-    """Elastic cost over zipped pairs: ``(N, L) x (N, L) -> (N,)``."""
+    """Elastic cost over zipped pairs: ``(N, L) x (N, L) -> (N,)``.
+
+    >>> import jax.numpy as jnp
+    >>> from repro.core import dispatch
+    >>> with dispatch.use_backend("jax"):
+    ...     d = dispatch.elastic_pairwise(jnp.zeros((2, 8)),
+    ...                                   jnp.ones((2, 8)), window=2)
+    >>> d.shape
+    (2,)
+    >>> [float(x) for x in d]           # 8 unit squared diffs per pair
+    [8.0, 8.0]
+    """
     from ..kernels.dtw_band.ops import dtw_band
     spec = measures.resolve(measure)
     backend = get_backend()
@@ -189,7 +247,18 @@ def elastic_cdist(A: jnp.ndarray, B: jnp.ndarray,
                   window: Optional[int] = None, *,
                   block: int = 8,
                   measure: MeasureArg = None) -> jnp.ndarray:
-    """All-pairs elastic cost: ``(N, L) x (M, L) -> (N, M)``."""
+    """All-pairs elastic cost: ``(N, L) x (M, L) -> (N, M)``.
+
+    >>> import jax.numpy as jnp
+    >>> from repro.core import dispatch
+    >>> with dispatch.use_backend("jax"):
+    ...     D = dispatch.elastic_cdist(jnp.zeros((2, 8)),
+    ...                                jnp.ones((3, 8)), window=2)
+    >>> D.shape
+    (2, 3)
+    >>> float(D[0, 0])
+    8.0
+    """
     from ..kernels.dtw_band.ops import dtw_band_cdist
     spec = measures.resolve(measure)
     backend = get_backend()
@@ -205,7 +274,17 @@ def adc_cdist(codes_a: jnp.ndarray, codes_b: jnp.ndarray,
     """Symmetric PQ distance matrix ``sqrt(sum_m LUT[m, a^m, b^m])``:
     one-hot MXU contractions on the Pallas route, plain gathers on "jax".
     Measure-generic by construction — the LUT already encodes whichever
-    measure built it (paper §3.3)."""
+    measure built it (paper §3.3).
+
+    >>> import jax.numpy as jnp
+    >>> from repro.core import dispatch
+    >>> codes = jnp.array([[0, 1], [1, 0]], jnp.int32)
+    >>> lut = jnp.stack([1.0 - jnp.eye(2)] * 2)   # (M=2, K=2, K=2)
+    >>> with dispatch.use_backend("jax"):
+    ...     D = dispatch.adc_cdist(codes, codes, lut)
+    >>> [round(float(x), 3) for x in D.ravel()]   # sqrt(0), sqrt(2), ...
+    [0.0, 1.414, 1.414, 0.0]
+    """
     from ..kernels.pq_adc.ops import adc_sym_cdist as _adc_sym_pallas
     from ..kernels.pq_adc.ref import adc_sym_cdist_ref
     backend = get_backend()
@@ -217,7 +296,19 @@ def adc_cdist(codes_a: jnp.ndarray, codes_b: jnp.ndarray,
 
 
 def adc_lookup(codes: jnp.ndarray, qlut: jnp.ndarray) -> jnp.ndarray:
-    """Asymmetric ADC scan: ``codes (N, M)``, ``qlut (M, K)`` -> ``(N,)``."""
+    """Asymmetric ADC scan: ``codes (N, M)``, ``qlut (M, K)`` -> ``(N,)``.
+
+    Returns ``sqrt(sum_m qlut[m, codes[n, m]])`` per row:
+
+    >>> import jax.numpy as jnp
+    >>> from repro.core import dispatch
+    >>> codes = jnp.array([[0, 0], [1, 1]], jnp.int32)
+    >>> qlut = jnp.array([[0.0, 2.0], [0.0, 2.0]])
+    >>> with dispatch.use_backend("jax"):
+    ...     d = dispatch.adc_lookup(codes, qlut)
+    >>> [float(x) for x in d]
+    [0.0, 2.0]
+    """
     from ..kernels.pq_adc.ops import adc_lookup as _adc_lookup_pallas
     from ..kernels.pq_adc.ref import adc_lookup_ref
     backend = get_backend()
@@ -240,6 +331,19 @@ def prealign_encode(X: jnp.ndarray, centroids: jnp.ndarray, *, level: int,
     one pass per batch tile — the ``(N, M, S)`` segment tensor never
     reaches HBM.  The ``"jax"`` route is the two-step reference.  The
     1-NN scan runs under ``measure`` (DTW by default).
+
+    >>> import jax.numpy as jnp
+    >>> from repro.core import dispatch
+    >>> cents = jnp.stack([jnp.zeros((2, 5)), jnp.ones((2, 5))], axis=1)
+    >>> cents.shape                                # (M=2, K=2, S=5)
+    (2, 2, 5)
+    >>> with dispatch.use_backend("jax"):
+    ...     codes = dispatch.prealign_encode(jnp.zeros((2, 8)), cents,
+    ...                                      level=1, tail=1, window=2)
+    >>> codes.shape, str(codes.dtype)
+    ((2, 2), 'int32')
+    >>> bool((codes == 0).all())                   # zeros snap to centroid 0
+    True
     """
     from ..kernels.prealign_encode.ops import (
         prealign_encode as _prealign_encode_pallas)
@@ -274,6 +378,19 @@ def lb_refine(A: jnp.ndarray, B: jnp.ndarray, upper: jnp.ndarray,
     Only sound for measures with ``has_keogh_lb`` (a hard error otherwise
     — capability-gated callers such as ``lb_search.filtered_topk`` fall
     back to the exact dense path before reaching here).
+
+    >>> import jax.numpy as jnp
+    >>> from repro.core import dispatch
+    >>> A, B = jnp.zeros((2, 8)), jnp.ones((2, 8))
+    >>> env = jnp.zeros((2, 8))                    # degenerate envelopes
+    >>> with dispatch.use_backend("jax"):
+    ...     d, refined = dispatch.lb_refine(A, B, env, env,
+    ...                                     jnp.array([100.0, 0.0]),
+    ...                                     window=2)
+    >>> [bool(r) for r in refined]                 # row 1 pruned by bound
+    [True, False]
+    >>> float(d[0])                                # exact where refined
+    8.0
     """
     from ..kernels.lb_cascade.ops import lb_refine as _lb_refine_pallas
     from ..kernels.lb_cascade.ref import lb_refine_jax
@@ -316,6 +433,23 @@ def two_level_coarse(Q: jnp.ndarray, top: jnp.ndarray, coarse: jnp.ndarray,
     Both heavy stages route through the same kernel paths as
     :func:`elastic_cdist` / :func:`elastic_pairwise`; the op is ledgered
     separately so the routing gate can prove the hierarchical stage ran.
+
+    >>> import jax.numpy as jnp
+    >>> from repro.core import dispatch
+    >>> coarse = jnp.arange(4, dtype=jnp.float32)[:, None] * jnp.ones(8)
+    >>> top = jnp.array([[0.5] * 8, [2.5] * 8])    # parents of {0,1}, {2,3}
+    >>> child_idx = jnp.array([[0, 1], [2, 3]], jnp.int32)
+    >>> child_valid = jnp.ones((2, 2), bool)
+    >>> with dispatch.use_backend("jax"):
+    ...     dc = dispatch.two_level_coarse(jnp.zeros((1, 8)), top, coarse,
+    ...                                    child_idx, child_valid,
+    ...                                    n_probe_top=1)
+    >>> dc.shape
+    (1, 4)
+    >>> [bool(jnp.isfinite(x)) for x in dc[0]]     # only top cell 0 fans out
+    [True, True, False, False]
+    >>> float(dc[0, 0])
+    0.0
     """
     n_top, C = child_idx.shape
     if not 1 <= n_probe_top <= n_top:

@@ -52,6 +52,12 @@ class PQConfig:
     PQ_ED baseline).  ``measure_params`` carries the measure's static
     hyper-parameters (e.g. ``{"g": 1.0}`` for erp) — normalized to a
     sorted tuple of pairs so the config stays hashable and JSON-safe.
+
+    >>> cfg = PQConfig(n_sub=2, codebook_size=4, use_prealign=False)
+    >>> cfg.is_elastic
+    True
+    >>> cfg.subseq_len(8), cfg.tail(8), cfg.window(8)
+    (4, 1, 1)
     """
     n_sub: int = 8              # M: number of subspaces
     codebook_size: int = 256    # K
@@ -118,7 +124,14 @@ class PQConfig:
 
 
 class PQCodebook(NamedTuple):
-    """Trained quantizer state (a pytree — jit/shard friendly)."""
+    """Trained quantizer state (a pytree — jit/shard friendly).
+
+    >>> import jax.numpy as jnp
+    >>> cb = PQCodebook(jnp.zeros((2, 4, 5)), jnp.zeros((2, 4, 4)),
+    ...                 jnp.zeros((2, 4, 5)), jnp.zeros((2, 4, 5)))
+    >>> cb.n_sub, cb.codebook_size, cb.subseq_len
+    (2, 4, 5)
+    """
     centroids: jnp.ndarray   # (M, K, S) float32
     lut: jnp.ndarray         # (M, K, K) squared elastic distance
     env_upper: jnp.ndarray   # (M, K, S)
@@ -142,7 +155,13 @@ class PQCodebook(NamedTuple):
 # ---------------------------------------------------------------------------
 
 def segment(X: jnp.ndarray, cfg: PQConfig) -> jnp.ndarray:
-    """``X (N, D)`` -> ``(N, M, S)`` subsequences (pre-aligned or fixed)."""
+    """``X (N, D)`` -> ``(N, M, S)`` subsequences (pre-aligned or fixed).
+
+    >>> import jax.numpy as jnp
+    >>> cfg = PQConfig(n_sub=2, use_prealign=False)
+    >>> segment(jnp.zeros((3, 8)), cfg).shape
+    (3, 2, 4)
+    """
     D = X.shape[-1]
     if cfg.use_prealign and cfg.is_elastic:
         return prealign(X, cfg.n_sub, cfg.wavelet_level, cfg.tail(D))
@@ -154,7 +173,16 @@ def segment(X: jnp.ndarray, cfg: PQConfig) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 def fit(key: jax.Array, X: jnp.ndarray, cfg: PQConfig) -> PQCodebook:
-    """Learn the codebook, LUT and envelopes from training series ``X (N, D)``."""
+    """Learn the codebook, LUT and envelopes from training series ``X (N, D)``.
+
+    >>> import jax, jax.numpy as jnp
+    >>> cfg = PQConfig(n_sub=2, codebook_size=2, use_prealign=False,
+    ...                kmeans_iters=1, dba_iters=1)
+    >>> X = jnp.arange(32, dtype=jnp.float32).reshape(4, 8) / 10.0
+    >>> cb = fit(jax.random.PRNGKey(0), X, cfg)
+    >>> cb.centroids.shape, cb.lut.shape
+    ((2, 2, 4), (2, 2, 2))
+    """
     X = jnp.asarray(X, jnp.float32)
     D = X.shape[-1]
     segs = segment(X, cfg)                       # (N, M, S)
@@ -247,20 +275,46 @@ def uses_fused_prealign(cfg: PQConfig) -> bool:
     """True when :func:`encode` takes the fused prealign+encode dispatch
     path: an elastic metric, pre-alignment on, and an exact (full-scan)
     encode — the LB filter-then-refine route still needs materialized
-    segments and envelopes, so it stays on the two-step."""
+    segments and envelopes, so it stays on the two-step.
+
+    >>> uses_fused_prealign(PQConfig())            # LB filter: two-step
+    False
+    >>> uses_fused_prealign(PQConfig(exact_encode=True))
+    True
+    """
     return (cfg.fused_encode and cfg.use_prealign and cfg.is_elastic
             and cfg.full_scan_encode())
 
 
 def encode(X: jnp.ndarray, cb: PQCodebook, cfg: PQConfig) -> jnp.ndarray:
-    """Encode raw series ``X (N, D)`` to PQ codes ``(N, M)``."""
+    """Encode raw series ``X (N, D)`` to PQ codes ``(N, M)``.
+
+    >>> import jax, jax.numpy as jnp
+    >>> cfg = PQConfig(n_sub=2, codebook_size=2, use_prealign=False,
+    ...                kmeans_iters=1, dba_iters=1)
+    >>> X = jnp.arange(32, dtype=jnp.float32).reshape(4, 8) / 10.0
+    >>> cb = fit(jax.random.PRNGKey(0), X, cfg)
+    >>> codes = encode(X, cb, cfg)
+    >>> codes.shape, str(codes.dtype)
+    ((4, 2), 'int32')
+    """
     codes, _ = encode_with_stats(X, cb, cfg)
     return codes
 
 
 def encode_with_stats(X: jnp.ndarray, cb: PQCodebook, cfg: PQConfig
                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Encode + per-code soundness flags (True = certified exact-NN code)."""
+    """Encode + per-code soundness flags (True = certified exact-NN code).
+
+    >>> import jax, jax.numpy as jnp
+    >>> cfg = PQConfig(n_sub=2, codebook_size=2, use_prealign=False,
+    ...                kmeans_iters=1, dba_iters=1)
+    >>> X = jnp.arange(32, dtype=jnp.float32).reshape(4, 8) / 10.0
+    >>> cb = fit(jax.random.PRNGKey(0), X, cfg)
+    >>> codes, sound = encode_with_stats(X, cb, cfg)
+    >>> sound.shape, str(sound.dtype)
+    ((4, 2), 'bool')
+    """
     X = jnp.asarray(X, jnp.float32)
     D = X.shape[-1]
     if uses_fused_prealign(cfg):
@@ -284,6 +338,12 @@ def cdist_sym(codes_a: jnp.ndarray, codes_b: jnp.ndarray,
     Routed through the dispatch layer: one-hot MXU contractions on the
     Pallas ADC kernel, plain LUT gathers on the pure-JAX route; sqrt of the
     summed squared subspace costs either way.
+
+    >>> import jax.numpy as jnp
+    >>> codes = jnp.array([[0, 1], [1, 0]], jnp.int32)
+    >>> lut = jnp.stack([1.0 - jnp.eye(2)] * 2)    # (M=2, K=2, K=2)
+    >>> [round(float(x), 3) for x in cdist_sym(codes, codes, lut).ravel()]
+    [0.0, 1.414, 1.414, 0.0]
     """
     return adc_cdist(codes_a, codes_b, lut)
 
@@ -294,7 +354,17 @@ def query_lut(q_segs: jnp.ndarray, cb: PQCodebook, window: Optional[int],
               euclidean: bool = False,
               measure: Optional[MeasureSpec] = None) -> jnp.ndarray:
     """Asymmetric query table: ``q_segs (M, S)`` -> ``(M, K)`` subspace
-    distances under the configured measure."""
+    distances under the configured measure.
+
+    >>> import jax, jax.numpy as jnp
+    >>> cfg = PQConfig(n_sub=2, codebook_size=2, use_prealign=False,
+    ...                kmeans_iters=1, dba_iters=1)
+    >>> X = jnp.arange(32, dtype=jnp.float32).reshape(4, 8) / 10.0
+    >>> cb = fit(jax.random.PRNGKey(0), X, cfg)
+    >>> q_segs = segment(X, cfg)[0]                # one query's segments
+    >>> query_lut(q_segs, cb, cfg.window(8), measure=cfg.measure()).shape
+    (2, 2)
+    """
     return query_lut_batch(q_segs[None], cb, window, euclidean, measure)[0]
 
 
@@ -309,6 +379,15 @@ def query_lut_batch(q_segs: jnp.ndarray, cb: PQCodebook,
     One all-pairs dispatch launch per subspace; the cdist kernel broadcasts
     each centroid row per tile, so the Nq x K cross-product of series is
     never materialized.
+
+    >>> import jax, jax.numpy as jnp
+    >>> cfg = PQConfig(n_sub=2, codebook_size=2, use_prealign=False,
+    ...                kmeans_iters=1, dba_iters=1)
+    >>> X = jnp.arange(32, dtype=jnp.float32).reshape(4, 8) / 10.0
+    >>> cb = fit(jax.random.PRNGKey(0), X, cfg)
+    >>> query_lut_batch(segment(X, cfg), cb, cfg.window(8),
+    ...                 measure=cfg.measure()).shape
+    (4, 2, 2)
     """
     Nq, M, S = q_segs.shape
     if euclidean:
@@ -329,7 +408,16 @@ def _adc_gather(qlut: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
 
 def cdist_asym(Q: jnp.ndarray, codes: jnp.ndarray, cb: PQCodebook,
                cfg: PQConfig) -> jnp.ndarray:
-    """Asymmetric distances: raw queries ``Q (Nq, D)`` vs codes ``(N, M)``."""
+    """Asymmetric distances: raw queries ``Q (Nq, D)`` vs codes ``(N, M)``.
+
+    >>> import jax, jax.numpy as jnp
+    >>> cfg = PQConfig(n_sub=2, codebook_size=2, use_prealign=False,
+    ...                kmeans_iters=1, dba_iters=1)
+    >>> X = jnp.arange(32, dtype=jnp.float32).reshape(4, 8) / 10.0
+    >>> cb = fit(jax.random.PRNGKey(0), X, cfg)
+    >>> cdist_asym(X[:3], encode(X, cb, cfg), cb, cfg).shape
+    (3, 4)
+    """
     Q = jnp.asarray(Q, jnp.float32)
     D = Q.shape[-1]
     q_segs = segment(Q, cfg)                     # (Nq, M, S)
@@ -345,7 +433,17 @@ def cdist_sym_refined(codes_a: jnp.ndarray, segs_a: jnp.ndarray,
     """§4.2 clustering distance: symmetric PQ, but where two series share a
     code in subspace m (LUT says 0), substitute the Keogh lower bound
     ``max(lb(a^m, env(code)), lb(b^m, env(code)))`` — guaranteed between 0
-    and the true subspace DTW."""
+    and the true subspace DTW.
+
+    >>> import jax, jax.numpy as jnp
+    >>> cfg = PQConfig(n_sub=2, codebook_size=2, use_prealign=False,
+    ...                kmeans_iters=1, dba_iters=1)
+    >>> X = jnp.arange(32, dtype=jnp.float32).reshape(4, 8) / 10.0
+    >>> cb = fit(jax.random.PRNGKey(0), X, cfg)
+    >>> codes, segs = encode(X, cb, cfg), segment(X, cfg)
+    >>> cdist_sym_refined(codes, segs, codes, segs, cb).shape
+    (4, 4)
+    """
     def per_sub(am, sa, bm, sb, lut_m, up_m, lo_m):
         base = lut_m[am[:, None], bm[None, :]]                  # (Na, Nb)
         lb_a = lb_keogh(sa[:, None, :], up_m[bm][None, :, :],   # a vs b's code
@@ -389,6 +487,12 @@ def memory_cost(cfg: PQConfig, D: int, n_series: int, *,
 
     — the partitioned share shrinks ~linearly with the mesh (up to the
     one-list placement slack of :mod:`repro.index.placement`).
+
+    >>> cost = memory_cost(PQConfig(), 128, 1000)
+    >>> cost["raw_bytes"], cost["code_bytes"]
+    (512000, 8000)
+    >>> cost["compression"]
+    64.0
     """
     S = cfg.subseq_len(D)
     M, K = cfg.n_sub, cfg.codebook_size

@@ -220,6 +220,23 @@ def search_sharded(index: StreamingIndex, Q: np.ndarray, *,
     Results match the single-device path under either strategy — same
     kernels, same distances; candidate sets are identical, only the merge
     order of exact distance ties can differ.
+
+    On a single-device host ``"auto"`` degrades to ``"queries"`` and the
+    call is a drop-in for :meth:`StreamingIndex.search`:
+
+    >>> import jax, numpy as np
+    >>> from repro.core.pq import PQConfig
+    >>> from repro.index.streaming import IndexConfig, StreamingIndex
+    >>> cfg = IndexConfig(
+    ...     PQConfig(n_sub=2, codebook_size=4, use_prealign=False,
+    ...              kmeans_iters=1, dba_iters=1),
+    ...     n_lists=2, hot_capacity=4, coarse_iters=2)
+    >>> X = np.sin(np.arange(8 * 16, dtype=np.float32)).reshape(8, 16)
+    >>> idx = StreamingIndex.bootstrap(jax.random.PRNGKey(0), X, cfg)
+    >>> _ = idx.insert(X)
+    >>> dist, ids = search_sharded(idx, X[:2], n_probe=2, topk=1)
+    >>> ids.shape, int(ids[0, 0])
+    ((2, 1), 0)
     """
     if partition not in _PARTITIONS:
         raise ValueError(

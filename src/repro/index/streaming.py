@@ -56,6 +56,15 @@ class IndexConfig:
     children of their ``n_probe_top`` nearest — an ``O(n_top +
     fan_out)`` coarse stage instead of ``O(n_lists)``.  With
     ``n_probe_top == n_top_lists`` results match the flat stage exactly.
+
+    >>> from repro.core.pq import PQConfig
+    >>> cfg = IndexConfig(PQConfig(n_sub=2, codebook_size=4), n_lists=4)
+    >>> cfg.coarse_window(48)
+    5
+    >>> IndexConfig(PQConfig(), n_lists=4, n_probe_top=2)
+    Traceback (most recent call last):
+        ...
+    ValueError: n_probe_top=2 requires a two-level coarse quantizer (set n_top_lists > 0)
     """
     pq: PQConfig
     n_lists: int = 8
@@ -282,6 +291,31 @@ class StreamingIndex:
 
     Construct with :meth:`bootstrap` (trains the shared quantizers on a
     sample) or :meth:`from_parts` (pre-trained quantizers / restore path).
+
+    The full write/read lifecycle in one example (tiny shapes so it runs
+    as a doctest):
+
+    >>> import jax, numpy as np
+    >>> from repro.core.pq import PQConfig
+    >>> cfg = IndexConfig(
+    ...     PQConfig(n_sub=2, codebook_size=4, use_prealign=False,
+    ...              kmeans_iters=1, dba_iters=1),
+    ...     n_lists=2, hot_capacity=4, coarse_iters=2)
+    >>> X = np.sin(np.arange(12 * 16, dtype=np.float32)).reshape(12, 16)
+    >>> idx = StreamingIndex.bootstrap(jax.random.PRNGKey(0), X, cfg)
+    >>> ids = idx.insert(X[:6])            # fills hot_capacity=4 -> 1 seal
+    >>> [int(i) for i in ids[:3]], len(idx.segments)
+    ([0, 1, 2], 1)
+    >>> idx.delete([1])                    # tombstone by external id
+    1
+    >>> dist, out = idx.search(X[:2], n_probe=2, topk=1)
+    >>> out.shape                          # (Nq, topk) external ids
+    (2, 1)
+    >>> bool(np.isfinite(np.asarray(dist)).all())
+    True
+    >>> idx.flush(); idx.compact()         # seal the tail, drop dead rows
+    >>> len(idx.segments), idx.n_live()
+    (1, 5)
     """
 
     def __init__(self, cfg: IndexConfig, coarse: jnp.ndarray,

@@ -50,23 +50,67 @@ __all__ = [
 
 
 def counter(name: str, persistent: bool = False, **labels: str) -> Counter:
-    """Get-or-create a counter in the process-wide registry."""
+    """Get-or-create a counter in the process-wide registry.
+
+    Same ``(name, labels)`` always returns the same object, so call sites
+    never cache handles:
+
+    >>> from repro import obs
+    >>> obs.counter("doc_requests_total", route="a").inc()
+    >>> obs.counter("doc_requests_total", route="a").inc(2)
+    >>> obs.counter("doc_requests_total", route="a").value
+    3
+    >>> obs.reset()
+    """
     return REGISTRY.counter(name, persistent=persistent, **labels)
 
 
 def gauge(name: str, persistent: bool = False, **labels: str) -> Gauge:
-    """Get-or-create a gauge in the process-wide registry."""
+    """Get-or-create a gauge in the process-wide registry.
+
+    >>> from repro import obs
+    >>> obs.gauge("doc_queue_depth").set(7)
+    >>> int(obs.gauge("doc_queue_depth").value)
+    7
+    >>> obs.reset()
+    """
     return REGISTRY.gauge(name, persistent=persistent, **labels)
 
 
 def histogram(name: str, buckets=None, persistent: bool = False,
               **labels: str) -> Histogram:
-    """Get-or-create a histogram in the process-wide registry."""
+    """Get-or-create a histogram in the process-wide registry.
+
+    Default bounds are the exponential latency ladder
+    (:data:`DEFAULT_LATENCY_BUCKETS`); percentiles are exact over the
+    recorded samples:
+
+    >>> from repro import obs
+    >>> h = obs.histogram("doc_wait_seconds")
+    >>> for v in (0.010, 0.020, 0.030):
+    ...     h.record(v)
+    >>> h.count
+    3
+    >>> round(h.percentile(50.0), 3)
+    0.02
+    >>> obs.reset()
+    """
     return REGISTRY.histogram(name, buckets=buckets, persistent=persistent,
                               **labels)
 
 
 def reset(include_persistent: bool = False) -> None:
     """Reset the process-wide registry (scratch metrics only by default —
-    dispatch routing counters and stage spans are persistent)."""
+    dispatch routing counters and stage spans are persistent).
+
+    >>> from repro import obs
+    >>> obs.counter("doc_scratch_total").inc()
+    >>> obs.counter("doc_survivor_total", persistent=True).inc()
+    >>> obs.reset()
+    >>> obs.counter("doc_scratch_total").value       # re-created fresh
+    0
+    >>> obs.counter("doc_survivor_total", persistent=True).value
+    1
+    >>> obs.reset(include_persistent=True)
+    """
     REGISTRY.reset(include_persistent=include_persistent)

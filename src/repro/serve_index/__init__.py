@@ -1,0 +1,28 @@
+"""Production serving core over the streaming index.
+
+Coalesced query microbatching (bucketed padded launches — a warmed server
+answers mixed traffic with zero new compilations) + a concurrent ingest
+writer publishing immutable copy-on-write snapshots, with admission
+control on the write path.  Operations guide: ``docs/serving.md``.
+
+    from repro.serve_index import IndexServer, ServeConfig
+
+    with IndexServer(index, ServeConfig(n_probe=4, topk=3)) as srv:
+        srv.insert(X).result()
+        dist, ids = srv.search(Q)
+"""
+
+from .config import SHED_POLICIES, ServeConfig
+from .coalescer import QueryCoalescer
+from .server import Backpressure, IndexServer, SearchResult
+from .view import IndexView
+
+__all__ = [
+    "IndexServer",
+    "ServeConfig",
+    "SHED_POLICIES",
+    "IndexView",
+    "SearchResult",
+    "Backpressure",
+    "QueryCoalescer",
+]

@@ -1,0 +1,87 @@
+"""Immutable point-in-time index views — the read side of the serving core.
+
+A :class:`IndexView` captures everything :func:`repro.index.streaming.
+search_impl` needs — the frozen quantizers, the tuple of sealed segments,
+a device-resident copy of the hot buffer — as *immutable* state:
+
+* sealed segments are already copy-on-write (``SealedSegment`` is a
+  frozen dataclass; a tombstone builds a *new* segment object, and the
+  index's segment list is only ever re-pointed, never mutated in place),
+  so a view's segment tuple stays consistent no matter how many
+  seals/compactions happen after capture;
+* the hot buffer is the one mutable structure, so capture copies it to
+  fresh device arrays (``jnp.array`` forces a copy) — the double-buffer:
+  the writer keeps mutating its host-side numpy staging buffers while
+  every published view holds its own frozen device copy.
+
+Searching a view is therefore safe from any thread while the writer
+mutates the underlying :class:`~repro.index.streaming.StreamingIndex`,
+and is *bit-identical* to searching a quiesced index in the captured
+state — same ``search_impl``, same kernels, same compiled shapes (the
+acceptance test in ``tests/test_serving.py`` asserts exactly this on both
+the jax and Pallas-interpret backends).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from ..index.streaming import StreamingIndex, search_impl
+
+__all__ = ["IndexView"]
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexView:
+    """One consistent, immutable snapshot of a streaming index.
+
+    ``version`` is the publish sequence number: the writer bumps it on
+    every snapshot swap, and every :class:`~repro.serve_index.server.
+    SearchResult` records the version it was computed against.
+    """
+
+    cfg: object                   # repro.index.IndexConfig (frozen)
+    dim: int
+    coarse: jnp.ndarray
+    cb: object                    # repro.core.pq.PQCodebook (NamedTuple)
+    segments: Tuple              # tuple of SealedSegment (frozen)
+    hot: Optional[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]]
+    two_level: Optional[object]
+    version: int = 0
+
+    @classmethod
+    def capture(cls, index: StreamingIndex, version: int = 0) -> "IndexView":
+        """Snapshot ``index`` (must not race with writes — the serving
+        writer thread is the only caller while a server runs)."""
+        hot = None
+        if index.hot.count:
+            # jnp.array copies: the view's device arrays must not alias
+            # the writer's mutable numpy staging buffers
+            hot = (jnp.array(index.hot.data), jnp.array(index.hot.ids),
+                   jnp.array(index.hot.live))
+        return cls(cfg=index.cfg, dim=index.dim, coarse=index.coarse,
+                   cb=index.cb, segments=tuple(index.segments), hot=hot,
+                   two_level=index.two_level, version=version)
+
+    def n_live(self) -> int:
+        """Live rows visible to this view (host-side sum)."""
+        hot_live = int(jnp.sum(self.hot[2])) if self.hot is not None else 0
+        return hot_live + sum(sg.n_live() for sg in self.segments)
+
+    def search(self, Q: jnp.ndarray, *, n_probe: int, topk: int = 1,
+               q_valid: Optional[jnp.ndarray] = None
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Top-``topk`` neighbors within this snapshot -> ``(dist, ids)``.
+
+        Identical math to :meth:`repro.index.streaming.StreamingIndex.
+        search` (it is literally the same ``search_impl``); ``q_valid``
+        marks padding rows of a coalesced batch, exactly as in the
+        sharded planner.
+        """
+        return search_impl(self.coarse, self.cb, self.segments, self.hot,
+                           Q, icfg=self.cfg, n_probe=n_probe, topk=topk,
+                           dim=self.dim, two_level=self.two_level,
+                           q_valid=q_valid)

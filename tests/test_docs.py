@@ -1,0 +1,88 @@
+"""Docs staleness gate: scripts/check_docs.py passes on the real tree and
+fails on a doctored tree whose docs reference removed identifiers."""
+
+import os
+import shutil
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CHECK = os.path.join(REPO, "scripts", "check_docs.py")
+
+
+def _run(root):
+    return subprocess.run(
+        [sys.executable, CHECK, "--root", str(root)],
+        capture_output=True, text=True)
+
+
+def test_repo_docs_are_clean():
+    proc = _run(REPO)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def _doctored_tree(tmp_path):
+    """Minimal tree: the real dispatch/snapshot sources + one doc."""
+    for rel in ("src/repro/core/dispatch.py", "src/repro/index/snapshot.py"):
+        dst = tmp_path / rel
+        dst.parent.mkdir(parents=True, exist_ok=True)
+        shutil.copy(os.path.join(REPO, rel), dst)
+    (tmp_path / "docs").mkdir()
+    return tmp_path
+
+
+def test_gate_fails_on_removed_dispatch_op(tmp_path):
+    root = _doctored_tree(tmp_path)
+    (root / "docs" / "api.md").write_text(
+        "Call `dispatch.totally_fake_op` for speed.\n")
+    proc = _run(root)
+    assert proc.returncode == 1
+    assert "totally_fake_op" in proc.stdout
+
+
+def test_gate_fails_on_unknown_stage(tmp_path):
+    root = _doctored_tree(tmp_path)
+    (root / "docs" / "ops.md").write_text(
+        "Watch the `serving.retired_stage` span.\n")
+    proc = _run(root)
+    assert proc.returncode == 1
+    assert "serving.retired_stage" in proc.stdout
+
+
+def test_gate_fails_on_unknown_metric(tmp_path):
+    root = _doctored_tree(tmp_path)
+    (root / "docs" / "metrics.md").write_text(
+        "Alert on `repro_imaginary_counter_total`.\n")
+    proc = _run(root)
+    assert proc.returncode == 1
+    assert "imaginary_counter_total" in proc.stdout
+
+
+def test_gate_fails_on_bad_snapshot_format(tmp_path):
+    root = _doctored_tree(tmp_path)
+    (root / "docs" / "persist.md").write_text(
+        "Data persists in snapshot format 99.\n")
+    proc = _run(root)
+    assert proc.returncode == 1
+    assert "format 99" in proc.stdout
+
+
+def test_gate_fails_on_removed_cli_flag(tmp_path):
+    root = _doctored_tree(tmp_path)
+    (root / "scripts").mkdir(exist_ok=True)
+    (root / "scripts" / "tool.py").write_text(
+        'import argparse\nap = argparse.ArgumentParser()\n'
+        'ap.add_argument("--real-flag")\n')
+    (root / "docs" / "cli.md").write_text(
+        "Run `python scripts/tool.py --vanished-flag`.\n")
+    proc = _run(root)
+    assert proc.returncode == 1
+    assert "--vanished-flag" in proc.stdout
+
+
+def test_gate_accepts_valid_references(tmp_path):
+    root = _doctored_tree(tmp_path)
+    (root / "docs" / "good.md").write_text(
+        "Use `dispatch.elastic_cdist`; snapshots use format 3.\n")
+    proc = _run(root)
+    assert proc.returncode == 0, proc.stdout + proc.stderr

@@ -1,0 +1,28 @@
+"""Run the public-API docstring examples as tests.
+
+`repro` is a namespace package (no `src/repro/__init__.py`), which breaks
+`pytest --doctest-modules src/...` path collection — so the docs CI job and
+tier-1 both come through here: import each documented module and run its
+doctests via :mod:`doctest` proper.
+"""
+
+import doctest
+import importlib
+
+import pytest
+
+MODULES = (
+    "repro.core.dispatch",
+    "repro.core.pq",
+    "repro.index.planner",
+    "repro.index.streaming",
+    "repro.obs",
+)
+
+
+@pytest.mark.parametrize("name", MODULES)
+def test_module_doctests(name):
+    mod = importlib.import_module(name)
+    result = doctest.testmod(mod, verbose=False, report=True)
+    assert result.attempted > 0, f"{name} has no doctest examples"
+    assert result.failed == 0, f"{name}: {result.failed} doctest(s) failed"
