@@ -18,7 +18,9 @@ Checked reference classes:
 * ``snapshot format N`` mentions -> ``N`` must be in
   ``_SUPPORTED_FORMATS`` of ``src/repro/index/snapshot.py``;
 * ``--flags`` on ``python <script>.py`` / ``python -m <module>`` command
-  lines -> the flag must appear in the named file.
+  lines -> the flag must appear in the named file;
+* ``RSxxx`` static-analysis rule IDs -> the ID must exist (quoted) in
+  the ``src/repro/analysis`` rule engine.
 
 ``--root`` exists so the negative test can point the gate at a doctored
 tree and assert it fails; CI runs it against the repo root.
@@ -42,6 +44,7 @@ PROM_METRIC = re.compile(r"\brepro_([a-z_]+)\b")
 FORMAT_REF = re.compile(r"\bformats?\s+(\d+)(?:\s*[-–]\s*(\d+))?")
 CMD_LINE = re.compile(r"\bpython(?:3)?\s+(?:-m\s+([\w.]+)|([\w./-]+\.py))")
 FLAG = re.compile(r"(--[\w-]+)")
+RS_RULE = re.compile(r"\bRS\d{3}\b")
 
 
 def _read(path: str) -> str:
@@ -117,6 +120,7 @@ def check_file(
     metric_src: str,
     formats: List[int],
     root: str,
+    analysis_src: str = "",
 ) -> List[str]:
     errors = []
     rel = os.path.relpath(path, root)
@@ -136,6 +140,13 @@ def check_file(
         quoted = f'"{stage}"' in stage_src or f"'{stage}'" in stage_src
         if not quoted and not _resolves_as_module(root, stage):
             errors.append(f"{rel}: stage {stage!r} not found in source")
+
+    for rule in sorted(set(RS_RULE.findall(text))):
+        if f'"{rule}"' not in analysis_src and f"'{rule}'" not in analysis_src:
+            errors.append(
+                f"{rel}: static-analysis rule {rule} not found in "
+                f"src/repro/analysis",
+            )
 
     for metric in sorted(set(PROM_METRIC.findall(text))):
         if f'"{metric}"' not in metric_src and f"'{metric}'" not in metric_src:
@@ -194,11 +205,18 @@ def main() -> int:
     stage_src = _source_text(root, SOURCE_DIRS)
     metric_src = _source_text(root, ("src",))
     formats = _supported_formats(root)
+    analysis_dir = os.path.join("src", "repro", "analysis")
+    if os.path.isdir(os.path.join(root, analysis_dir)):
+        analysis_src = _source_text(root, (analysis_dir,))
+    else:
+        analysis_src = ""
 
     counts: Dict[str, int] = {}
     errors: List[str] = []
     for path in docs:
-        errs = check_file(path, dispatch_src, stage_src, metric_src, formats, root)
+        errs = check_file(
+            path, dispatch_src, stage_src, metric_src, formats, root, analysis_src
+        )
         counts[os.path.relpath(path, root)] = len(errs)
         errors.extend(errs)
 

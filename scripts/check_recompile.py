@@ -1,0 +1,123 @@
+#!/usr/bin/env python3
+"""Compilation-regression gate: replay warm-bucket mixed serving
+traffic under ``jax_log_compiles`` and fail on any warm-path compile.
+
+Usage: python scripts/check_recompile.py [--requests N]
+
+The PR 8 contract this freezes: once the coalescer's padded query
+buckets and the writer's fixed-shape ingest path are warm, arbitrary
+further mixed traffic reuses the cached executables — zero new XLA
+compilations.  A stray dynamic shape (an unpadded batch, a per-request
+slice with novel bounds, a jit cache key that includes a fresh python
+object) shows up here as a logged ``Compiling ...`` event.
+
+Mechanics: build the small serving stack from
+``benchmarks.serving_qps._build``, warm every (bucket, request-size)
+pair and the ingest chunk shape with serial traffic, then turn on
+``jax_log_compiles`` — its one-record-per-XLA-compile log line on the
+``jax._src.interpreters.pxla`` logger is the counter — and replay the
+same request-size mix.  The replay is deliberately *serial* and keeps
+inserts below ``hot_capacity``: concurrent coalescing makes batch
+composition (and therefore per-request result-slice bounds)
+nondeterministic, and a hot-segment seal/flush legitimately compiles
+the new segment's fine stage — both would make the gate flaky rather
+than prove a regression.
+
+Exit 0: zero compile events during replay; 1 otherwise.
+"""
+
+from __future__ import annotations
+
+import argparse
+import logging
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO_ROOT / "src"))
+sys.path.insert(0, str(REPO_ROOT))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from benchmarks.serving_qps import _build  # noqa: E402
+from repro.serve_index import IndexServer, ServeConfig  # noqa: E402
+
+# one request per size: every bucket the replay can touch, plus an
+# off-bucket size (3 -> padded into bucket 4) to exercise padding
+REQUEST_SIZES = (1, 2, 3, 4)
+INGEST_CHUNK = 8
+
+
+class _CompileCounter(logging.Handler):
+    """Counts jax_log_compiles records (one per XLA compilation)."""
+
+    def __init__(self) -> None:
+        super().__init__()
+        self.events: list = []
+
+    def emit(self, record: logging.LogRecord) -> None:
+        msg = record.getMessage()
+        if msg.startswith("Compiling "):
+            self.events.append(msg)
+
+
+def _traffic(srv, Q, rng, rounds: int) -> None:
+    """One serial mixed round: every request size + one ingest chunk."""
+    dim = Q.shape[1]
+    for _ in range(rounds):
+        for n in REQUEST_SIZES:
+            rows = rng.integers(0, len(Q), size=n)
+            srv.submit_search(Q[rows]).result()
+        chunk = rng.standard_normal((INGEST_CHUNK, dim)).astype(np.float32)
+        srv.insert(chunk).result()
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--requests",
+        type=int,
+        default=3,
+        help="replay rounds over the warmed request-size mix",
+    )
+    args = ap.parse_args()
+
+    # hot_capacity far above total replay ingest: no seal/flush (and the
+    # legitimate novel-shape compiles one brings) during the gated phase
+    index = _build(n_rows=96, dim=32, n_lists=4, hot_capacity=4096)
+    cfg = ServeConfig(n_probe=2, topk=3, q_buckets=(1, 2, 4))
+    rng = np.random.default_rng(0)
+    Q = rng.standard_normal((32, 32)).astype(np.float32)
+
+    counter = _CompileCounter()
+    logger = logging.getLogger("jax._src.interpreters.pxla")
+
+    with IndexServer(index, cfg) as srv:
+        # warm every (bucket, request size) pair and the ingest shape
+        _traffic(srv, Q, rng, rounds=2)
+        print("  warmed buckets (1, 2, 4) and the ingest chunk shape")
+
+        jax.config.update("jax_log_compiles", True)
+        logger.addHandler(counter)
+        try:
+            _traffic(srv, Q, rng, rounds=args.requests)
+        finally:
+            logger.removeHandler(counter)
+            jax.config.update("jax_log_compiles", False)
+
+    n_req = args.requests * (len(REQUEST_SIZES) + 1)
+    if counter.events:
+        print(
+            f"FAIL: {len(counter.events)} compilation(s) during the "
+            f"warm-path replay ({n_req} requests):"
+        )
+        for msg in counter.events:
+            print(f"  {msg}")
+        return 1
+    print(f"OK: zero compilations across {n_req} warm-path requests")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

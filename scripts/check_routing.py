@@ -6,9 +6,9 @@ Usage: python scripts/check_routing.py ROUTING_DUMP.json [BACKEND]
 The dump is written by tests/conftest.py at pytest session end (set
 REPRO_ROUTING_DUMP): a ``repro.obs`` metrics snapshot whose
 ``dispatch_total`` counters mirror the process-lifetime
-``repro.core.dispatch.totals`` ledger.  (The pre-obs flat
-``{"op:backend": n}`` dict is still accepted, so older dumps keep
-working.)  Every elastic op listed below must have dispatched through
+``repro.core.dispatch.totals`` ledger.  That snapshot is the *only*
+accepted format — a dump without counters/histograms keys is rejected
+rather than guessed at.  Every elastic op must have dispatched through
 BACKEND (default: the REPRO_ELASTIC_BACKEND the tests ran under) at
 least once — a kernel import error or an accidental fallback to the
 pure-JAX route would otherwise let the suite pass without executing a
@@ -106,8 +106,14 @@ def main() -> int:
     )
     with open(path) as f:
         dump = json.load(f)
-    is_snapshot = "counters" in dump or "histograms" in dump
-    ledger = ledger_from_snapshot(dump) if is_snapshot else dump
+    if "counters" not in dump and "histograms" not in dump:
+        print(
+            f"FAIL: {path} is not a repro.obs metrics snapshot (no "
+            "counters/histograms keys); the pre-obs flat routing dict "
+            "is no longer accepted"
+        )
+        return 2
+    ledger = ledger_from_snapshot(dump)
     print(f"routing ledger ({path}), asserting backend {backend!r}:")
     for key in sorted(ledger):
         print(f"  {key}: {ledger[key]}")

@@ -1,0 +1,123 @@
+#!/usr/bin/env python3
+"""Dynamic sanitizer leg over the kernel/dispatch surface: every elastic
+op on both backends under JAX's tracer-leak checker and a
+device-to-host transfer guard.
+
+Usage: python scripts/check_sanitizers.py
+
+Two passes per (op, backend):
+
+* ``jax.checking_leaks()`` around a fresh ``jax.jit`` trace of the op —
+  a helper stashing a tracer in module/closure state (the bug class
+  RS104 guards statically) fails here with a named leak;
+* ``jax.transfer_guard_device_to_host("disallow")`` around an eager
+  replay on device-resident inputs — any hidden ``.item()`` /
+  ``np.asarray`` / implicit host pull inside an op body (the RS101 bug
+  class) raises.  Only the device-to-host direction is guarded:
+  constant uploads at trace time are legitimate, silent result pulls
+  are not.
+
+Backends: ``jax`` (jnp reference route) and ``pallas_interpret`` (the
+kernel bodies, interpretable on CPU).  Exit 0 clean, 1 on any sanitizer
+trip.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO_ROOT / "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import dispatch  # noqa: E402
+
+BACKENDS = ("jax", "pallas_interpret")
+
+
+def _ops():
+    """(name, thunk) per dispatch op, on tiny device-resident inputs."""
+    A = jnp.zeros((2, 8))
+    B = jnp.ones((2, 8))
+    B3 = jnp.ones((3, 8))
+    codes = jnp.array([[0, 1], [1, 0]], jnp.int32)
+    lut = jnp.stack([1.0 - jnp.eye(2)] * 2)
+    qlut = jnp.array([[0.0, 2.0], [0.0, 2.0]])
+    env = jnp.zeros((2, 8))
+    thresh = jnp.array([100.0, 0.0])
+    cents = jnp.stack([jnp.zeros((2, 5)), jnp.ones((2, 5))], axis=1)
+    coarse = jnp.arange(4, dtype=jnp.float32)[:, None] * jnp.ones(8)
+    top = jnp.array([[0.5] * 8, [2.5] * 8])
+    child_idx = jnp.array([[0, 1], [2, 3]], jnp.int32)
+    child_valid = jnp.ones((2, 2), bool)
+
+    yield (
+        "elastic_pairwise",
+        lambda: dispatch.elastic_pairwise(A, B, 2),
+    )
+    yield (
+        "elastic_cdist",
+        lambda: dispatch.elastic_cdist(A, B3, 2),
+    )
+    yield (
+        "adc_cdist",
+        lambda: dispatch.adc_cdist(codes, codes, lut),
+    )
+    yield (
+        "adc_lookup",
+        lambda: dispatch.adc_lookup(codes, qlut),
+    )
+    yield (
+        "prealign_encode",
+        lambda: dispatch.prealign_encode(A, cents, level=1, tail=1, window=2),
+    )
+    yield (
+        "lb_refine",
+        lambda: dispatch.lb_refine(A, B, env, env, thresh, 2),
+    )
+    yield (
+        "two_level_coarse",
+        lambda: dispatch.two_level_coarse(
+            A, top, coarse, child_idx, child_valid, n_probe_top=1
+        ),
+    )
+
+
+def main() -> int:
+    failures = []
+    for backend in BACKENDS:
+        with dispatch.use_backend(backend):
+            for name, thunk in _ops():
+                try:
+                    with jax.checking_leaks():
+                        out = jax.jit(thunk)()
+                    jax.block_until_ready(out)
+                except Exception:
+                    failures.append((backend, name, "checking_leaks"))
+                    traceback.print_exc()
+                    continue
+                try:
+                    with jax.transfer_guard_device_to_host("disallow"):
+                        out = thunk()
+                    jax.block_until_ready(out)
+                except Exception:
+                    failures.append((backend, name, "transfer_guard"))
+                    traceback.print_exc()
+                    continue
+                print(f"  ok {backend}:{name} (leak check + d2h guard)")
+    if failures:
+        print(f"FAIL: {len(failures)} sanitizer trip(s):")
+        for backend, name, leg in failures:
+            print(f"  {backend}:{name} failed under {leg}")
+        return 1
+    n_ops = sum(1 for _ in _ops()) * len(BACKENDS)
+    print(f"OK: {n_ops} (op, backend) legs clean under both sanitizers")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

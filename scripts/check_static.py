@@ -1,0 +1,125 @@
+#!/usr/bin/env python3
+"""Static-analysis gate: run the repro.analysis rule engine and fail on
+any unsuppressed, unbaselined finding.
+
+Usage:
+  python scripts/check_static.py [--root PATH] [--baseline PATH]
+                                 [--write-baseline] [--list-rules]
+
+Exit codes: 0 clean; 1 findings (new findings, stale baseline entries,
+or baseline entries without a justification); 2 usage/internal error.
+
+Findings are silenced either inline::
+
+    x = float(d)  # repro: ignore[RS101] CLI timing, off the hot path
+
+or by freezing them in the baseline file (``STATIC_BASELINE.json`` at
+the repo root).  The baseline only ever shrinks: stale entries (debt
+paid) and entries whose ``justification`` field is empty are build
+errors, which is what stops the baseline growing without an explicit
+written reason.  ``--write-baseline`` regenerates the file from the
+current findings with empty justifications for a human to fill in.
+
+``--root`` exists so the fixture tests can point the gate at doctored
+trees; CI runs it against the repo root.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO_ROOT / "src"))
+
+from repro.analysis import RULES, analyze  # noqa: E402
+from repro.analysis.findings import write_baseline  # noqa: E402
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default=str(REPO_ROOT))
+    ap.add_argument(
+        "--baseline",
+        default=None,
+        help="baseline file (default: <root>/STATIC_BASELINE.json)",
+    )
+    ap.add_argument(
+        "--write-baseline",
+        action="store_true",
+        help="freeze current findings into the baseline file and exit",
+    )
+    ap.add_argument(
+        "--list-rules",
+        action="store_true",
+        help="print the rule catalog and exit",
+    )
+    args = ap.parse_args()
+
+    if args.list_rules:
+        for rule in sorted(RULES):
+            print(f"  {rule}  {RULES[rule]}")
+        return 0
+
+    root = Path(args.root).resolve()
+    if not (root / "src" / "repro").is_dir():
+        print(f"FAIL: no src/repro under {root}")
+        return 2
+    if args.baseline:
+        baseline = Path(args.baseline)
+    else:
+        baseline = root / "STATIC_BASELINE.json"
+
+    if args.write_baseline:
+        report = analyze(root, baseline_path=None)
+        write_baseline(baseline, report.findings, root)
+        print(
+            f"wrote {len(report.findings)} finding(s) to {baseline} "
+            f"(fill in every justification field)"
+        )
+        return 0
+
+    report = analyze(root, baseline_path=baseline)
+    n_mod = len(report.graph.modules)
+    n_fn = len(report.graph.functions)
+    n_roots = len(report.graph.trace_roots())
+    print(
+        f"  analyzed {n_mod} modules / {n_fn} functions "
+        f"({n_roots} trace roots), baselined: {len(report.baselined)}"
+    )
+
+    failed = False
+    if report.findings:
+        failed = True
+        print(f"FAIL: {len(report.findings)} finding(s):")
+        for f in report.findings:
+            print(f"  {f.render(root)}")
+    if report.stale_baseline:
+        failed = True
+        print(
+            f"FAIL: {len(report.stale_baseline)} stale baseline "
+            f"entr(ies) — the finding is gone, delete the entry:"
+        )
+        for fp in report.stale_baseline:
+            print(f"  {fp}")
+    if report.unjustified_baseline:
+        failed = True
+        print(
+            f"FAIL: {len(report.unjustified_baseline)} baseline "
+            f"entr(ies) with an empty justification:"
+        )
+        for fp in report.unjustified_baseline:
+            print(f"  {fp}")
+    if failed:
+        print(
+            "  (suppress inline with `# repro: ignore[RSxxx] <reason>` "
+            "— see docs/static_analysis.md)"
+        )
+        return 1
+    print("OK: static analysis clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,24 @@
+"""Static analysis for the repro engine.
+
+An AST-based rule engine over ``src/repro``: a best-effort call graph
+(:mod:`repro.analysis.callgraph`) feeds three rule families —
+
+* **RS1xx** trace safety (:mod:`repro.analysis.rules_trace`): no host
+  syncs or data-dependent Python control flow on jit-reachable paths;
+* **RS2xx** dispatch invariants (:mod:`repro.analysis.rules_dispatch`):
+  every kernel triple registered, referenced, routing-gated, and never
+  vmapped over;
+* **RS3xx** concurrency discipline
+  (:mod:`repro.analysis.rules_concurrency`): writer-only state, immutable
+  published views, ``with``-scoped locks in ``serve_index``.
+
+Driven by ``scripts/check_static.py``; findings are suppressed inline
+with ``# repro: ignore[RSxxx] <reason>`` or frozen in the committed
+``STATIC_BASELINE.json``.  See ``docs/static_analysis.md`` for the rule
+catalog.
+"""
+
+from .engine import RULES, Report, analyze
+from .findings import Finding
+
+__all__ = ["RULES", "Report", "analyze", "Finding"]

@@ -1,0 +1,189 @@
+"""RS2xx — dispatch invariants.
+
+The static complement of the dynamic routing gate
+(``scripts/check_routing.py``): the dynamic gate proves the suite *ran*
+on the kernel route, these rules prove the wiring cannot silently decay
+between runs.
+
+* **RS201** kernel triple incomplete: every package under
+  ``src/repro/kernels/<name>/`` must ship ``kernel.py`` (Pallas body),
+  ``ops.py`` (public entry points), and ``ref.py`` (the jnp reference
+  the dispatch fallback and the tests compare against).
+* **RS202** kernel package not registered in ``core/dispatch.py`` — an
+  unrouted kernel bypasses backend selection and the routing ledger.
+* **RS203** dispatch op (a ``_count("<op>", ...)`` site in
+  ``core/dispatch.py``) missing from ``EXPECTED_OPS`` in
+  ``scripts/check_routing.py`` — the dynamic gate would never notice
+  the op falling off the kernel route.
+* **RS204** ``jax.vmap`` applied to a function that can reach a
+  ``pl.pallas_call`` (PR 1/PR 6 invariant: Pallas kernels take batch
+  dimensions as grid axes, never via vmap batching rules).
+* **RS205** ``scripts/check_routing.py`` must consume exactly one gate
+  format: every ``ledger = ...`` binding goes through
+  ``ledger_from_snapshot`` (no legacy flat-dict fallback branches).
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import List, Optional, Set
+
+from .callgraph import CallGraph
+from .findings import Finding
+
+__all__ = ["run"]
+
+_TRIPLE = ("kernel.py", "ops.py", "ref.py")
+
+
+def _first_line(path: Path) -> str:
+    try:
+        return path.read_text(encoding="utf-8").splitlines()[0]
+    except (OSError, IndexError):
+        return ""
+
+
+def run(graph: CallGraph, root: Path) -> List[Finding]:
+    out: List[Finding] = []
+    kernels_dir = root / "src" / "repro" / "kernels"
+    dispatch_path = root / "src" / "repro" / "core" / "dispatch.py"
+    routing_path = root / "scripts" / "check_routing.py"
+    dispatch_src = (dispatch_path.read_text(encoding="utf-8")
+                    if dispatch_path.exists() else "")
+
+    if kernels_dir.is_dir():
+        for pkg in sorted(p for p in kernels_dir.iterdir() if p.is_dir()):
+            out.extend(_rs201(pkg))
+            out.extend(_rs202(pkg, dispatch_src))
+
+    if dispatch_path.exists() and routing_path.exists():
+        out.extend(_rs203(dispatch_path, routing_path))
+    if routing_path.exists():
+        out.extend(_rs205(routing_path))
+
+    out.extend(_rs204(graph))
+    return out
+
+
+def _anchor(pkg: Path) -> Path:
+    """The file a kernel-package finding (and its suppression) lives in."""
+    for name in ("ops.py", "kernel.py", "__init__.py"):
+        if (pkg / name).exists():
+            return pkg / name
+    return pkg / "ops.py"
+
+
+def _rs201(pkg: Path) -> List[Finding]:
+    if pkg.name == "__pycache__":
+        return []
+    missing = [n for n in _TRIPLE if not (pkg / n).exists()]
+    if not missing or len(missing) == len(_TRIPLE):
+        return []
+    anchor = _anchor(pkg)
+    return [Finding(
+        rule="RS201", path=anchor, lineno=1, scope=f"kernels.{pkg.name}",
+        message=f"kernel package {pkg.name!r} is missing "
+                f"{', '.join(missing)}; every kernel ships the "
+                f"kernel.py/ops.py/ref.py triple",
+        source_line=_first_line(anchor))]
+
+
+def _rs202(pkg: Path, dispatch_src: str) -> List[Finding]:
+    if pkg.name == "__pycache__" or not (pkg / "ops.py").exists():
+        return []
+    if f"kernels.{pkg.name}." in dispatch_src:
+        return []
+    anchor = _anchor(pkg)
+    return [Finding(
+        rule="RS202", path=anchor, lineno=1, scope=f"kernels.{pkg.name}",
+        message=f"kernel package {pkg.name!r} is not registered in "
+                f"core/dispatch.py; unrouted kernels bypass backend "
+                f"selection and the routing ledger",
+        source_line=_first_line(anchor))]
+
+
+def _string_set(tree: ast.Module, name: str) -> Optional[Set[str]]:
+    for stmt in tree.body:
+        targets = []
+        if isinstance(stmt, ast.Assign):
+            targets = stmt.targets
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            targets = [stmt.target]
+        for t in targets:
+            if isinstance(t, ast.Name) and t.id == name:
+                return {n.value for n in ast.walk(stmt)
+                        if isinstance(n, ast.Constant)
+                        and isinstance(n.value, str)}
+    return None
+
+
+def _rs203(dispatch_path: Path, routing_path: Path) -> List[Finding]:
+    dispatch_tree = ast.parse(dispatch_path.read_text(encoding="utf-8"))
+    routing_tree = ast.parse(routing_path.read_text(encoding="utf-8"))
+    expected = _string_set(routing_tree, "EXPECTED_OPS")
+    if expected is None:
+        return [Finding(
+            rule="RS203", path=routing_path, lineno=1, scope="<module>",
+            message="scripts/check_routing.py has no EXPECTED_OPS set; "
+                    "the routing gate cannot assert op coverage",
+            source_line=_first_line(routing_path))]
+    src_lines = dispatch_path.read_text(encoding="utf-8").splitlines()
+    out = []
+    for n in ast.walk(dispatch_tree):
+        if (isinstance(n, ast.Call) and isinstance(n.func, ast.Name)
+                and n.func.id == "_count" and n.args
+                and isinstance(n.args[0], ast.Constant)
+                and isinstance(n.args[0].value, str)):
+            op = n.args[0].value
+            if op not in expected:
+                out.append(Finding(
+                    rule="RS203", path=dispatch_path, lineno=n.lineno,
+                    scope="core.dispatch",
+                    message=f"dispatch op {op!r} is not gated by "
+                            f"EXPECTED_OPS in scripts/check_routing.py",
+                    source_line=src_lines[n.lineno - 1]
+                    if n.lineno <= len(src_lines) else ""))
+    return out
+
+
+def _rs204(graph: CallGraph) -> List[Finding]:
+    reaches = graph.reaches_pallas()
+    out = []
+    for site in graph.vmap_sites:
+        if site.target is not None and site.target in reaches:
+            lines = site.module.source.splitlines()
+            out.append(Finding(
+                rule="RS204", path=site.module.path, lineno=site.lineno,
+                scope=site.caller,
+                message=f"jax.vmap over {site.target} which can reach a "
+                        f"pallas_call; Pallas kernels take batch dims as "
+                        f"grid axes, never vmap batching rules",
+                source_line=lines[site.lineno - 1]
+                if site.lineno <= len(lines) else ""))
+    return out
+
+
+def _rs205(routing_path: Path) -> List[Finding]:
+    tree = ast.parse(routing_path.read_text(encoding="utf-8"))
+    lines = routing_path.read_text(encoding="utf-8").splitlines()
+    out = []
+    for n in ast.walk(tree):
+        if not isinstance(n, ast.Assign):
+            continue
+        if not any(isinstance(t, ast.Name) and t.id == "ledger"
+                   for t in n.targets):
+            continue
+        ok = (isinstance(n.value, ast.Call)
+              and isinstance(n.value.func, ast.Name)
+              and n.value.func.id == "ledger_from_snapshot")
+        if not ok:
+            out.append(Finding(
+                rule="RS205", path=routing_path, lineno=n.lineno,
+                scope="check_routing",
+                message="the routing gate must consume exactly one dump "
+                        "format: bind `ledger` only via "
+                        "ledger_from_snapshot(...) (no legacy fallback)",
+                source_line=lines[n.lineno - 1]
+                if n.lineno <= len(lines) else ""))
+    return out

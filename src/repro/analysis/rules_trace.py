@@ -1,0 +1,277 @@
+"""RS1xx — trace safety.
+
+The PR 7 invariant these rules freeze: the obs-off hot path performs
+*zero* host syncs, and anything that must block does so through
+``repro.obs.fence`` (tracer-safe, obs-gated) instead of raw JAX device
+syncs.
+
+* **RS101** host sync primitive: ``jax.device_get`` /
+  ``jax.block_until_ready`` / ``.block_until_ready()`` / ``.item()``
+  anywhere in ``src/repro`` (these *always* synchronize), plus
+  ``np.asarray``/``np.array``/``int()``/``float()``/``bool()`` over
+  array-valued expressions inside trace-reachable functions (where they
+  either fail at trace time or silently pull a tracer to host).
+* **RS102** data-dependent Python branch (``if``/``while`` testing a
+  ``jnp``/``lax`` array expression) in a trace-reachable function —
+  under jit this raises ``TracerBoolConversionError``; route through
+  ``lax.cond``/``jnp.where`` instead.
+* **RS103** jit ``static_argnames`` naming a parameter that does not
+  exist, or whose default is a mutable literal (unhashable at cache-key
+  time).
+* **RS104** mutation of module-level state from a trace-reachable
+  function — the mutation replays per trace, not per call.
+
+``repro.obs`` modules are exempt from RS101: they implement the fence.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from .callgraph import CallGraph, FunctionInfo, dotted_parts
+from .findings import Finding
+
+__all__ = ["run"]
+
+_SYNC_ATTRS = frozenset({"block_until_ready", "item"})
+_SYNC_FUNCS = frozenset({
+    "jax.device_get", "jax.block_until_ready",
+})
+_HOST_CONVERTERS = frozenset({
+    "numpy.asarray", "numpy.array", "np.asarray", "np.array",
+})
+_CASTS = frozenset({"int", "float", "bool"})
+
+# jnp helpers that return python scalars / static metadata — safe in an
+# ``if`` test even under trace
+_STATIC_JNP = frozenset({
+    "jax.numpy.issubdtype", "jax.numpy.result_type", "jax.numpy.dtype",
+    "jax.numpy.iinfo", "jax.numpy.finfo", "jax.numpy.shape",
+    "jax.numpy.ndim", "jax.numpy.size",
+})
+
+_ARRAY_METHODS = frozenset({
+    "sum", "min", "max", "mean", "any", "all", "argmin", "argmax",
+    "ravel", "astype", "reshape",
+})
+
+
+def _line(info: FunctionInfo, lineno: int) -> str:
+    lines = info.module.source.splitlines()
+    return lines[lineno - 1] if 0 < lineno <= len(lines) else ""
+
+
+def _resolve(info: FunctionInfo, graph: CallGraph,
+             node: ast.AST) -> Optional[str]:
+    parts = dotted_parts(node)
+    if parts is None:
+        return None
+    imports = info.module.imports
+    if parts[0] in imports:
+        return ".".join([imports[parts[0]]] + parts[1:])
+    return ".".join(parts)
+
+
+def _scope_nodes(info: FunctionInfo):
+    """The scope's own statements, excluding nested function bodies."""
+    todo = list(ast.iter_child_nodes(info.node))
+    while todo:
+        n = todo.pop()
+        yield n
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                          ast.Lambda)):
+            continue
+        todo.extend(ast.iter_child_nodes(n))
+
+
+def _is_array_expr(expr: ast.AST, info: FunctionInfo,
+                   graph: CallGraph) -> bool:
+    """Heuristic: the expression's value is (or contains) a jnp array —
+    a ``jnp.``/``lax.`` call or an array-method call like ``.min()``."""
+    for n in ast.walk(expr):
+        if not isinstance(n, ast.Call):
+            continue
+        qual = _resolve(info, graph, n.func)
+        if qual is not None:
+            if qual in _STATIC_JNP:
+                continue
+            if qual.startswith(("jax.numpy.", "jax.lax.")):
+                return True
+        if (isinstance(n.func, ast.Attribute)
+                and n.func.attr in _ARRAY_METHODS
+                and not _is_shape_access(n.func.value)):
+            return True
+    return False
+
+
+def _is_shape_access(node: ast.AST) -> bool:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Attribute) and n.attr in ("shape", "ndim",
+                                                       "dtype"):
+            return True
+    return False
+
+
+def run(graph: CallGraph) -> List[Finding]:
+    out: List[Finding] = []
+    reachable = graph.trace_reachable()
+    mutable_globals = _module_mutable_globals(graph)
+    for qual, info in graph.functions.items():
+        if info.module.qualname.startswith("repro.obs"):
+            continue
+        in_trace = qual in reachable
+        out.extend(_rs101(info, graph, in_trace))
+        if in_trace:
+            out.extend(_rs102(info, graph))
+            out.extend(_rs104(info, graph, mutable_globals))
+        out.extend(_rs103(info, graph))
+    return out
+
+
+# -- RS101 -------------------------------------------------------------------
+
+def _rs101(info: FunctionInfo, graph: CallGraph,
+           in_trace: bool) -> List[Finding]:
+    out = []
+    for n in _scope_nodes(info):
+        if not isinstance(n, ast.Call):
+            continue
+        qual = _resolve(info, graph, n.func)
+        hit = None
+        if qual in _SYNC_FUNCS:
+            hit = f"{qual} is an unconditional host sync"
+        elif (isinstance(n.func, ast.Attribute)
+              and n.func.attr in _SYNC_ATTRS
+              and not n.args):
+            hit = f".{n.func.attr}() is an unconditional host sync"
+        elif in_trace and qual in _HOST_CONVERTERS:
+            hit = f"{qual} pulls the array to host"
+        elif (in_trace and isinstance(n.func, ast.Name)
+              and n.func.id in _CASTS and len(n.args) == 1
+              and _is_array_expr(n.args[0], info, graph)):
+            hit = (f"{n.func.id}() over an array expression forces a "
+                   f"host sync")
+        if hit is not None:
+            where = ("on a trace-reachable path" if in_trace
+                     else "outside obs.fence")
+            out.append(Finding(
+                rule="RS101", path=info.module.path, lineno=n.lineno,
+                scope=info.qualname,
+                message=f"{hit} {where}; route through obs.fence or "
+                        f"suppress with a reason",
+                source_line=_line(info, n.lineno)))
+    return out
+
+
+# -- RS102 -------------------------------------------------------------------
+
+def _rs102(info: FunctionInfo, graph: CallGraph) -> List[Finding]:
+    out = []
+    for n in _scope_nodes(info):
+        if not isinstance(n, (ast.If, ast.While)):
+            continue
+        if _is_array_expr(n.test, info, graph):
+            kind = "if" if isinstance(n, ast.If) else "while"
+            out.append(Finding(
+                rule="RS102", path=info.module.path, lineno=n.lineno,
+                scope=info.qualname,
+                message=f"data-dependent `{kind}` on an array expression "
+                        f"in a trace-reachable function; use lax.cond/"
+                        f"jnp.where or hoist the decision to trace time",
+                source_line=_line(info, n.lineno)))
+    return out
+
+
+# -- RS103 -------------------------------------------------------------------
+
+def _rs103(info: FunctionInfo, graph: CallGraph) -> List[Finding]:
+    if info.jit_static is None:
+        return []
+    if not isinstance(info.node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        return []
+    names, lineno = info.jit_static
+    out = []
+    params = info.params
+    for name in names:
+        if name not in params:
+            out.append(Finding(
+                rule="RS103", path=info.module.path, lineno=lineno,
+                scope=info.qualname,
+                message=f"static_argnames names {name!r} which is not a "
+                        f"parameter of {info.qualname.rsplit('.', 1)[-1]}",
+                source_line=_line(info, lineno)))
+    # mutable defaults on static params are unhashable at jit cache-key
+    # time and fail on first call with a non-None value
+    a = info.node.args
+    pos = a.posonlyargs + a.args
+    defaults = dict(zip([p.arg for p in pos[len(pos) - len(a.defaults):]],
+                        a.defaults))
+    defaults.update({p.arg: d for p, d in zip(a.kwonlyargs, a.kw_defaults)
+                     if d is not None})
+    for name in names:
+        d = defaults.get(name)
+        if isinstance(d, (ast.List, ast.Dict, ast.Set)):
+            out.append(Finding(
+                rule="RS103", path=info.module.path, lineno=d.lineno,
+                scope=info.qualname,
+                message=f"static arg {name!r} has a mutable (unhashable) "
+                        f"default; use a tuple/frozenset/None",
+                source_line=_line(info, d.lineno)))
+    return out
+
+
+# -- RS104 -------------------------------------------------------------------
+
+def _module_mutable_globals(graph: CallGraph) -> Set[str]:
+    """``module.name`` for every module-level list/dict/set binding."""
+    out: Set[str] = set()
+    for mod in graph.modules.values():
+        for stmt in mod.tree.body:
+            if isinstance(stmt, ast.Assign):
+                if isinstance(stmt.value, (ast.List, ast.Dict, ast.Set,
+                                           ast.ListComp, ast.DictComp,
+                                           ast.SetComp)):
+                    for t in stmt.targets:
+                        if isinstance(t, ast.Name):
+                            out.add(f"{mod.qualname}.{t.id}")
+    return out
+
+
+def _rs104(info: FunctionInfo, graph: CallGraph,
+           mutable_globals: Set[str]) -> List[Finding]:
+    out = []
+    mod = info.module.qualname
+
+    def _is_mutable_global(node: ast.AST) -> Optional[str]:
+        if isinstance(node, ast.Name):
+            q = f"{mod}.{node.id}"
+            if q in mutable_globals and node.id not in info.params:
+                return node.id
+        return None
+
+    for n in _scope_nodes(info):
+        name = None
+        if isinstance(n, ast.Global):
+            name = ", ".join(n.names)
+        elif isinstance(n, ast.AugAssign):
+            name = _is_mutable_global(n.target)
+        elif isinstance(n, ast.Assign):
+            for t in n.targets:
+                if isinstance(t, ast.Subscript):
+                    name = _is_mutable_global(t.value)
+        elif isinstance(n, ast.Call):
+            if (isinstance(n.func, ast.Attribute)
+                    and n.func.attr in ("append", "extend", "update",
+                                        "add", "pop", "clear", "remove",
+                                        "setdefault")):
+                name = _is_mutable_global(n.func.value)
+        if name is not None:
+            out.append(Finding(
+                rule="RS104", path=info.module.path, lineno=n.lineno,
+                scope=info.qualname,
+                message=f"mutation of module-level state ({name}) in a "
+                        f"trace-reachable function replays per trace, "
+                        f"not per call",
+                source_line=_line(info, n.lineno)))
+    return out

@@ -159,6 +159,7 @@ def save(directory: str, step: int, tree: Any, keep_last: int = 3) -> str:
     flat, _, names = _leaf_paths(tree)
     manifest = {"step": step, "leaves": []}
     for (path, leaf), leaf_name in zip(flat, names):
+        # repro: ignore[RS101] checkpoint persistence requires host copies
         arr = np.asarray(jax.device_get(leaf))
         fn = f"{len(manifest['leaves']):05d}_{leaf_name[:80]}.npy"
         np.save(os.path.join(tmp, fn), arr)
@@ -234,6 +235,7 @@ class AsyncCheckpointer:
         if self._err:
             raise self._err
         # device_get now so the training arrays can be donated/overwritten
+        # repro: ignore[RS101] snapshot-for-write must leave the device
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
         self._q.put((step, host_tree))
 

@@ -1,3 +1,6 @@
+# repro: ignore[RS202] serving-side attention kernel, consumed directly
+# by serve/pqkv (one-hot contraction formulation), not an elastic
+# dispatch op
 """Jitted public wrapper: PQ-KV decode attention (one new token vs a
 PQ-compressed KV cache)."""
 

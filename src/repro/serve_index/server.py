@@ -88,6 +88,13 @@ class IndexServer:
     replication/backup hooks; it must not mutate the index.
     """
 
+    # Threading contract, enforced statically (RS301 in repro.analysis):
+    # these fields are owned by the writer thread and may only be
+    # (re)bound from the methods below — readers see them through the
+    # immutable published IndexView, never directly.
+    _WRITER_ONLY = frozenset({"_index", "_version", "_view"})
+    _WRITER_METHODS = frozenset({"_writer_loop", "_apply", "_publish"})
+
     def __init__(self, index: StreamingIndex,
                  cfg: Optional[ServeConfig] = None,
                  on_publish=None):

@@ -1,0 +1,11 @@
+"""Suppression hygiene seeds: reasonless ignore + unused ignore."""
+
+import jax
+
+
+def pull(x):
+    return jax.device_get(x)  # repro: ignore[RS101]
+
+
+def fine(x):
+    return x + 1  # repro: ignore[RS303] nothing here matches

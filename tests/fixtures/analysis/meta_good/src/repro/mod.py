@@ -1,0 +1,7 @@
+"""A reasoned suppression silences its finding: zero findings."""
+
+import jax
+
+
+def pull(x):
+    return jax.device_get(x)  # repro: ignore[RS101] export path, documented

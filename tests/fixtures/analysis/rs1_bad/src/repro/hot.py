@@ -1,0 +1,48 @@
+"""Seeded RS1xx violations: every finding here is asserted by
+tests/test_analysis.py."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, static_argnames=("k", "missing"))  # RS103
+def topk(x, k=4):
+    d = helper(x)
+    if jnp.any(d > 0):  # RS102: data-dependent branch under trace
+        d = -d
+    return jnp.sort(d)[:k]
+
+
+def helper(x):
+    v = float(jnp.min(x))  # RS101: host sync, trace-reachable via topk
+    return x - v
+
+
+@functools.partial(jax.jit, static_argnames=("opts",))
+def scale(x, opts={}):  # RS103: mutable default on a static arg
+    return x * len(opts)
+
+
+_CACHE = {}
+
+
+def memo(x):
+    _CACHE[x.shape] = x  # RS104: module state mutated under trace
+    return x
+
+
+def memo_root(x):
+    return jax.jit(memo)(x)
+
+
+def report(x):
+    return x.item()  # RS101: unconditional sync, flagged anywhere
+
+
+def offline(x):
+    # np.asarray is only a finding on trace-reachable paths; this
+    # function is never traced, so this line must NOT be flagged
+    return np.asarray(x)

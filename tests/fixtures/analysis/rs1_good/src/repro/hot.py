@@ -1,0 +1,35 @@
+"""Clean equivalents of the rs1_bad tree: zero findings expected."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def topk(x, k=4):
+    d = helper(x)
+    d = jnp.where(jnp.any(d > 0), -d, d)
+    return jnp.sort(d)[:k]
+
+
+def helper(x):
+    return x - jnp.min(x)
+
+
+@functools.partial(jax.jit, static_argnames=("opts",))
+def scale(x, opts=()):
+    return x * len(opts)
+
+
+def memo(x):
+    return x
+
+
+def memo_root(x):
+    return jax.jit(memo)(x)
+
+
+def offline(x):
+    return np.asarray(x)

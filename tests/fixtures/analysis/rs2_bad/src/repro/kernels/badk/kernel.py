@@ -1,0 +1,5 @@
+"""Pallas kernel body for the badk op (deliberately incomplete)."""
+
+
+def badk_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] + 1

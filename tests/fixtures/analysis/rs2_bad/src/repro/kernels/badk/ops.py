@@ -1,0 +1,9 @@
+"""badk entry point: no ref.py sibling, unregistered in dispatch."""
+
+from jax.experimental import pallas as pl
+
+from .kernel import badk_kernel
+
+
+def run_badk(x):
+    return pl.pallas_call(badk_kernel, out_shape=x)(x)

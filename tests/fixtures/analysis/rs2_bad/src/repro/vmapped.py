@@ -1,0 +1,9 @@
+"""RS204 seed: vmap over a function that reaches a pallas_call."""
+
+import jax
+
+from .kernels.badk.ops import run_badk
+
+
+def batched(xs):
+    return jax.vmap(run_badk)(xs)  # RS204

@@ -1,0 +1,9 @@
+"""Public entry point for the goodk kernel."""
+
+from jax.experimental import pallas as pl
+
+from .kernel import goodk_kernel
+
+
+def run_goodk(x):
+    return pl.pallas_call(goodk_kernel, out_shape=x)(x)

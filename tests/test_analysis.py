@@ -1,0 +1,176 @@
+"""repro.analysis: fixture trees seed one violation per RS rule (bad)
+with clean equivalents (good), plus suppression/baseline mechanics, the
+CLI exit codes, the check_routing single-format contract, and the
+self-check that the live tree is clean."""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.analysis import analyze
+from repro.analysis.findings import write_baseline
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = Path(__file__).parent / "fixtures" / "analysis"
+
+
+def _rules(report):
+    return {f.rule for f in report.findings}
+
+
+def _by_rule(report, rule):
+    return [f for f in report.findings if f.rule == rule]
+
+
+# -- RS1xx: trace safety -----------------------------------------------------
+
+def test_rs1_bad_tree_flags_each_rule():
+    r = analyze(FIXTURES / "rs1_bad")
+    assert _rules(r) == {"RS101", "RS102", "RS103", "RS104"}
+    # float(jnp.min(...)) in the trace-reachable helper + .item()
+    rs101 = _by_rule(r, "RS101")
+    assert {f.scope.rsplit(".", 1)[-1] for f in rs101} == \
+        {"helper", "report"}
+    # np.asarray in the never-traced function must NOT be flagged
+    assert not any("offline" in f.scope for f in r.findings)
+    # both static_argnames defects: unknown name + mutable default
+    assert len(_by_rule(r, "RS103")) == 2
+
+
+def test_rs1_good_tree_is_clean():
+    r = analyze(FIXTURES / "rs1_good")
+    assert r.clean, [f.render(FIXTURES) for f in r.findings]
+
+
+# -- RS2xx: dispatch invariants ----------------------------------------------
+
+def test_rs2_bad_tree_flags_each_rule():
+    r = analyze(FIXTURES / "rs2_bad")
+    assert _rules(r) == {"RS201", "RS202", "RS203", "RS204", "RS205"}
+    # the incomplete/unregistered kernel anchors at its ops.py
+    for rule in ("RS201", "RS202"):
+        (f,) = _by_rule(r, rule)
+        assert f.path.parts[-3:] == ("kernels", "badk", "ops.py")
+    (f203,) = _by_rule(r, "RS203")
+    assert "orphan_op" in f203.message
+    (f204,) = _by_rule(r, "RS204")
+    assert "run_badk" in f204.message
+    (f205,) = _by_rule(r, "RS205")
+    assert f205.path.name == "check_routing.py"
+
+
+def test_rs2_good_tree_is_clean():
+    r = analyze(FIXTURES / "rs2_good")
+    assert r.clean, [f.render(FIXTURES) for f in r.findings]
+
+
+# -- RS3xx: serving concurrency ----------------------------------------------
+
+def test_rs3_bad_tree_flags_each_rule():
+    r = analyze(FIXTURES / "rs3_bad")
+    assert _rules(r) == {"RS301", "RS302", "RS303"}
+    (f301,) = _by_rule(r, "RS301")
+    assert "_view" in f301.message and f301.scope.endswith("search")
+    (f302,) = _by_rule(r, "RS302")
+    assert "view.version" in f302.message
+    assert len(_by_rule(r, "RS303")) == 2  # acquire + release
+
+
+def test_rs3_good_tree_is_clean():
+    r = analyze(FIXTURES / "rs3_good")
+    assert r.clean, [f.render(FIXTURES) for f in r.findings]
+
+
+# -- suppression + baseline mechanics ----------------------------------------
+
+def test_suppression_hygiene_meta_rules():
+    r = analyze(FIXTURES / "meta_bad")
+    # the reasonless ignore suppresses RS101 but raises RS001; the
+    # ignore that matches nothing raises RS002
+    assert _rules(r) == {"RS001", "RS002"}
+
+
+def test_reasoned_suppression_silences():
+    r = analyze(FIXTURES / "meta_good")
+    assert r.clean, [f.render(FIXTURES) for f in r.findings]
+
+
+def test_baseline_freezes_then_ratchets(tmp_path):
+    bad = FIXTURES / "rs1_bad"
+    baseline = tmp_path / "baseline.json"
+    write_baseline(baseline, analyze(bad).findings, bad)
+
+    # frozen but unjustified: still a failure (the CI growth gate)
+    r = analyze(bad, baseline_path=baseline)
+    assert not r.findings and r.unjustified_baseline and not r.clean
+
+    data = json.loads(baseline.read_text())
+    for entry in data["findings"].values():
+        entry["justification"] = "frozen pre-existing debt"
+    baseline.write_text(json.dumps(data))
+    assert analyze(bad, baseline_path=baseline).clean
+
+    # debt paid (the good tree): every entry is stale and must go
+    r = analyze(FIXTURES / "rs1_good", baseline_path=baseline)
+    assert not r.findings and r.stale_baseline and not r.clean
+
+
+# -- CLI + live tree ---------------------------------------------------------
+
+def _run_static(*args):
+    return subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "check_static.py"), *args],
+        capture_output=True, text=True)
+
+
+def test_cli_exit_codes():
+    bad = _run_static("--root", str(FIXTURES / "rs1_bad"))
+    assert bad.returncode == 1 and "RS101" in bad.stdout
+    good = _run_static("--root", str(FIXTURES / "rs1_good"))
+    assert good.returncode == 0
+    rules = _run_static("--list-rules")
+    assert rules.returncode == 0 and "RS204" in rules.stdout
+
+
+def test_live_tree_is_clean():
+    r = analyze(REPO, baseline_path=REPO / "STATIC_BASELINE.json")
+    assert r.clean, (
+        [f.render(REPO) for f in r.findings],
+        r.stale_baseline, r.unjustified_baseline)
+
+
+def test_live_tree_graph_sanity():
+    # the call graph must actually see the hot paths it guards: jitted
+    # roots exist and a Pallas launcher is known in the kernels package
+    r = analyze(REPO)
+    roots = r.graph.trace_roots()
+    assert len(roots) >= 10
+    assert any(q.startswith("repro.kernels.") for q in
+               r.graph.pallas_launchers())
+
+
+# -- check_routing: exactly one accepted dump format -------------------------
+
+def _run_routing(path):
+    return subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "check_routing.py"),
+         str(path), "pallas_interpret"],
+        capture_output=True, text=True)
+
+
+def test_check_routing_rejects_legacy_flat_dict(tmp_path):
+    legacy = tmp_path / "legacy.json"
+    legacy.write_text(json.dumps({"elastic_pairwise:pallas_interpret": 3}))
+    res = _run_routing(legacy)
+    assert res.returncode == 2
+    assert "no longer accepted" in res.stdout
+
+
+def test_check_routing_accepts_snapshot_format(tmp_path):
+    snap = tmp_path / "snap.json"
+    snap.write_text(json.dumps({"counters": []}))
+    res = _run_routing(snap)
+    # accepted format, but the (empty) ledger fails the op gate
+    assert res.returncode == 1
+    assert "never dispatched" in res.stdout

@@ -86,3 +86,16 @@ def test_gate_accepts_valid_references(tmp_path):
         "Use `dispatch.elastic_cdist`; snapshots use format 3.\n")
     proc = _run(root)
     assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_gate_fails_on_unknown_analysis_rule(tmp_path):
+    root = _doctored_tree(tmp_path)
+    eng = root / "src" / "repro" / "analysis" / "engine.py"
+    eng.parent.mkdir(parents=True, exist_ok=True)
+    eng.write_text('RULES = {"RS101": "host sync"}\n')
+    (root / "docs" / "rules.md").write_text(
+        "RS101 is real but rule RS999 was retired.\n")
+    proc = _run(root)
+    assert proc.returncode == 1
+    assert "RS999" in proc.stdout
+    assert "RS101" not in proc.stdout
