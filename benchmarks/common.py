@@ -22,7 +22,7 @@ import jax
 
 __all__ = ["timeit", "Bench", "OUT_DIR", "ROOT_DIR", "SMOKE", "set_smoke",
            "MEASURE", "set_measure", "measure_config_fields",
-           "backend_headline"]
+           "backend_headline", "HW_DEVICE", "set_device"]
 
 OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments/bench")
 # Where the committed BENCH_* headline summaries live (the repo root).
@@ -46,6 +46,26 @@ def set_smoke(on: bool = True) -> None:
 def set_measure(name: str) -> None:
     global MEASURE
     MEASURE = name
+
+
+# Real-hardware leg (benchmarks/run.py --device=tpu|gpu): results go to
+# ``experiments/bench/hw_<device>_<suite>.json`` and the committed
+# repo-root BENCH_* summaries are never touched — those stay the
+# CPU/interpret baselines CI regenerates.
+HW_DEVICE: Optional[str] = None
+
+
+def set_device(device: str) -> None:
+    """Record that this run targets real hardware ``device`` ("tpu" or
+    "gpu").  Fails fast when JAX's actual default backend disagrees, so a
+    mis-provisioned job cannot silently record CPU numbers as hardware."""
+    actual = jax.default_backend()
+    if actual != device:
+        raise RuntimeError(
+            f"--device={device} but jax.default_backend() is {actual!r}; "
+            "refusing to record mislabelled hardware numbers")
+    global HW_DEVICE
+    HW_DEVICE = device
 
 
 def measure_config_fields() -> Dict[str, object]:
@@ -118,10 +138,12 @@ class Bench:
         path.  Smoke runs never touch the root summaries — 1-repetition
         numbers must not clobber the committed baselines."""
         os.makedirs(OUT_DIR, exist_ok=True)
-        path = os.path.join(OUT_DIR, f"{self.name}.json")
+        stem = f"hw_{HW_DEVICE}_{self.name}" if HW_DEVICE else self.name
+        path = os.path.join(OUT_DIR, f"{stem}.json")
         with open(path, "w") as f:
-            json.dump({"name": self.name, "rows": self.rows}, f, indent=1)
-        if headline is not None and not SMOKE:
+            json.dump({"name": self.name, **backend_headline(),
+                       "rows": self.rows}, f, indent=1)
+        if headline is not None and not SMOKE and not HW_DEVICE:
             os.makedirs(ROOT_DIR, exist_ok=True)
             root = os.path.join(ROOT_DIR, f"BENCH_{self.root_name}.json")
             with open(root, "w") as f:

@@ -21,14 +21,23 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core import corridor as corridor_mod
 from repro.core import measures
 from repro.core.dtw import dtw_batch
+from repro.kernels import tune
 from repro.kernels.common import default_interpret
 from repro.kernels.dtw_band.ops import dtw_band
 
 from .common import Bench, timeit
 
 WINDOW_FRAC = 0.1
+
+# Adaptive-corridor geometry for the long-series rows: a coarser grid
+# (factor 16) keeps the corridor-build pass cheap at these lengths, and
+# the wider safety radius keeps warped pairs certified (corridor contains
+# the static optimal path -> bit-identical distances).
+ADAPTIVE_FACTOR = 16
+ADAPTIVE_RADIUS = 6
 
 
 def _points(quick: bool):
@@ -38,8 +47,35 @@ def _points(quick: bool):
     return ((128, 256), (256, 256), (512, 128), (1024, 64), (2048, 32))
 
 
+def _adaptive_points(quick: bool):
+    # long-series rows where the per-pair corridor register (bounded by
+    # the coarse projection width) is several lanes narrower than the
+    # static band register — short series keep the static band
+    if quick:
+        return ((2048, 8),)
+    return ((3072, 16), (4096, 8))
+
+
 def _measure_points(quick: bool):
     return ((128, 64),) if quick else ((256, 128), (512, 64))
+
+
+def _locally_warped(n: int, length: int, seed: int, drift: int = 2):
+    """Pair batches where B is A under a small random local time warp —
+    the workload adaptive corridors are built for: the true alignment
+    path stays within ``drift`` cells of the diagonal, far inside the
+    ``window_frac * L`` static band."""
+    rng = np.random.default_rng(seed)
+    A = np.cumsum(rng.standard_normal((n, length)), axis=1).astype(
+        np.float32)
+    B = np.empty_like(A)
+    for i in range(n):
+        off = np.clip(np.cumsum(rng.integers(-1, 2, size=length)),
+                      -drift, drift)
+        idx = np.clip(np.arange(length) + off, 0, length - 1)
+        B[i] = A[i, idx.astype(np.int64)]
+    B += rng.normal(scale=0.02, size=B.shape).astype(np.float32)
+    return A, B
 
 
 def run(quick: bool = True) -> Bench:
@@ -81,6 +117,53 @@ def run(quick: bool = True) -> Bench:
                             band_vs_full_speedup=band_vs_full,
                             band_vs_jax_speedup=band_vs_jax))
 
+    # -- adaptive corridors vs the static band on locally-warped data -------
+    adaptive_rows = []
+    for L, batch in _adaptive_points(quick):
+        w = max(1, int(round(WINDOW_FRAC * L)))
+        A, B = _locally_warped(batch, L, seed=L)
+        width = tune.adaptive_width(L, w, factor=ADAPTIVE_FACTOR,
+                                    radius=ADAPTIVE_RADIUS)
+
+        def run_static():
+            return dtw_band(A, B, w, interpret=interpret)
+
+        def run_adaptive():
+            # end-to-end: corridor build + clip + adaptive sweep
+            lo, hi = corridor_mod.clip_to_width(
+                *corridor_mod.build_corridor(A, B, w,
+                                             factor=ADAPTIVE_FACTOR,
+                                             radius=ADAPTIVE_RADIUS),
+                width)
+            return dtw_band(A, B, w, interpret=interpret,
+                            corridor=(lo, hi), width=width)
+
+        d_static = np.asarray(run_static())
+        d_adaptive = np.asarray(run_adaptive())
+        lo, hi = corridor_mod.clip_to_width(
+            *corridor_mod.build_corridor(A, B, w, factor=ADAPTIVE_FACTOR,
+                                         radius=ADAPTIVE_RADIUS), width)
+        cert = np.asarray(corridor_mod.certify_adaptive(
+            A, B, lo, hi, window=w, width=width))
+        # exactness contract: certified pairs are bit-identical
+        assert (d_adaptive[cert] == d_static[cert]).all(), \
+            "certified adaptive distances must equal static bit-for-bit"
+        t_static = timeit(run_static, repeats=5)["median_s"]
+        t_adaptive = timeit(run_adaptive, repeats=5)["median_s"]
+        from repro.kernels.dtw_band.kernel import band_width
+        row = dict(L=L, batch=batch, window=w,
+                   static_width=band_width(L, w),
+                   adaptive_width=width,
+                   corridor_factor=ADAPTIVE_FACTOR,
+                   corridor_radius=ADAPTIVE_RADIUS,
+                   pallas_band_s=t_static,
+                   adaptive_s=t_adaptive,
+                   adaptive_vs_band_speedup=t_static / t_adaptive,
+                   certified_frac=float(cert.mean()),
+                   certified_bit_identical=True)
+        b.add(**row)
+        adaptive_rows.append(row)
+
     # -- per-measure sweep of the measure-generic band-compressed kernel ----
     measure_rows = []
     for meas in measures.available():
@@ -107,12 +190,17 @@ def run(quick: bool = True) -> Bench:
         "window_frac": WINDOW_FRAC,
         "dtw_rows": summary,
         "measure_rows": measure_rows,
+        "adaptive_rows": adaptive_rows,
         "min_band_vs_full_speedup": min(r["band_vs_full_speedup"]
                                         for r in summary),
+        "min_adaptive_vs_band_speedup": min(
+            r["adaptive_vs_band_speedup"] for r in adaptive_rows),
     }
     b.save(headline)
     print(f"  min band-vs-full speedup "
           f"{headline['min_band_vs_full_speedup']:.2f}x")
+    print(f"  min adaptive-vs-band speedup "
+          f"{headline['min_adaptive_vs_band_speedup']:.2f}x")
     return b
 
 

@@ -39,11 +39,19 @@ def main() -> None:
                     help="elastic measure for the measure-aware suites "
                          "(lb_cascade, ivf, index): a registry name or "
                          "'name:param=value', e.g. msm or erp:g=0.5")
+    ap.add_argument("--device", choices=("tpu", "gpu"), default=None,
+                    help="opt-in real-hardware leg: verify JAX actually "
+                         "runs on this backend and record results as "
+                         "experiments/bench/hw_<device>_*.json; the "
+                         "committed BENCH_* summaries (CPU/interpret "
+                         "baselines) are never touched")
     args = ap.parse_args()
     if args.smoke and args.full:
         ap.error("--smoke and --full are mutually exclusive")
     if args.smoke:
         common.set_smoke(True)
+    if args.device:
+        common.set_device(args.device)
     if args.measure:
         from repro.core import measures as _measures
         _measures.resolve(args.measure)   # fail fast on unknown names

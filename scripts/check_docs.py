@@ -20,7 +20,10 @@ Checked reference classes:
 * ``--flags`` on ``python <script>.py`` / ``python -m <module>`` command
   lines -> the flag must appear in the named file;
 * ``RSxxx`` static-analysis rule IDs -> the ID must exist (quoted) in
-  the ``src/repro/analysis`` rule engine.
+  the ``src/repro/analysis`` rule engine;
+* ``REPRO_*`` environment-variable tokens -> the variable name must
+  appear quoted somewhere under the source dirs (a doc that advertises
+  a knob the code no longer reads is stale).
 
 ``--root`` exists so the negative test can point the gate at a doctored
 tree and assert it fails; CI runs it against the repo root.
@@ -45,6 +48,7 @@ FORMAT_REF = re.compile(r"\bformats?\s+(\d+)(?:\s*[-–]\s*(\d+))?")
 CMD_LINE = re.compile(r"\bpython(?:3)?\s+(?:-m\s+([\w.]+)|([\w./-]+\.py))")
 FLAG = re.compile(r"(--[\w-]+)")
 RS_RULE = re.compile(r"\bRS\d{3}\b")
+ENV_VAR = re.compile(r"\b(REPRO_[A-Z][A-Z0-9_]*)\b")
 
 
 def _read(path: str) -> str:
@@ -140,6 +144,13 @@ def check_file(
         quoted = f'"{stage}"' in stage_src or f"'{stage}'" in stage_src
         if not quoted and not _resolves_as_module(root, stage):
             errors.append(f"{rel}: stage {stage!r} not found in source")
+
+    for env in sorted(set(ENV_VAR.findall(text))):
+        quoted = f'"{env}"' in stage_src or f"'{env}'" in stage_src
+        if not quoted:
+            errors.append(
+                f"{rel}: env var {env} has no quoted reference in source",
+            )
 
     for rule in sorted(set(RS_RULE.findall(text))):
         if f'"{rule}"' not in analysis_src and f"'{rule}'" not in analysis_src:

@@ -217,11 +217,40 @@ def _interpret_flag(backend: str) -> Optional[bool]:
     return True if backend == "pallas_interpret" else None
 
 
+def _adaptive_geometry(L: int, window: Optional[int], backend: str,
+                       spec: MeasureSpec, width: Optional[int],
+                       factor: int, radius: int):
+    """Shared adaptive-band resolution: the tuned register width cap for
+    this geometry (static, trace-time) plus the corridor clipper."""
+    from ..kernels import tune
+    from . import corridor as corr
+    if width is None:
+        lane = 128 if jax.default_backend() == "tpu" else 8
+        width = tune.adaptive_width(L, window, lane, measure=spec.name,
+                                    backend=backend, factor=factor,
+                                    radius=radius)
+    return corr, width
+
+
 def elastic_pairwise(A: jnp.ndarray, B: jnp.ndarray,
                      window: Optional[int] = None, *,
-                     block: int = 8,
-                     measure: MeasureArg = None) -> jnp.ndarray:
+                     block: Optional[int] = None,
+                     measure: MeasureArg = None,
+                     band: str = "static",
+                     corridor: Optional[Tuple[jnp.ndarray,
+                                              jnp.ndarray]] = None,
+                     corridor_factor: int = 8, corridor_radius: int = 2,
+                     width: Optional[int] = None) -> jnp.ndarray:
     """Elastic cost over zipped pairs: ``(N, L) x (N, L) -> (N,)``.
+
+    ``band="adaptive"`` sweeps each pair's own corridor envelope (built
+    here from a coarse PAA pass unless ``corridor=(lo, hi)`` is given —
+    see :mod:`repro.core.corridor`).  The adaptive result is bit-identical
+    to the static band whenever the corridor contains the static optimal
+    path (checkable via ``corridor.certify_adaptive``) and a documented
+    *approximate* upper bound otherwise; it is ledgered separately as
+    ``elastic_pairwise_adaptive``.  ``block=None`` consults the
+    :mod:`repro.kernels.tune` table for the launch block.
 
     >>> import jax.numpy as jnp
     >>> from repro.core import dispatch
@@ -236,16 +265,34 @@ def elastic_pairwise(A: jnp.ndarray, B: jnp.ndarray,
     from ..kernels.dtw_band.ops import dtw_band
     spec = measures.resolve(measure)
     backend = get_backend()
-    _count("elastic_pairwise", backend, spec)
+    if band == "static":
+        _count("elastic_pairwise", backend, spec)
+        if backend == "jax":
+            return dtw_batch(A, B, window, spec)
+        return dtw_band(A, B, window, block=block,
+                        interpret=_interpret_flag(backend), measure=spec)
+    if band != "adaptive":
+        raise ValueError(f"unknown band mode {band!r}; "
+                         "expected 'static' or 'adaptive'")
+    _count("elastic_pairwise_adaptive", backend, spec)
+    L = A.shape[-1]
+    corr, width = _adaptive_geometry(L, window, backend, spec, width,
+                                     corridor_factor, corridor_radius)
+    if corridor is None:
+        corridor = corr.build_corridor(A, B, window, factor=corridor_factor,
+                                       radius=corridor_radius)
+    lo, hi = corr.clip_to_width(*corridor, width)
     if backend == "jax":
-        return dtw_batch(A, B, window, spec)
+        return corr.corridor_sweep(A, B, lo, hi, window=window, width=width,
+                                   measure=spec)[:, 0]
     return dtw_band(A, B, window, block=block,
-                    interpret=_interpret_flag(backend), measure=spec)
+                    interpret=_interpret_flag(backend), measure=spec,
+                    corridor=(lo, hi), width=width)
 
 
 def elastic_cdist(A: jnp.ndarray, B: jnp.ndarray,
                   window: Optional[int] = None, *,
-                  block: int = 8,
+                  block: Optional[int] = None,
                   measure: MeasureArg = None) -> jnp.ndarray:
     """All-pairs elastic cost: ``(N, L) x (M, L) -> (N, M)``.
 
@@ -270,11 +317,19 @@ def elastic_cdist(A: jnp.ndarray, B: jnp.ndarray,
 
 
 def adc_cdist(codes_a: jnp.ndarray, codes_b: jnp.ndarray,
-              lut: jnp.ndarray) -> jnp.ndarray:
+              lut: jnp.ndarray, *,
+              lut_dtype: str = "float32") -> jnp.ndarray:
     """Symmetric PQ distance matrix ``sqrt(sum_m LUT[m, a^m, b^m])``:
     one-hot MXU contractions on the Pallas route, plain gathers on "jax".
     Measure-generic by construction — the LUT already encodes whichever
     measure built it (paper §3.3).
+
+    ``lut_dtype`` selects the resident-table precision: ``"float32"``
+    (exact), or the quantized LUT path — ``"int8"`` (per-subspace affine,
+    4x smaller VMEM table) / ``"bfloat16"`` (2x).  The quantized route is
+    ledgered as ``adc_cdist_quant`` and matches f32 within the
+    per-subspace quantization step (see
+    :func:`repro.kernels.pq_adc.ops.quantize_lut`).
 
     >>> import jax.numpy as jnp
     >>> from repro.core import dispatch
@@ -284,10 +339,22 @@ def adc_cdist(codes_a: jnp.ndarray, codes_b: jnp.ndarray,
     ...     D = dispatch.adc_cdist(codes, codes, lut)
     >>> [round(float(x), 3) for x in D.ravel()]   # sqrt(0), sqrt(2), ...
     [0.0, 1.414, 1.414, 0.0]
+    >>> with dispatch.use_backend("jax"):
+    ...     Dq = dispatch.adc_cdist(codes, codes, lut, lut_dtype="int8")
+    >>> [round(float(x), 2) for x in Dq.ravel()]
+    [0.0, 1.41, 1.41, 0.0]
     """
     from ..kernels.pq_adc.ops import adc_sym_cdist as _adc_sym_pallas
-    from ..kernels.pq_adc.ref import adc_sym_cdist_ref
+    from ..kernels.pq_adc.ops import adc_sym_cdist_quant, quantize_lut
+    from ..kernels.pq_adc.ref import adc_sym_cdist_quant_ref, adc_sym_cdist_ref
     backend = get_backend()
+    if lut_dtype != "float32":
+        _count("adc_cdist_quant", backend)
+        q, scale, zero = quantize_lut(lut, lut_dtype)
+        if backend == "jax":
+            return adc_sym_cdist_quant_ref(codes_a, codes_b, q, scale, zero)
+        return adc_sym_cdist_quant(codes_a, codes_b, q, scale, zero,
+                                   interpret=_interpret_flag(backend))
     _count("adc_cdist", backend)
     if backend == "jax":
         return adc_sym_cdist_ref(codes_a, codes_b, lut)
@@ -295,10 +362,13 @@ def adc_cdist(codes_a: jnp.ndarray, codes_b: jnp.ndarray,
                            interpret=_interpret_flag(backend))
 
 
-def adc_lookup(codes: jnp.ndarray, qlut: jnp.ndarray) -> jnp.ndarray:
+def adc_lookup(codes: jnp.ndarray, qlut: jnp.ndarray, *,
+               lut_dtype: str = "float32") -> jnp.ndarray:
     """Asymmetric ADC scan: ``codes (N, M)``, ``qlut (M, K)`` -> ``(N,)``.
 
-    Returns ``sqrt(sum_m qlut[m, codes[n, m]])`` per row:
+    Returns ``sqrt(sum_m qlut[m, codes[n, m]])`` per row.  ``lut_dtype``
+    mirrors :func:`adc_cdist`: ``"int8"`` / ``"bfloat16"`` run the
+    quantized query-table kernel (ledgered ``adc_lookup_quant``).
 
     >>> import jax.numpy as jnp
     >>> from repro.core import dispatch
@@ -310,8 +380,16 @@ def adc_lookup(codes: jnp.ndarray, qlut: jnp.ndarray) -> jnp.ndarray:
     [0.0, 2.0]
     """
     from ..kernels.pq_adc.ops import adc_lookup as _adc_lookup_pallas
-    from ..kernels.pq_adc.ref import adc_lookup_ref
+    from ..kernels.pq_adc.ops import adc_lookup_quant, quantize_lut
+    from ..kernels.pq_adc.ref import adc_lookup_quant_ref, adc_lookup_ref
     backend = get_backend()
+    if lut_dtype != "float32":
+        _count("adc_lookup_quant", backend)
+        q, scale, zero = quantize_lut(qlut, lut_dtype)
+        if backend == "jax":
+            return adc_lookup_quant_ref(codes, q, scale, zero)
+        return adc_lookup_quant(codes, q, scale, zero,
+                                interpret=_interpret_flag(backend))
     _count("adc_lookup", backend)
     if backend == "jax":
         return adc_lookup_ref(codes, qlut)
@@ -321,7 +399,7 @@ def adc_lookup(codes: jnp.ndarray, qlut: jnp.ndarray) -> jnp.ndarray:
 
 def prealign_encode(X: jnp.ndarray, centroids: jnp.ndarray, *, level: int,
                     tail: int, window: Optional[int] = None,
-                    block: int = 8,
+                    block: Optional[int] = None,
                     measure: MeasureArg = None) -> jnp.ndarray:
     """Fused MODWT prealign + exact elastic-1NN encode: ``X (N, D)`` against
     ``centroids (M, K, S)`` -> codes ``(N, M)`` int32.
@@ -363,8 +441,12 @@ def prealign_encode(X: jnp.ndarray, centroids: jnp.ndarray, *, level: int,
 def lb_refine(A: jnp.ndarray, B: jnp.ndarray, upper: jnp.ndarray,
               lower: jnp.ndarray, thresh: jnp.ndarray,
               window: Optional[int] = None, *,
-              block: int = 8,
-              measure: MeasureArg = None
+              block: Optional[int] = None,
+              measure: MeasureArg = None,
+              band: str = "static",
+              corridor: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+              corridor_factor: int = 8, corridor_radius: int = 2,
+              width: Optional[int] = None
               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Fused cascade bound + conditional banded refine over zipped
     pairs: ``A (N, L)`` queries, ``B (N, L)`` candidates, ``upper``/
@@ -378,6 +460,14 @@ def lb_refine(A: jnp.ndarray, B: jnp.ndarray, upper: jnp.ndarray,
     Only sound for measures with ``has_keogh_lb`` (a hard error otherwise
     — capability-gated callers such as ``lb_search.filtered_topk`` fall
     back to the exact dense path before reaching here).
+
+    ``band="adaptive"`` refines inside each pair's own corridor envelope
+    (built here unless ``corridor=(lo, hi)`` is given).  The bound math
+    is unchanged — ``lb`` stays a valid lower bound of the static-band
+    distance — but the refined value is the corridor-restricted cost, an
+    *upper* bound of the static cost, so the adaptive cascade is the
+    documented approximate contract (ledgered as ``lb_refine_adaptive``)
+    and is excluded from the certified-exact LB cascade guarantees.
 
     >>> import jax.numpy as jnp
     >>> from repro.core import dispatch
@@ -400,20 +490,39 @@ def lb_refine(A: jnp.ndarray, B: jnp.ndarray, upper: jnp.ndarray,
             f"measure {spec.name!r} has no sound Keogh/Kim lower bound; "
             "lb_refine would prune incorrectly — use the exact dense path")
     backend = get_backend()
-    _count("lb_refine", backend, spec)
+    if band == "static":
+        _count("lb_refine", backend, spec)
+        if backend == "jax":
+            return lb_refine_jax(A, B, upper, lower, thresh, window,
+                                 measure=spec)
+        return _lb_refine_pallas(A, B, upper, lower, thresh, window,
+                                 block=block,
+                                 interpret=_interpret_flag(backend),
+                                 measure=spec)
+    if band != "adaptive":
+        raise ValueError(f"unknown band mode {band!r}; "
+                         "expected 'static' or 'adaptive'")
+    _count("lb_refine_adaptive", backend, spec)
+    L = A.shape[-1]
+    corr, width = _adaptive_geometry(L, window, backend, spec, width,
+                                     corridor_factor, corridor_radius)
+    if corridor is None:
+        corridor = corr.build_corridor(A, B, window, factor=corridor_factor,
+                                       radius=corridor_radius)
+    lo, hi = corr.clip_to_width(*corridor, width)
     if backend == "jax":
         return lb_refine_jax(A, B, upper, lower, thresh, window,
-                             measure=spec)
+                             measure=spec, corridor=(lo, hi), width=width)
     return _lb_refine_pallas(A, B, upper, lower, thresh, window,
                              block=block,
                              interpret=_interpret_flag(backend),
-                             measure=spec)
+                             measure=spec, corridor=(lo, hi), width=width)
 
 
 def two_level_coarse(Q: jnp.ndarray, top: jnp.ndarray, coarse: jnp.ndarray,
                      child_idx: jnp.ndarray, child_valid: jnp.ndarray,
                      window: Optional[int] = None, *, n_probe_top: int,
-                     block: int = 8,
+                     block: Optional[int] = None,
                      measure: MeasureArg = None) -> jnp.ndarray:
     """Hierarchical (two-level) coarse stage for large ``n_lists``.
 

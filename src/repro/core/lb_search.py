@@ -85,14 +85,18 @@ def _dense_topk(Q: jnp.ndarray, X: jnp.ndarray, window: Optional[int],
 
 @functools.partial(jax.jit,
                    static_argnames=("window", "k", "budget", "max_iters",
-                                    "measure", "with_stats"))
+                                    "measure", "with_stats", "band",
+                                    "corridor_factor", "corridor_radius"))
 def filtered_topk(Q: jnp.ndarray, X: jnp.ndarray, window: Optional[int],
                   k: int, budget: Optional[int] = None,
                   valid: Optional[jnp.ndarray] = None,
                   max_iters: Optional[int] = None,
                   measure: MeasureArg = None,
                   q_valid: Optional[jnp.ndarray] = None,
-                  with_stats: bool = False
+                  with_stats: bool = False,
+                  band: str = "static",
+                  corridor_factor: int = 8,
+                  corridor_radius: int = 2
                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Exact banded elastic top-k of ``Q (Nq, L)`` against ``X (N, L)``.
 
@@ -117,7 +121,23 @@ def filtered_topk(Q: jnp.ndarray, X: jnp.ndarray, window: Optional[int],
     ``refined_per_wave`` (per-wave refine counts, zero-padded to the
     static wave cap).  The flag is static so the default path compiles
     exactly the pre-telemetry graph — obs-off callers pay nothing.
+
+    ``band="adaptive"`` (static) runs every refine wave inside per-pair
+    alignment corridors (``dispatch.lb_refine(band="adaptive")``).  The
+    phase-1 bounds stay valid lower bounds of the static-band distance
+    and the loop terminates identically, but refined distances are the
+    corridor-restricted cost (>= static), so the returned top-k is the
+    documented *approximate* contract — it is excluded from the
+    certified-exact cascade guarantee above.  Static band only for
+    measures without pruning capability (the dense fallback is exact).
+    ``corridor_factor`` / ``corridor_radius`` (static) set the coarse
+    projection grid and fine-cell safety margin of the per-wave corridor
+    build; a coarser factor makes the build pass cheaper on long series
+    at the cost of a wider projected corridor.
     """
+    if band not in ("static", "adaptive"):
+        raise ValueError(f"unknown band mode {band!r}; "
+                         "expected 'static' or 'adaptive'")
     Q = jnp.asarray(Q, jnp.float32)
     X = jnp.asarray(X, jnp.float32)
     Nq, L = Q.shape
@@ -194,7 +214,9 @@ def filtered_topk(Q: jnp.ndarray, X: jnp.ndarray, window: Optional[int],
             fresh = fresh & valid[c_idx]
         th = jnp.where(fresh, thresh[q_idx], -jnp.inf)
         d, refined = lb_refine(Q[q_idx], X[c_idx], up[q_idx], lo[q_idx],
-                               th, window, measure=spec)
+                               th, window, measure=spec, band=band,
+                               corridor_factor=corridor_factor,
+                               corridor_radius=corridor_radius)
         refined = refined & fresh
         d_exact = d_exact.at[q_idx, c_idx].min(
             jnp.where(refined, d, jnp.inf))

@@ -332,12 +332,14 @@ def encode_with_stats(X: jnp.ndarray, cb: PQCodebook, cfg: PQConfig
 # ---------------------------------------------------------------------------
 
 def cdist_sym(codes_a: jnp.ndarray, codes_b: jnp.ndarray,
-              lut: jnp.ndarray) -> jnp.ndarray:
+              lut: jnp.ndarray, *, lut_dtype: str = "float32") -> jnp.ndarray:
     """Symmetric PQ distance matrix: ``(Na, M) x (Nb, M) -> (Na, Nb)``.
 
     Routed through the dispatch layer: one-hot MXU contractions on the
     Pallas ADC kernel, plain LUT gathers on the pure-JAX route; sqrt of the
-    summed squared subspace costs either way.
+    summed squared subspace costs either way.  ``lut_dtype`` selects the
+    resident-table precision (``"float32"`` exact, ``"int8"`` /
+    ``"bfloat16"`` quantized — see :func:`repro.core.dispatch.adc_cdist`).
 
     >>> import jax.numpy as jnp
     >>> codes = jnp.array([[0, 1], [1, 0]], jnp.int32)
@@ -345,7 +347,7 @@ def cdist_sym(codes_a: jnp.ndarray, codes_b: jnp.ndarray,
     >>> [round(float(x), 3) for x in cdist_sym(codes, codes, lut).ravel()]
     [0.0, 1.414, 1.414, 0.0]
     """
-    return adc_cdist(codes_a, codes_b, lut)
+    return adc_cdist(codes_a, codes_b, lut, lut_dtype=lut_dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "euclidean",

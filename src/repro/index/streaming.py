@@ -57,6 +57,11 @@ class IndexConfig:
     fan_out)`` coarse stage instead of ``O(n_lists)``.  With
     ``n_probe_top == n_top_lists`` results match the flat stage exactly.
 
+    ``band="adaptive"`` switches the hot-buffer elastic scan to per-pair
+    alignment corridors (:mod:`repro.core.corridor`): narrower registers,
+    faster sweeps, documented *approximate* results — the certified-exact
+    LB cascade applies to the default ``"static"`` band only.
+
     >>> from repro.core.pq import PQConfig
     >>> cfg = IndexConfig(PQConfig(n_sub=2, codebook_size=4), n_lists=4)
     >>> cfg.coarse_window(48)
@@ -74,10 +79,14 @@ class IndexConfig:
     n_shards: int = 1
     n_top_lists: int = 0
     n_probe_top: int = 0
+    band: str = "static"
 
     def __post_init__(self):
         if self.n_shards < 1:
             raise ValueError(f"n_shards={self.n_shards} must be >= 1")
+        if self.band not in ("static", "adaptive"):
+            raise ValueError(f"band={self.band!r} must be 'static' or "
+                             f"'adaptive'")
         if self.n_top_lists:
             if not 1 <= self.n_top_lists <= self.n_lists:
                 raise ValueError(
@@ -115,9 +124,11 @@ def _rank_segment(codes, ids, live, list_start, list_len, dc, qluts, *,
 
 
 @functools.partial(jax.jit, static_argnames=("window", "k", "euclidean",
-                                             "measure", "with_stats"))
+                                             "measure", "with_stats",
+                                             "band"))
 def _scan_hot(data, ids, live, Q, q_valid=None, *, window: int, k: int,
-              euclidean: bool, measure=None, with_stats: bool = False):
+              euclidean: bool, measure=None, with_stats: bool = False,
+              band: str = "static"):
     """Exact scan of the hot buffer -> ``(Nq, k)`` d, ids.
 
     The configured elastic measure under PQDTW-style metrics, squared
@@ -156,7 +167,7 @@ def _scan_hot(data, ids, live, Q, q_valid=None, *, window: int, k: int,
         return -neg, out_ids
     d2, idx, st = filtered_topk(Q, data, window, k, valid=live,
                                 measure=measure, q_valid=q_valid,
-                                with_stats=with_stats)
+                                with_stats=with_stats, band=band)
     dh = jnp.sqrt(jnp.maximum(d2, 0.0))
     out_ids = jnp.where(idx >= 0, ids[jnp.maximum(idx, 0)], -1)
     if with_stats:
@@ -259,7 +270,8 @@ def search_impl(coarse: jnp.ndarray, cb: PQCodebook,
                             window=icfg.coarse_window(dim),
                             k=min(topk, data.shape[0]),
                             euclidean=not icfg.pq.is_elastic,
-                            measure=spec, with_stats=with_stats)
+                            measure=spec, with_stats=with_stats,
+                            band=icfg.band)
             if with_stats:
                 d, i, hot_stats = out
             else:

@@ -60,6 +60,7 @@ from ...core.measures import MeasureArg
 __all__ = [
     "dtw_band_kernel",
     "dtw_band_compressed_kernel",
+    "dtw_band_adaptive_kernel",
     "make_dtw_band_call",
     "make_dtw_band_cdist_call",
     "band_width",
@@ -71,9 +72,16 @@ _NEG_SAFE_INF = 3.0e38  # finite stand-in for +inf (avoids inf-inf NaNs)
 
 def band_width(length: int, window: Optional[int], lane: int = 8) -> int:
     """Compressed register width: band cells padded up to a lane multiple,
-    capped at ``length`` (beyond which compression cannot help)."""
+    capped at ``length`` (beyond which compression cannot help).
+
+    Contract: when ``min(window, length-1) + 1`` is already a lane
+    multiple the width is exactly that cell count — no extra lane of
+    padding is ever added on an aligned band.
+    """
     w = length if window is None else int(window)
     need = min(w, length - 1) + 1
+    if need % lane == 0:            # aligned band: width == cell count
+        return min(length, need)
     return min(length, -(-need // lane) * lane)
 
 
@@ -137,7 +145,8 @@ def _prefix_sum(x: jnp.ndarray, length: int) -> jnp.ndarray:
 
 def wavefront_compressed(a: jnp.ndarray, b: jnp.ndarray, *, length: int,
                          window: int, width: int,
-                         measure: MeasureArg = None) -> jnp.ndarray:
+                         measure: MeasureArg = None,
+                         corridor=None) -> jnp.ndarray:
     """Band-compressed anti-diagonal sweep over zipped pair *arrays*.
 
     ``a (rows, L)`` vs ``b (rows, L)`` -> ``(rows, 1)`` banded elastic cost
@@ -151,10 +160,26 @@ def wavefront_compressed(a: jnp.ndarray, b: jnp.ndarray, *, length: int,
     step, and ERP-style measures additionally thread their virtual first
     row/column (prefix sums of gap costs, sliced per diagonal exactly like
     the series values) through the same sweep.
+
+    ``corridor`` switches the sweep to *per-pair adaptive bands*: a pair of
+    ``(rows, 2L-1)`` int32 arrays ``(lo_arr, hi_arr)`` giving each pair's
+    feasible cell range on every anti-diagonal (see
+    :mod:`repro.core.corridor` for the builder and the structural
+    invariants: ``lo`` non-decreasing with per-diagonal drift <= 1,
+    ``lo(0) = 0``, ``lo(2L-2) = L-1``, ``lo <= hi``).  Registers stay
+    ``(rows, width)``; the per-row base offsets turn the value windows into
+    ``take_along_axis`` gathers and the predecessor shifts into per-row
+    rotate-selects — no shapes depend on data.  With ``corridor=None`` the
+    static Sakoe-Chiba geometry is traced exactly as before.
     """
     spec = measures.resolve(measure)
     L, w, W = length, window, width
     rows = a.shape[0]
+    adaptive = corridor is not None
+    if adaptive:
+        lo_arr, hi_arr = corridor
+        lo_arr = lo_arr.astype(jnp.int32)
+        hi_arr = hi_arr.astype(jnp.int32)
 
     inf = jnp.float32(_NEG_SAFE_INF)
     t = jax.lax.broadcasted_iota(jnp.int32, (rows, W), 1)
@@ -202,36 +227,50 @@ def wavefront_compressed(a: jnp.ndarray, b: jnp.ndarray, *, length: int,
 
     def step(d, carry):
         prev1, prev2 = carry  # compressed diagonals d-1 / d-2, inf-masked
-        lo = lo_of(d)
-        hi = jnp.minimum(jnp.minimum(L - 1, d), (d + w) // 2)
-        s1 = lo - lo_of(d - 1)
-        s2 = lo - lo_of(d - 2) - 1
+        if adaptive:
+            def band_at(arr, dd):
+                return jax.lax.dynamic_slice_in_dim(
+                    arr, jnp.maximum(dd, 0), 1, axis=1)
+
+            lo = band_at(lo_arr, d)                      # (rows, 1)
+            hi = band_at(hi_arr, d)
+            s1 = lo - band_at(lo_arr, d - 1)             # in {0, 1}
+            s2 = lo - band_at(lo_arr, d - 2) - 1         # in {-1, 0, 1}
+
+            def fetch(arr, base):
+                return jnp.take_along_axis(arr, base + t, axis=1)
+        else:
+            lo = lo_of(d)
+            hi = jnp.minimum(jnp.minimum(L - 1, d), (d + w) // 2)
+            s1 = lo - lo_of(d - 1)
+            s2 = lo - lo_of(d - 2) - 1
+
+            def fetch(arr, base):
+                return jax.lax.dynamic_slice_in_dim(arr, base, W, axis=1)
         off_b = L - 1 - d + lo
 
-        av = jax.lax.dynamic_slice_in_dim(a_pad, lo, W, axis=1)
-        bv = jax.lax.dynamic_slice_in_dim(b_rev_pad, off_b, W, axis=1)
+        av = fetch(a_pad, lo)
+        bv = fetch(b_rev_pad, off_b)
         i_arr = lo + t
-        xp = (jax.lax.dynamic_slice_in_dim(a_prev_pad, lo, W, axis=1)
-              if spec.uses_neighbors else None)
-        yp = (jax.lax.dynamic_slice_in_dim(b_prev_rev_pad, off_b, W, axis=1)
-              if spec.uses_neighbors else None)
+        xp = fetch(a_prev_pad, lo) if spec.uses_neighbors else None
+        yp = fetch(b_prev_rev_pad, off_b) if spec.uses_neighbors else None
         dd = jnp.abs(2 * i_arr - d) if spec.uses_position else None
         c_d, c_v, c_h = measures.move_costs(spec, av, bv, xp, yp, dd, L)
 
         # Predecessor slots (see module header): horiz (i, j-1) at t + s1
         # on d-1, vert (i-1, j) at t + s1 - 1 on d-1, diag (i-1, j-1) at
-        # t + s2 on d-2.
+        # t + s2 on d-2.  In adaptive mode s1/s2 are (rows, 1) columns and
+        # the rotate-select in ``read`` broadcasts per row.
         pred_h = read(prev1, s1)
         pred_v = read(prev1, s1 - 1)
         pred_d = read(prev2, s2)
         is_i0 = i_arr == 0
         is_j0 = (d - i_arr) == 0
         if spec.uses_gap_border:
-            ga_v = jax.lax.dynamic_slice_in_dim(ga_pad, lo, W, axis=1)
-            gap_v = jax.lax.dynamic_slice_in_dim(ga_prev_pad, lo, W, axis=1)
-            gb_v = jax.lax.dynamic_slice_in_dim(gb_rev_pad, off_b, W, axis=1)
-            gbp_v = jax.lax.dynamic_slice_in_dim(gb_prev_rev_pad, off_b, W,
-                                                 axis=1)
+            ga_v = fetch(ga_pad, lo)
+            gap_v = fetch(ga_prev_pad, lo)
+            gb_v = fetch(gb_rev_pad, off_b)
+            gbp_v = fetch(gb_prev_rev_pad, off_b)
             pred_d = jnp.where(is_i0, gbp_v, jnp.where(is_j0, gap_v, pred_d))
             pred_d = jnp.where(is_i0 & is_j0, 0.0, pred_d)
             pred_v = jnp.where(is_i0, gb_v, pred_v)
@@ -272,22 +311,50 @@ def dtw_band_compressed_kernel(a_ref, b_ref, o_ref, *, length: int,
                                       width=width, measure=measure)
 
 
+def dtw_band_adaptive_kernel(a_ref, b_ref, lo_ref, hi_ref, o_ref, *,
+                             length: int, window: int, block: int,
+                             width: int, measure: MeasureArg = None):
+    """Adaptive-corridor kernel body: ``a_ref (block, L)``, ``b_ref
+    (block, L)`` plus per-pair corridor envelopes ``lo_ref``/``hi_ref``
+    ``(block, 2L-1)`` int32 -> ``o_ref (block, 1)``.
+
+    Same band-compressed registers as the static kernel, but the live cell
+    range of every anti-diagonal comes from the pair's own corridor (built
+    by :mod:`repro.core.corridor`), so ``width`` can be far below the
+    static ``window + 1`` when alignment paths hug the diagonal.
+    """
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    o_ref[...] = wavefront_compressed(
+        a, b, length=length, window=window, width=width, measure=measure,
+        corridor=(lo_ref[...], hi_ref[...]))
+
+
 # ---------------------------------------------------------------------------
 # pallas_call builders
 # ---------------------------------------------------------------------------
 
 def make_dtw_band_call(n_pairs: int, length: int, window: Optional[int],
                        block: int, interpret: bool, mode: str = "compressed",
-                       lane: int = 8, measure: MeasureArg = None):
+                       lane: int = 8, measure: MeasureArg = None,
+                       width: Optional[int] = None):
     """Build the pallas_call for ``(n_pairs, L)`` zipped pair batches.
 
     ``n_pairs`` must already be padded to a multiple of ``block``.
-    ``mode`` selects the band-compressed sweep (default) or the legacy
-    full-width sweep (DTW-only benchmark baseline).
+    ``mode`` selects the band-compressed sweep (default), the legacy
+    full-width sweep (DTW-only benchmark baseline), or the
+    adaptive-corridor sweep (``mode="adaptive"``, which adds two
+    ``(n_pairs, 2L-1)`` int32 corridor operands and requires an explicit
+    register ``width`` — normally the tuned adaptive width, see
+    :mod:`repro.kernels.tune`).
     """
     spec = measures.resolve(measure)
     w = effective_window(length, window)
     grid = (n_pairs // block,)
+    in_specs = [
+        pl.BlockSpec((block, length), lambda i: (i, 0)),
+        pl.BlockSpec((block, length), lambda i: (i, 0)),
+    ]
     if mode == "full":
         if spec.name != "dtw":
             raise ValueError(
@@ -296,19 +363,28 @@ def make_dtw_band_call(n_pairs: int, length: int, window: Optional[int],
         kernel = functools.partial(dtw_band_kernel, length=length, window=w,
                                    block=block)
     elif mode == "compressed":
+        if width is None:
+            width = band_width(length, w, lane)
         kernel = functools.partial(dtw_band_compressed_kernel, length=length,
-                                   window=w, block=block,
-                                   width=band_width(length, w, lane),
+                                   window=w, block=block, width=width,
                                    measure=spec)
+    elif mode == "adaptive":
+        if width is None:
+            raise ValueError("mode='adaptive' needs an explicit width "
+                             "(the corridor cap)")
+        kernel = functools.partial(dtw_band_adaptive_kernel, length=length,
+                                   window=w, block=block, width=width,
+                                   measure=spec)
+        in_specs += [
+            pl.BlockSpec((block, 2 * length - 1), lambda i: (i, 0)),
+            pl.BlockSpec((block, 2 * length - 1), lambda i: (i, 0)),
+        ]
     else:
         raise ValueError(f"unknown dtw_band mode: {mode!r}")
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block, length), lambda i: (i, 0)),
-            pl.BlockSpec((block, length), lambda i: (i, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block, 1), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n_pairs, 1), jnp.float32),
         interpret=interpret,

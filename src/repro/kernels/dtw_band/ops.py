@@ -3,11 +3,13 @@
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from ...core import measures
+from .. import tune
 from ..common import default_interpret, pad_to
 from .kernel import MeasureArg, make_dtw_band_call, make_dtw_band_cdist_call
 
@@ -21,14 +23,34 @@ def _default_lane() -> int:
     return 128 if jax.default_backend() == "tpu" else 8
 
 
+def _backend_name(interpret: bool) -> str:
+    return "pallas_interpret" if interpret else "pallas"
+
+
+def _tuned_block(op: str, block: Optional[int], *, length: int,
+                 window: Optional[int], measure: MeasureArg,
+                 interpret: bool, param: str = "block",
+                 default: int = 8) -> int:
+    """``block=None`` consults the tuning table (a trace-time Python
+    resolution — the result is a static launch parameter); an explicit
+    block always wins."""
+    if block is not None:
+        return block
+    return tune.tuned(op, param, length=length, window=window,
+                      measure=measures.resolve(measure).name,
+                      backend=_backend_name(interpret), default=default)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("window", "block", "interpret", "mode",
-                                    "lane", "measure"))
+                                    "lane", "measure", "width"))
 def dtw_band(A: jnp.ndarray, B: jnp.ndarray, window: Optional[int] = None,
-             block: int = 8, interpret: Optional[bool] = None,
+             block: Optional[int] = None, interpret: Optional[bool] = None,
              mode: str = "compressed",
              lane: Optional[int] = None,
-             measure: MeasureArg = None) -> jnp.ndarray:
+             measure: MeasureArg = None,
+             corridor: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+             width: Optional[int] = None) -> jnp.ndarray:
     """Banded elastic cost over zipped pairs: ``A (N, L)``, ``B (N, L)`` ->
     ``(N,)`` (squared banded DTW under the default measure).
 
@@ -36,6 +58,12 @@ def dtw_band(A: jnp.ndarray, B: jnp.ndarray, window: Optional[int] = None,
     per-step cost scales with the Sakoe-Chiba band; ``mode="full"`` runs the
     legacy full-width sweep (kept as the DTW-only benchmark baseline).
     ``measure`` selects any registered elastic measure (static).
+
+    ``corridor=(lo, hi)`` (``(N, 2L-1)`` int32 envelopes from
+    :mod:`repro.core.corridor`) switches to the adaptive per-pair band
+    sweep; ``width`` caps its registers (default: the tuned adaptive
+    width for this geometry).  ``block=None`` consults the
+    :mod:`repro.kernels.tune` table for the launch block.
     """
     if interpret is None:
         interpret = default_interpret()
@@ -44,11 +72,25 @@ def dtw_band(A: jnp.ndarray, B: jnp.ndarray, window: Optional[int] = None,
     A = jnp.asarray(A, jnp.float32)
     B = jnp.asarray(B, jnp.float32)
     n, L = A.shape
+    if corridor is not None:
+        mode = "adaptive"
+        if width is None:
+            width = tune.adaptive_width(
+                L, window, lane, measure=measures.resolve(measure).name,
+                backend=_backend_name(interpret))
+    block = _tuned_block("dtw_band", block, length=L, window=window,
+                         measure=measure, interpret=interpret)
     Ap = pad_to(A, block, axis=0)
     Bp = pad_to(B, block, axis=0)
     call = make_dtw_band_call(Ap.shape[0], L, window, block, interpret,
-                              mode=mode, lane=lane, measure=measure)
-    out = call(Ap, Bp)
+                              mode=mode, lane=lane, measure=measure,
+                              width=width)
+    if corridor is not None:
+        lo, hi = corridor
+        out = call(Ap, Bp, pad_to(lo.astype(jnp.int32), block, axis=0),
+                   pad_to(hi.astype(jnp.int32), block, axis=0))
+    else:
+        out = call(Ap, Bp)
     return out[:n, 0]
 
 
@@ -56,7 +98,7 @@ def dtw_band(A: jnp.ndarray, B: jnp.ndarray, window: Optional[int] = None,
                    static_argnames=("window", "block", "interpret", "lane",
                                     "measure"))
 def dtw_band_cdist(A: jnp.ndarray, B: jnp.ndarray,
-                   window: Optional[int] = None, block: int = 8,
+                   window: Optional[int] = None, block: Optional[int] = None,
                    interpret: Optional[bool] = None,
                    lane: Optional[int] = None,
                    measure: MeasureArg = None) -> jnp.ndarray:
@@ -64,7 +106,8 @@ def dtw_band_cdist(A: jnp.ndarray, B: jnp.ndarray,
 
     Runs the band-compressed kernel on a 2-D grid (A row-blocks x B rows);
     the N*M cross-product is never materialized — B rows are broadcast
-    inside the kernel tile.
+    inside the kernel tile.  ``block=None`` consults the tuning table
+    (``block_a``).
     """
     if interpret is None:
         interpret = default_interpret()
@@ -74,6 +117,9 @@ def dtw_band_cdist(A: jnp.ndarray, B: jnp.ndarray,
     B = jnp.asarray(B, jnp.float32)
     N, L = A.shape
     M = B.shape[0]
+    block = _tuned_block("dtw_band_cdist", block, length=L, window=window,
+                         measure=measure, interpret=interpret,
+                         param="block_a")
     Ap = pad_to(A, block, axis=0)
     call = make_dtw_band_cdist_call(Ap.shape[0], M, L, window, block,
                                     interpret, lane=lane, measure=measure)

@@ -39,7 +39,11 @@ from ...core.lb import lb_keogh, lb_kim
 from ...core.measures import MeasureArg
 from ..dtw_band.kernel import band_width, wavefront_compressed
 
-__all__ = ["lb_cascade_kernel", "make_lb_refine_call"]
+__all__ = [
+    "lb_cascade_kernel",
+    "lb_cascade_adaptive_kernel",
+    "make_lb_refine_call",
+]
 
 
 def lb_cascade_kernel(a_ref, b_ref, u_ref, l_ref, t_ref, d_ref, f_ref, *,
@@ -72,24 +76,69 @@ def lb_cascade_kernel(a_ref, b_ref, u_ref, l_ref, t_ref, d_ref, f_ref, *,
     f_ref[...] = surv.astype(jnp.int32)
 
 
+def lb_cascade_adaptive_kernel(a_ref, b_ref, u_ref, l_ref, t_ref, lo_ref,
+                               hi_ref, d_ref, f_ref, *, length: int,
+                               window: int, block: int, width: int,
+                               measure: MeasureArg = None):
+    """Adaptive-corridor cascade tile: the static kernel plus per-pair
+    corridor envelopes ``lo_ref``/``hi_ref (block, 2L-1)`` int32 feeding
+    the refine sweep.  The bound math is unchanged (``lb`` stays a valid
+    lower bound of the *static*-band distance); the refined distance is
+    the corridor-restricted cost — an upper bound of the static cost, so
+    the overall result is the documented approximate ``band="adaptive"``
+    contract, not the certified-exact cascade."""
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    up = u_ref[...].astype(jnp.float32)
+    lo = l_ref[...].astype(jnp.float32)
+    thresh = t_ref[...].astype(jnp.float32)            # (block, 1)
+
+    lb = jnp.maximum(lb_kim(a, b), lb_keogh(b, up, lo))[:, None]
+    surv = lb < thresh                                 # (block, 1)
+
+    def refine(_):
+        return wavefront_compressed(a, b, length=length, window=window,
+                                    width=width, measure=measure,
+                                    corridor=(lo_ref[...], hi_ref[...]))
+
+    def skip(_):
+        return jnp.zeros((block, 1), jnp.float32)
+
+    d = jax.lax.cond(jnp.any(surv), refine, skip, 0)
+    d_ref[...] = jnp.where(surv, d, lb)
+    f_ref[...] = surv.astype(jnp.int32)
+
+
 def make_lb_refine_call(n_pairs: int, length: int, window: Optional[int],
                         block: int, interpret: bool, lane: int = 8,
-                        measure: MeasureArg = None):
+                        measure: MeasureArg = None, adaptive: bool = False,
+                        width: Optional[int] = None):
     """Build the pallas_call over ``(n_pairs, L)`` zipped pair batches.
 
     ``n_pairs`` must already be padded to a multiple of ``block``.
+    ``adaptive=True`` adds two ``(n_pairs, 2L-1)`` int32 corridor
+    operands and requires an explicit register ``width``.
     """
     w = effective_window(length, window)
-    kernel = functools.partial(lb_cascade_kernel, length=length, window=w,
-                               block=block,
-                               width=band_width(length, w, lane),
-                               measure=measure)
+    if width is None:
+        width = band_width(length, w, lane)
     row_spec = pl.BlockSpec((block, length), lambda i: (i, 0))
     out_spec = pl.BlockSpec((block, 1), lambda i: (i, 0))
+    in_specs = [row_spec, row_spec, row_spec, row_spec, out_spec]
+    if adaptive:
+        kernel = functools.partial(lb_cascade_adaptive_kernel, length=length,
+                                   window=w, block=block, width=width,
+                                   measure=measure)
+        cor_spec = pl.BlockSpec((block, 2 * length - 1), lambda i: (i, 0))
+        in_specs += [cor_spec, cor_spec]
+    else:
+        kernel = functools.partial(lb_cascade_kernel, length=length,
+                                   window=w, block=block, width=width,
+                                   measure=measure)
     return pl.pallas_call(
         kernel,
         grid=(n_pairs // block,),
-        in_specs=[row_spec, row_spec, row_spec, row_spec, out_spec],
+        in_specs=in_specs,
         out_specs=[out_spec, out_spec],
         out_shape=[jax.ShapeDtypeStruct((n_pairs, 1), jnp.float32),
                    jax.ShapeDtypeStruct((n_pairs, 1), jnp.int32)],

@@ -8,7 +8,9 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ...core import measures
 from ...core.measures import MeasureArg
+from .. import tune
 from ..common import default_interpret, pad_to
 from .kernel import make_lb_refine_call
 
@@ -23,13 +25,15 @@ def _default_lane() -> int:
 
 @functools.partial(jax.jit,
                    static_argnames=("window", "block", "interpret", "lane",
-                                    "measure"))
+                                    "measure", "width"))
 def lb_refine(A: jnp.ndarray, B: jnp.ndarray, upper: jnp.ndarray,
               lower: jnp.ndarray, thresh: jnp.ndarray,
-              window: Optional[int] = None, block: int = 8,
+              window: Optional[int] = None, block: Optional[int] = None,
               interpret: Optional[bool] = None,
               lane: Optional[int] = None,
-              measure: MeasureArg = None
+              measure: MeasureArg = None,
+              corridor: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+              width: Optional[int] = None
               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Cascaded bound + conditional banded-DTW refine over zipped pairs.
 
@@ -39,6 +43,12 @@ def lb_refine(A: jnp.ndarray, B: jnp.ndarray, upper: jnp.ndarray,
     Returns ``(d (N,), refined (N,) bool)`` where ``d`` is the exact
     squared banded DTW when ``lb < thresh`` (refined) and the lower bound
     ``max(LB_Kim, LB_Keogh)`` otherwise.
+
+    ``corridor=(lo, hi)`` (``(N, 2L-1)`` int32 per-pair envelopes)
+    switches the refine sweep to the adaptive band — the refined value
+    becomes the corridor-restricted cost (>= the static cost; see
+    :mod:`repro.core.corridor` for the exactness contract).
+    ``block=None`` consults the tuning table.
     """
     if interpret is None:
         interpret = default_interpret()
@@ -47,6 +57,16 @@ def lb_refine(A: jnp.ndarray, B: jnp.ndarray, upper: jnp.ndarray,
     A = jnp.asarray(A, jnp.float32)
     B = jnp.asarray(B, jnp.float32)
     n, L = A.shape
+    backend = "pallas_interpret" if interpret else "pallas"
+    if block is None:
+        block = tune.tuned("lb_refine", "block", length=L, window=window,
+                           measure=measures.resolve(measure).name,
+                           backend=backend, default=8)
+    adaptive = corridor is not None
+    if adaptive and width is None:
+        width = tune.adaptive_width(L, window, lane,
+                                    measure=measures.resolve(measure).name,
+                                    backend=backend)
     Ap = pad_to(A, block, axis=0)
     Bp = pad_to(B, block, axis=0)
     Up = pad_to(jnp.asarray(upper, jnp.float32), block, axis=0)
@@ -55,6 +75,13 @@ def lb_refine(A: jnp.ndarray, B: jnp.ndarray, upper: jnp.ndarray,
     Tp = pad_to(jnp.asarray(thresh, jnp.float32).reshape(-1, 1), block,
                 axis=0, value=-jnp.inf)
     call = make_lb_refine_call(Ap.shape[0], L, window, block, interpret,
-                               lane=lane, measure=measure)
-    d, flag = call(Ap, Bp, Up, Lp, Tp)
+                               lane=lane, measure=measure,
+                               adaptive=adaptive, width=width)
+    if adaptive:
+        lo, hi = corridor
+        d, flag = call(Ap, Bp, Up, Lp, Tp,
+                       pad_to(lo.astype(jnp.int32), block, axis=0),
+                       pad_to(hi.astype(jnp.int32), block, axis=0))
+    else:
+        d, flag = call(Ap, Bp, Up, Lp, Tp)
     return d[:n, 0], flag[:n, 0].astype(bool)

@@ -58,11 +58,13 @@ def lb_refine_ref(A: jnp.ndarray, B: jnp.ndarray, upper: jnp.ndarray,
     return _select(lb, d, jnp.asarray(thresh, jnp.float32))
 
 
-@functools.partial(jax.jit, static_argnames=("window", "measure"))
+@functools.partial(jax.jit, static_argnames=("window", "measure", "width"))
 def lb_refine_jax(A: jnp.ndarray, B: jnp.ndarray, upper: jnp.ndarray,
                   lower: jnp.ndarray, thresh: jnp.ndarray,
                   window: Optional[int] = None,
-                  measure: MeasureArg = None
+                  measure: MeasureArg = None,
+                  corridor: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+                  width: Optional[int] = None
                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     A = jnp.asarray(A, jnp.float32)
     B = jnp.asarray(B, jnp.float32)
@@ -70,6 +72,8 @@ def lb_refine_jax(A: jnp.ndarray, B: jnp.ndarray, upper: jnp.ndarray,
     w = effective_window(L, window)
     lb = cascade_bound_ref(A, B, jnp.asarray(upper, jnp.float32),
                            jnp.asarray(lower, jnp.float32))
-    d = wavefront_compressed(A, B, length=L, window=w,
-                             width=band_width(L, w), measure=measure)[:, 0]
+    if width is None:
+        width = band_width(L, w)
+    d = wavefront_compressed(A, B, length=L, window=w, width=width,
+                             measure=measure, corridor=corridor)[:, 0]
     return _select(lb, d, jnp.asarray(thresh, jnp.float32))

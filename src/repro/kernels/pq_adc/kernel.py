@@ -11,6 +11,15 @@ lookups are rewritten as one-hot contractions that land on the MXU:
 K (=256 by default) is MXU-lane aligned, so the one-hot matrices tile
 perfectly.  LUT/QLUT live fully in VMEM (M*K*K*4 bytes = 1 MiB for M=4,
 K=256); code tiles stream through the grid.
+
+Quantized LUT variants (``*_quant_kernel``) take the table as int8 or
+bfloat16 with per-subspace affine parameters ``scale``/``zero`` — the
+resident LUT shrinks 4x (int8) or 2x (bf16).  Because each one-hot
+contraction *selects* exactly one table entry per subspace, the affine
+map commutes with the contraction: the kernels accumulate
+``scale_m * contraction + zero_m`` per subspace, which equals running
+the f32 kernel on the dequantized table (up to the quantization error
+itself — see :func:`repro.kernels.pq_adc.ops.quantize_lut`).
 """
 
 from __future__ import annotations
@@ -21,7 +30,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["make_adc_sym_call", "make_adc_lookup_call"]
+__all__ = [
+    "make_adc_sym_call",
+    "make_adc_lookup_call",
+    "make_adc_sym_quant_call",
+    "make_adc_lookup_quant_call",
+]
 
 
 def _one_hot(codes_col: jnp.ndarray, K: int) -> jnp.ndarray:
@@ -60,6 +74,44 @@ def adc_lookup_kernel(c_ref, qlut_ref, o_ref, *, n_sub: int, K: int):
     o_ref[...] = jnp.sqrt(jnp.maximum(acc, 0.0))
 
 
+def adc_sym_quant_kernel(a_ref, b_ref, qlut_ref, sc_ref, zp_ref, o_ref, *,
+                         n_sub: int, K: int):
+    """Quantized-LUT symmetric ADC: ``qlut_ref (M, K, K)`` int8/bf16 with
+    per-subspace affine ``sc_ref``/``zp_ref (M, 1)`` f32 ->
+    ``o_ref (bA, bB)``.  The affine is applied *after* each subspace
+    contraction (the one-hot selection commutes with it)."""
+    a = a_ref[...]
+    b = b_ref[...]
+    acc = jnp.zeros((a.shape[0], b.shape[0]), jnp.float32)
+    for m in range(n_sub):  # static unroll: M is small
+        a_oh = _one_hot(a[:, m], K)
+        b_oh = _one_hot(b[:, m], K)
+        mid = jax.lax.dot_general(
+            a_oh, qlut_ref[m].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        sel = jax.lax.dot_general(
+            mid, b_oh, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc += sc_ref[m, 0] * sel + zp_ref[m, 0]
+    o_ref[...] = jnp.sqrt(jnp.maximum(acc, 0.0))
+
+
+def adc_lookup_quant_kernel(c_ref, qlut_ref, sc_ref, zp_ref, o_ref, *,
+                            n_sub: int, K: int):
+    """Quantized-LUT asymmetric scan: ``qlut_ref (M, K)`` int8/bf16 plus
+    ``sc_ref``/``zp_ref (M, 1)`` f32 -> ``o_ref (B, 1)``."""
+    c = c_ref[...]
+    acc = jnp.zeros((c.shape[0], 1), jnp.float32)
+    for m in range(n_sub):
+        oh = _one_hot(c[:, m], K)
+        sel = jax.lax.dot_general(
+            oh, qlut_ref[m].astype(jnp.float32)[:, None],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc += sc_ref[m, 0] * sel + zp_ref[m, 0]
+    o_ref[...] = jnp.sqrt(jnp.maximum(acc, 0.0))
+
+
 def make_adc_sym_call(nA: int, nB: int, n_sub: int, K: int,
                       block_a: int, block_b: int, interpret: bool):
     kernel = functools.partial(adc_sym_kernel, n_sub=n_sub, K=K)
@@ -86,6 +138,43 @@ def make_adc_lookup_call(n: int, n_sub: int, K: int, block: int,
         in_specs=[
             pl.BlockSpec((block, n_sub), lambda i: (i, 0)),
             pl.BlockSpec((n_sub, K), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        interpret=interpret,
+    )
+
+
+def make_adc_sym_quant_call(nA: int, nB: int, n_sub: int, K: int,
+                            block_a: int, block_b: int, interpret: bool):
+    kernel = functools.partial(adc_sym_quant_kernel, n_sub=n_sub, K=K)
+    return pl.pallas_call(
+        kernel,
+        grid=(nA // block_a, nB // block_b),
+        in_specs=[
+            pl.BlockSpec((block_a, n_sub), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, n_sub), lambda i, j: (j, 0)),
+            pl.BlockSpec((n_sub, K, K), lambda i, j: (0, 0, 0)),
+            pl.BlockSpec((n_sub, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((n_sub, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_a, block_b), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nA, nB), jnp.float32),
+        interpret=interpret,
+    )
+
+
+def make_adc_lookup_quant_call(n: int, n_sub: int, K: int, block: int,
+                               interpret: bool):
+    kernel = functools.partial(adc_lookup_quant_kernel, n_sub=n_sub, K=K)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block, n_sub), lambda i: (i, 0)),
+            pl.BlockSpec((n_sub, K), lambda i: (0, 0)),
+            pl.BlockSpec((n_sub, 1), lambda i: (0, 0)),
+            pl.BlockSpec((n_sub, 1), lambda i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((block, 1), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),

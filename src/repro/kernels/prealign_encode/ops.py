@@ -28,7 +28,8 @@ def _default_lane() -> int:
                                              "block", "interpret", "lane",
                                              "measure"))
 def prealign_encode(X: jnp.ndarray, centroids: jnp.ndarray, level: int,
-                    tail: int, window: Optional[int] = None, block: int = 8,
+                    tail: int, window: Optional[int] = None,
+                    block: Optional[int] = None,
                     interpret: Optional[bool] = None,
                     lane: Optional[int] = None,
                     measure: MeasureArg = None) -> jnp.ndarray:
@@ -37,6 +38,7 @@ def prealign_encode(X: jnp.ndarray, centroids: jnp.ndarray, level: int,
     ``centroids (M, K, S)`` with ``S = D // M + tail``; ``window`` is the
     Sakoe-Chiba band over the *subsequence* length (``None`` = unbanded).
     Codes match ``modwt.prealign`` + exact ``pq.encode``.
+    ``block=None`` consults the :mod:`repro.kernels.tune` table.
     """
     if interpret is None:
         interpret = default_interpret()
@@ -48,6 +50,14 @@ def prealign_encode(X: jnp.ndarray, centroids: jnp.ndarray, level: int,
     M, K, S = centroids.shape
     check_geometry(D, centroids, tail)
     w = effective_window(S, window)
+    if block is None:
+        from ...core import measures as _measures
+        from .. import tune
+        block = tune.tuned(
+            "prealign_encode", "block", length=S, window=window,
+            measure=_measures.resolve(measure).name,
+            backend="pallas_interpret" if interpret else "pallas",
+            default=8)
     block = min(block, max(1, N))
     Xp = pad_to(X, block, axis=0)
     lin = jnp.linspace(0.0, 1.0, S, dtype=jnp.float32)[None, :]

@@ -111,6 +111,15 @@ def reset(include_persistent: bool = False) -> None:
     0
     >>> obs.counter("doc_survivor_total", persistent=True).value
     1
-    >>> obs.reset(include_persistent=True)
+
+    ``include_persistent=True`` wipes everything — on the *process-wide*
+    registry that erases the dispatch routing evidence CI's gate reads,
+    so the full wipe is demonstrated on a private registry:
+
+    >>> reg = obs.Registry()
+    >>> reg.counter("doc_all_total", persistent=True).inc()
+    >>> reg.reset(include_persistent=True)
+    >>> reg.counter("doc_all_total", persistent=True).value
+    0
     """
     REGISTRY.reset(include_persistent=include_persistent)

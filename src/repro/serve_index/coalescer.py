@@ -174,7 +174,12 @@ class QueryCoalescer:
             obs.counter("serving_batches_total", persistent=True,
                         bucket=str(bucket)).inc()
             obs.counter("serving_queries_total", persistent=True).inc(n_real)
+            # bucket bounds derive from q_buckets, so the layout is part
+            # of the metric identity: servers with different configs in
+            # one process get distinct series instead of a get-or-create
+            # bucket-mismatch error in the coalescer thread
             obs.histogram("serving_batch_queries", persistent=True,
+                          q_buckets=",".join(map(str, self.cfg.q_buckets)),
                           buckets=tuple(float(b) for b in
                                         self.cfg.q_buckets)).record(n_real)
             now = time.monotonic()

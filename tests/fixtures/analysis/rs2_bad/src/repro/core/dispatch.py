@@ -18,3 +18,10 @@ def goodk(x, backend="pallas"):
 def orphan(x):
     _count("orphan_op", "jnp")  # RS203: not in EXPECTED_OPS
     return x
+
+
+def orphan_adaptive(x):
+    # RS203 twin: a mode-specific counter name that never made it into
+    # the gate's EXPECTED_OPS (the adaptive/quant-path failure shape)
+    _count("orphan_op_adaptive", "jnp")
+    return x

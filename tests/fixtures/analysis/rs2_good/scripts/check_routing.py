@@ -3,7 +3,7 @@
 import json
 import sys
 
-EXPECTED_OPS = {"goodk"}
+EXPECTED_OPS = {"goodk", "goodk_adaptive"}
 
 
 def ledger_from_snapshot(dump):

@@ -13,3 +13,10 @@ def goodk(x, backend="pallas"):
     if backend == "jnp":
         return run_goodk_ref(x)
     return run_goodk(x)
+
+
+def goodk_adaptive(x, backend="pallas"):
+    _count("goodk_adaptive", backend)  # mode twin, gated in EXPECTED_OPS
+    if backend == "jnp":
+        return run_goodk_ref(x)
+    return run_goodk(x)

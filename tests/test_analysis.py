@@ -52,8 +52,12 @@ def test_rs2_bad_tree_flags_each_rule():
     for rule in ("RS201", "RS202"):
         (f,) = _by_rule(r, rule)
         assert f.path.parts[-3:] == ("kernels", "badk", "ops.py")
-    (f203,) = _by_rule(r, "RS203")
-    assert "orphan_op" in f203.message
+    # both orphan _count sites flag independently: the base op and its
+    # mode twin (adaptive/quant-style counter names are separate ops)
+    f203 = _by_rule(r, "RS203")
+    assert len(f203) == 2
+    assert {m for f in f203 for m in ("orphan_op", "orphan_op_adaptive")
+            if f"{m}'" in f.message} == {"orphan_op", "orphan_op_adaptive"}
     (f204,) = _by_rule(r, "RS204")
     assert "run_badk" in f204.message
     (f205,) = _by_rule(r, "RS205")
